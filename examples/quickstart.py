@@ -1,0 +1,41 @@
+"""Quickstart: fault-tolerant TSQR in 30 lines.
+
+Factorizes a tall-skinny matrix distributed over 8 simulated ranks with the
+paper's Redundant TSQR, kills a rank mid-factorization, and shows that the
+survivors still hold the correct R.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FaultSpec, tsqr_sim
+from repro.core import ref
+
+
+def main():
+    rng = np.random.default_rng(0)
+    p, m_local, n = 8, 512, 32
+    blocks = ref.random_tall_skinny(rng, p, m_local, n)     # (P, m_local, n)
+    truth = ref.qr_r(blocks.reshape(-1, n).astype(np.float64))
+
+    # rank 5 dies at the entry of butterfly exchange 1
+    res = tsqr_sim(
+        jnp.asarray(blocks),
+        variant="redundant",
+        fault_spec=FaultSpec.of({5: 1}),
+    )
+    valid = np.asarray(res.valid)
+    print(f"ranks holding the final R after the failure: {np.nonzero(valid)[0]}")
+    for r in np.nonzero(valid)[0]:
+        err = np.abs(np.asarray(res.r)[r] - truth).max()
+        assert err < 1e-3, err
+    print(f"max |R - R_lapack| over survivors: "
+          f"{max(np.abs(np.asarray(res.r)[r] - truth).max() for r in np.nonzero(valid)[0]):.2e}")
+    print(f"messages={res.plan.message_count()} "
+          f"serial_rounds={res.plan.round_count()} "
+          f"(tree baseline: {p-1} messages, same rounds)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Checkpoint manager: atomic, async, step-tagged, keep-last-k.
+
+Trees are flattened to ``path → array`` and written as ``.npz`` plus a JSON
+manifest; directories are renamed into place only when complete, so a crash
+mid-write never corrupts the restore point.  ``save_async`` snapshots to
+host memory synchronously (device_get) and writes on a background thread —
+the training loop never blocks on the filesystem.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager", "flatten_tree", "unflatten_like"]
+
+
+def flatten_tree(tree) -> dict[str, np.ndarray]:
+    out = {}
+
+    def walk(t, path):
+        if isinstance(t, dict):
+            for k, v in t.items():
+                walk(v, f"{path}/{k}" if path else str(k))
+        elif isinstance(t, (tuple, list)):
+            for i, v in enumerate(t):
+                walk(v, f"{path}/{i}")
+        elif t is None:
+            out[f"{path}#none"] = np.zeros((0,), np.int8)
+        else:
+            out[path] = np.asarray(t)
+
+    walk(tree, "")
+    return out
+
+
+def unflatten_like(template, flat: dict[str, np.ndarray]):
+    def walk(t, path):
+        if isinstance(t, dict):
+            return {k: walk(v, f"{path}/{k}" if path else str(k)) for k, v in t.items()}
+        if isinstance(t, (tuple, list)):
+            return type(t)(walk(v, f"{path}/{i}") for i, v in enumerate(t))
+        if t is None:
+            assert f"{path}#none" in flat, path
+            return None
+        arr = flat[path]
+        assert arr.shape == tuple(t.shape), (path, arr.shape, t.shape)
+        return arr
+
+    return walk(template, "")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+
+    # ---------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, "MANIFEST.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ---------------------------------------------------------------
+    def _write(self, step: int, flat: dict[str, np.ndarray], meta: dict):
+        tmp = self._step_dir(step) + ".tmp"
+        final = self._step_dir(step)
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "state.npz"), **flat)
+        meta = dict(meta, step=step, n_arrays=len(flat))
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(meta, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def save(self, step: int, tree, meta: dict | None = None, *, block: bool = True):
+        host = jax.tree.map(
+            lambda x: np.asarray(jax.device_get(x)) if x is not None else None,
+            tree,
+            is_leaf=lambda x: x is None,
+        )
+        flat = flatten_tree(host)
+        if block:
+            with self._lock:
+                self._write(step, flat, meta or {})
+            return None
+        self.wait()
+
+        def go():
+            with self._lock:
+                self._write(step, flat, meta or {})
+
+        self._thread = threading.Thread(target=go, daemon=True)
+        self._thread.start()
+        return self._thread
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, template, step: int | None = None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        with np.load(os.path.join(self._step_dir(step), "state.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        with open(os.path.join(self._step_dir(step), "MANIFEST.json")) as f:
+            meta = json.load(f)
+        return unflatten_like(template, flat), meta

@@ -1,0 +1,76 @@
+"""Diskless (in-memory buddy) checkpointing — the paper's §II lineage.
+
+The paper motivates exploiting redundancy by pointing at diskless
+checkpointing [Plank et al.] where "the memory of other processes" stores
+each process's state.  We apply the *same replica-placement math as the
+TSQR butterfly*: the buddy of rank r at replication level s is r XOR 2^s,
+so after s rounds each shard exists ``2^s`` times and the scheme tolerates
+``2^s − 1`` simultaneous rank losses — the identical bound as the
+factorization (DESIGN.md §3.3).
+
+This host-side store simulates the per-rank memories: ``push(level)``
+replicates every rank's shard to its level-s buddies; ``recover(rank)``
+walks the replica set for the first live copy — ``findReplica`` at the
+checkpoint layer.
+"""
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+__all__ = ["BuddyStore"]
+
+
+class BuddyStore:
+    def __init__(self, n_ranks: int):
+        if n_ranks & (n_ranks - 1):
+            raise ValueError("buddy store needs a power-of-two rank count")
+        self.n_ranks = n_ranks
+        # holdings[r] = {owner_rank: (step, state)} — what r keeps in memory
+        self.holdings: list[dict[int, tuple[int, object]]] = [
+            {} for _ in range(n_ranks)
+        ]
+        self.alive = np.ones(n_ranks, dtype=bool)
+
+    # ------------------------------------------------------------------
+    def checkpoint(self, step: int, shards: dict[int, object], levels: int = 1):
+        """Each live rank stores its own shard and pushes copies to its
+        XOR-buddies for ``levels`` rounds (2^levels copies total)."""
+        for r, shard in shards.items():
+            if not self.alive[r]:
+                continue
+            snap = copy.deepcopy(shard)
+            self.holdings[r][r] = (step, snap)
+        for s in range(levels):
+            for r in range(self.n_ranks):
+                if not self.alive[r]:
+                    continue
+                b = r ^ (1 << s)
+                if not self.alive[b]:
+                    continue
+                for owner, item in list(self.holdings[r].items()):
+                    self.holdings[b].setdefault(owner, item)
+
+    def fail(self, rank: int):
+        self.alive[rank] = False
+        self.holdings[rank] = {}
+
+    def respawn(self, rank: int):
+        self.alive[rank] = True
+
+    def replicas_of(self, rank: int) -> list[int]:
+        return [
+            r for r in range(self.n_ranks)
+            if self.alive[r] and rank in self.holdings[r]
+        ]
+
+    def recover(self, rank: int):
+        """findReplica at the checkpoint layer: first live copy wins."""
+        for r in self.replicas_of(rank):
+            step, state = self.holdings[r][rank]
+            return step, copy.deepcopy(state)
+        raise KeyError(f"no live replica of rank {rank}'s shard")
+
+    def copies(self, rank: int) -> int:
+        return len(self.replicas_of(rank))

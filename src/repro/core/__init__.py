@@ -1,0 +1,38 @@
+"""Core library: fault-tolerant communication-avoiding TSQR (Coti 2015).
+
+The paper's contribution as a composable JAX module:
+
+  * :mod:`repro.core.tsqr`   — the four algorithm variants (tree / redundant /
+    replace / self-healing) on sim and shard_map backends;
+  * :mod:`repro.core.plan`   — host-side routing + robustness oracle;
+  * :mod:`repro.core.faults` — the fail-stop fault model and the paper's
+    tolerance accounting (2^s − 1);
+  * :mod:`repro.core.comm`   — the two communication backends;
+  * :mod:`repro.core.ref`    — numpy ground truth.
+"""
+from .comm import ShardMapComm, SimComm
+from .faults import NEVER, FaultSpec, tolerance, total_tolerance, within_tolerance
+from .plan import Plan, Step, make_plan
+from .tsqr import (
+    TSQRResult,
+    butterfly_allreduce_sum,
+    tsqr_shard_map,
+    tsqr_sim,
+)
+
+__all__ = [
+    "NEVER",
+    "FaultSpec",
+    "Plan",
+    "Step",
+    "ShardMapComm",
+    "SimComm",
+    "TSQRResult",
+    "butterfly_allreduce_sum",
+    "make_plan",
+    "tolerance",
+    "total_tolerance",
+    "tsqr_shard_map",
+    "tsqr_sim",
+    "within_tolerance",
+]

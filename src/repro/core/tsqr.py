@@ -1,0 +1,336 @@
+"""Fault-tolerant, communication-avoiding TSQR (Coti 2015) in JAX.
+
+The four variants of the paper are driven by a host-computed
+:class:`~repro.core.plan.Plan` and execute identically on the
+:class:`~repro.core.comm.SimComm` (single device, leading (P,) axis) and
+:class:`~repro.core.comm.ShardMapComm` (SPMD, ``lax.ppermute``) backends:
+
+  * ``tree``        — Alg. 1, the baseline reduction tree (zero redundancy);
+  * ``redundant``   — Alg. 2, butterfly *exchange*: both buddies combine, so
+                      every intermediate R̃ exists in ``2^s`` copies;
+  * ``replace``     — Alg. 3, identical fault-free, reroutes to a replica of
+                      a dead buddy;
+  * ``selfhealing`` — Alg. 4–6, additionally respawns dead ranks from a
+                      replica at every level.
+
+Validity bits ride along with every payload: a dead rank's contribution is
+zero-filled (XLA collective-permute semantics) and flagged invalid, which is
+the step-boundary analogue of ULFM's error returns.  The host plan predicts
+the same validity; tests assert the two agree bit-for-bit.
+
+The combine is ``QR([R_lo; R_hi])`` ordered by the level bit of the *block*
+index so every member of a block computes an identical R (making the
+butterfly a true all-reduce — every survivor ends with the same final R,
+which the paper's semantics require and which lets Q be formed locally as
+``A R⁻¹`` without a backward tree pass).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .comm import Comm, ShardMapComm, SimComm
+from .faults import NEVER, FaultSpec
+from .plan import Plan, make_plan
+
+__all__ = [
+    "TSQRResult",
+    "tsqr_sim",
+    "tsqr_shard_map",
+    "butterfly_allreduce_sum",
+    "local_qr_fns",
+]
+
+
+# ---------------------------------------------------------------------------
+# Local QR building blocks
+# ---------------------------------------------------------------------------
+
+def _posdiag(r):
+    """Normalize an upper-triangular factor to a non-negative diagonal.
+
+    Makes the R factor unique, so every rank (and the numpy oracle) computes
+    bit-comparable results.
+    """
+    d = jnp.diagonal(r, axis1=-2, axis2=-1)
+    s = jnp.where(d < 0, -1.0, 1.0).astype(r.dtype)
+    return r * s[..., :, None]
+
+
+def qr_r_jnp(a):
+    """Householder QR, R factor only (LAPACK on CPU, QR-decomp HLO on TPU)."""
+    return _posdiag(jnp.linalg.qr(a, mode="r"))
+
+
+def qr_r_cqr2(a):
+    """CholeskyQR2 R factor — the MXU-native local QR (see kernels/)."""
+    from repro.kernels import ops as kops
+
+    return kops.cholesky_qr2(a)[1]
+
+
+def qr_r_cqr2_pallas(a):
+    from repro.kernels import ops as kops
+
+    return kops.cholesky_qr2(a, use_pallas=True)[1]
+
+
+local_qr_fns: dict[str, Callable] = {
+    "jnp": qr_r_jnp,
+    "cqr2": qr_r_cqr2,
+    "cqr2_pallas": qr_r_cqr2_pallas,
+}
+
+
+# ---------------------------------------------------------------------------
+# Result container
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TSQRResult:
+    """Per-rank outcome of a fault-tolerant TSQR.
+
+    ``r``      — (P, n, n) in sim / per-device (n, n) under shard_map.
+    ``valid``  — who holds a correct final R (the paper's semantics).
+    ``q``      — optional per-rank (m_local, n) orthonormal factor.
+    ``plan``   — the communication plan that was executed (accounting).
+    """
+
+    r: jax.Array
+    valid: jax.Array
+    q: jax.Array | None
+    plan: Plan
+
+
+# ---------------------------------------------------------------------------
+# The single-source butterfly/tree executor
+# ---------------------------------------------------------------------------
+
+def _execute(
+    a_blocks,
+    comm: Comm,
+    plan: Plan,
+    local_qr: Callable,
+):
+    """Run the plan. Returns (R, valid, d_eff) per rank."""
+    r = local_qr(a_blocks)
+    nan = jnp.asarray(jnp.nan, dtype=r.dtype)
+    d = comm.take(plan.death)
+    my = comm.ranks()
+    valid = d > 0
+    for step in plan.steps:
+        s = step.level
+        can = valid & (d > s)
+        # ---- exchange (possibly several unique-source rounds) -------------
+        recv_r = jnp.zeros_like(r)
+        recv_v = jnp.zeros_like(can)
+        for rnd in step.perm_rounds:
+            rr, rv = comm.exchange((r, can), rnd)
+            recv_r = recv_r + rr          # each rank receives in ≤1 round
+            recv_v = recv_v | rv
+        # ---- combine: order by this level's block bit ----------------------
+        mine_first = ((my >> s) & 1) == 0
+        lo = comm.bwhere(mine_first, r, recv_r)
+        hi = comm.bwhere(mine_first, recv_r, r)
+        stacked = jnp.concatenate([lo, hi], axis=-2)
+        new_r = _posdiag(jnp.linalg.qr(stacked, mode="r"))
+        valid = can & recv_v
+        r = comm.bwhere(valid, new_r, jnp.full_like(new_r, nan))
+        # ---- Self-Healing: respawn dead ranks from a replica ---------------
+        if step.restore_rounds:
+            for rnd in step.restore_rounds:
+                rr, rv = comm.exchange((r, valid), rnd)
+                got = rv & ~valid
+                r = comm.bwhere(got, rr, r)
+                valid = valid | got
+            respawned = comm.take(step.respawned)
+            d = jnp.where(respawned, jnp.asarray(NEVER, d.dtype), d)
+    return r, valid
+
+
+def _compute_q(a_blocks, r, comm: Comm, reorth: int):
+    """Q = A·R⁻¹ locally (every survivor holds the same final R), followed by
+    ``reorth`` CholeskyQR-style re-orthonormalization passes whose Gram
+    reduction reuses the fault-tolerant butterfly (sum combiner).
+
+    Requires an all-valid plan (fault-free, or self-healing within
+    tolerance): Q spans *all* row-blocks, so a permanently-lost block makes
+    the global Q undefined.  Entry points enforce this on the host plan.
+    """
+    import jax.scipy.linalg as jsl
+
+    def solve_r(q_in, rr):
+        # q = a @ rr^{-1}  ==  solve rr^T y = a^T  (rr upper → rr^T lower)
+        y = jsl.solve_triangular(
+            jnp.swapaxes(rr, -1, -2), jnp.swapaxes(q_in, -1, -2), lower=True
+        )
+        return jnp.swapaxes(y, -1, -2)
+
+    q = solve_r(a_blocks, r)
+    for _ in range(reorth):
+        g = jnp.swapaxes(q, -1, -2) @ q
+        g_sum = butterfly_allreduce_sum(g, comm)
+        r2 = _posdiag(jnp.swapaxes(jnp.linalg.cholesky(g_sum), -1, -2))
+        q = solve_r(q, r2)
+        r = _posdiag(r2 @ r)
+    return q, r
+
+
+def butterfly_allreduce_sum(x, comm: Comm):
+    """Recursive-doubling all-reduce over the same butterfly as TSQR.
+
+    On the fault-free path this is exactly the redundant-TSQR communication
+    pattern with a ``+`` combiner — the building block the optimizer layer
+    (PowerSGD Gram reductions) shares with the factorization.
+    """
+    p = comm.n_ranks
+    s_max = p.bit_length() - 1
+    for s in range(s_max):
+        perm = [(i, i ^ (1 << s)) for i in range(p)]
+        x = x + comm.exchange(x, perm)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def tsqr_sim(
+    a_blocks,
+    *,
+    variant: str = "redundant",
+    fault_spec: FaultSpec | None = None,
+    compute_q: bool = False,
+    reorth: int = 1,
+    local_qr: str | Callable = "jnp",
+) -> TSQRResult:
+    """Single-device simulation: ``a_blocks`` is (P, m_local, n).
+
+    This is the backend the test-suite and the hypothesis robustness sweeps
+    drive; the algorithm body is shared with :func:`tsqr_shard_map`.
+    """
+    p = a_blocks.shape[0]
+    plan = make_plan(variant, p, fault_spec)
+    if compute_q and not plan.final_valid.all():
+        raise ValueError(
+            "compute_q requires an all-valid plan (fault-free, or "
+            "self-healing within tolerance); got final_valid="
+            f"{plan.final_valid}"
+        )
+    comm = SimComm(p)
+    fn = local_qr_fns[local_qr] if isinstance(local_qr, str) else local_qr
+    r, valid = _execute(a_blocks, comm, plan, fn)
+    q = None
+    if compute_q:
+        q, r = _compute_q(a_blocks, r, comm, reorth)
+    return TSQRResult(r=r, valid=valid, q=q, plan=plan)
+
+
+def tsqr_gram_shard_map(
+    a_global,
+    *,
+    mesh,
+    axis: str,
+    reorth: int = 1,
+    jit: bool = True,
+):
+    """Beyond-paper optimized TSQR: the **Gram butterfly** (EXPERIMENTS.md
+    §Perf, cell C).
+
+    The paper's combine is ``QR([R̃ᵢ; R̃ⱼ])`` at every butterfly level —
+    log₂(P) Householder factorizations of 2n×n on the critical path, each
+    sequential and VPU-bound on TPU.  This variant keeps the *same
+    butterfly* (same exchanges, same 2^s-copy redundancy, same fault
+    semantics — the combiner is ``+``) but carries Gram matrices:
+    ``G = Σ AᵢᵀAᵢ``, one Cholesky at the end, and a CholeskyQR2 polish for
+    Householder-grade orthogonality.  Per level the combine is an n×n add
+    instead of an O(n³) QR; the local work is one MXU Gram matmul instead
+    of a Householder panel.  Wire bytes are identical (n² per exchange —
+    n(n+1)/2 with symmetric packing, left on the table).
+
+    Numerics: κ(A)² enters the Gram, so the polish round is mandatory;
+    certified for κ(A) ≲ 1/√ε like CQR2.
+    """
+    p = mesh.shape[axis]
+    comm = ShardMapComm(p, axis)
+
+    def body(a_blk):
+        a32 = a_blk.astype(jnp.float32)
+        g = jnp.einsum("mi,mj->ij", a32, a32)
+        g = butterfly_allreduce_sum(g, comm)
+        r = _posdiag(jnp.swapaxes(jnp.linalg.cholesky(g), -1, -2))
+        q, r = _compute_q(a_blk, r, comm, reorth)
+        return r[None], q
+
+    shard = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=P(axis),
+        out_specs=(P(axis), P(axis)),
+        check_vma=False,
+    )
+    fun = jax.jit(shard) if jit else shard
+    r, q = fun(a_global)
+    return TSQRResult(r=r, valid=jnp.ones((p,), bool), q=q,
+                      plan=make_plan("redundant", p))
+
+
+def tsqr_shard_map(
+    a_global,
+    *,
+    mesh,
+    axis: str,
+    variant: str = "redundant",
+    fault_spec: FaultSpec | None = None,
+    compute_q: bool = False,
+    reorth: int = 1,
+    local_qr: str | Callable = "jnp",
+    jit: bool = True,
+):
+    """Production path: A (m, n) row-sharded over ``mesh`` axis ``axis``.
+
+    Returns ``(r, valid, q)`` with r (P, n, n) — one (replicated-if-valid)
+    copy per rank — valid (P,) and q (m, n) row-sharded (or None).
+
+    The permutation plan is host-computed from ``fault_spec``; on a real
+    fleet the runtime re-invokes this with a fresh plan after each health
+    change (step-boundary replanning, DESIGN.md §2).
+    """
+    p = mesh.shape[axis]
+    plan = make_plan(variant, p, fault_spec)
+    if compute_q and not plan.final_valid.all():
+        raise ValueError(
+            "compute_q requires an all-valid plan (fault-free, or "
+            "self-healing within tolerance)"
+        )
+    comm = ShardMapComm(p, axis)
+    fn = local_qr_fns[local_qr] if isinstance(local_qr, str) else local_qr
+
+    def body(a_blk):
+        a = a_blk  # (m_local, n)
+        r, valid = _execute(a, comm, plan, fn)
+        q = None
+        if compute_q:
+            q, r = _compute_q(a, r, comm, reorth)
+        out_q = q if compute_q else jnp.zeros((0, a.shape[-1]), a.dtype)
+        return r[None], valid[None], out_q
+
+    shard = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=P(axis),
+        out_specs=(P(axis), P(axis), P(axis)),
+        check_vma=False,
+    )
+    fun = jax.jit(shard) if jit else shard
+    r, valid, q = fun(a_global)
+    return TSQRResult(
+        r=r, valid=valid, q=(q if compute_q else None), plan=plan
+    )

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: local tall-skinny QR.
+
+The paper's local QR (LAPACK Householder in the MPI original) is adapted to
+the MXU as CholeskyQR2 (DESIGN.md §2, adaptation #2).  Three kernels:
+
+  * :mod:`repro.kernels.gram`         — blocked G = AᵀA, VMEM accumulator;
+  * :mod:`repro.kernels.apply_right`  — panel-streamed Q = A·R⁻¹ application;
+  * :mod:`repro.kernels.combine_gram` — fused R̃ᵀR̃ + R̃ᵀR̃ combine for the
+    Gram-butterfly variant (§Perf).
+
+``ops.py`` holds the jit'd public wrappers (with pure-jnp fallbacks and
+batching); ``ref.py`` the oracles the tests compare against.  Kernels are
+validated in ``interpret=True`` mode on CPU; ``interpret=False`` targets the
+Mosaic TPU compiler.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

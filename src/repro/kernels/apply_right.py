@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: panel-streamed right-multiply Q = A @ W.
+
+The second hot-spot of CholeskyQR2: forming Q = A·R⁻¹ once the small
+triangular factor is inverted.  Same streaming structure as the Gram
+kernel — A row-panels stream HBM→VMEM, the (n, k) right operand is resident
+in VMEM for the whole sweep, and each output panel is written exactly once
+(index_map i → (i, 0), no revisits).  Accumulation is f32 on the MXU;
+the result is cast back to A's dtype on the way out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["apply_right"]
+
+_LANE = 128
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def _apply_kernel(a_ref, w_ref, o_ref):
+    o_ref[...] = lax.dot_general(
+        a_ref[...],
+        w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def apply_right(a, w, *, block_rows: int = 1024, interpret: bool = True):
+    """A (m, n) @ W (n, k) → (m, k) in A's dtype, f32 accumulation."""
+    m, n = a.shape
+    n2, k = w.shape
+    assert n == n2, (a.shape, w.shape)
+    n_pad = _ceil_to(max(n, 1), _LANE)
+    k_pad = _ceil_to(max(k, 1), _LANE)
+    block_rows = max(_LANE, min(block_rows, _ceil_to(m, _LANE)))
+    m_pad = _ceil_to(m, block_rows)
+    a_pad = jnp.pad(a, ((0, m_pad - m), (0, n_pad - n)))
+    w_pad = jnp.pad(w, ((0, n_pad - n), (0, k_pad - k)))
+    out = pl.pallas_call(
+        _apply_kernel,
+        grid=(m_pad // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((n_pad, k_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, k_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, k_pad), a.dtype),
+        interpret=interpret,
+    )(a_pad, w_pad)
+    return out[:m, :k]

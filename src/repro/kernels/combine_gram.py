@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused Gram-combine of two R̃ factors.
+
+Used by the beyond-paper "Gram-butterfly" TSQR variant (EXPERIMENTS.md
+§Perf): instead of re-factorizing the stacked ``[R̃₁; R̃₂]`` (a 2n×n
+Householder QR, sequential and VPU-bound on TPU), the combine keeps Gram
+form ``G = R̃₁ᵀR̃₁ + R̃₂ᵀR̃₂`` — two n×n MXU matmuls fused in one VMEM-resident
+kernel, deferring the single Cholesky to the end of the butterfly.
+
+Single-block kernel: both operands and the output live entirely in VMEM
+(n ≤ 512 in every TSQR use; 3·n²·4B ≤ 3 MiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["combine_gram"]
+
+_LANE = 128
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def _combine_kernel(r1_ref, r2_ref, o_ref):
+    r1 = r1_ref[...]
+    r2 = r2_ref[...]
+    dims = (((0,), (0,)), ((), ()))
+    o_ref[...] = lax.dot_general(
+        r1, r1, dims, preferred_element_type=jnp.float32
+    ) + lax.dot_general(r2, r2, dims, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def combine_gram(r1, r2, *, interpret: bool = True):
+    """G = R1ᵀR1 + R2ᵀR2, float32.  r1, r2: (n, n) → (n, n)."""
+    n = r1.shape[-1]
+    assert r1.shape == r2.shape == (n, n)
+    n_pad = _ceil_to(max(n, 1), _LANE)
+    pad = ((0, n_pad - n), (0, n_pad - n))
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(jnp.pad(r1, pad), jnp.pad(r2, pad))
+    return out[:n, :n]

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: blocked Gram matrix G = AᵀA for tall-skinny A.
+
+This is the FLOP hot-spot of the TPU-native local QR (CholeskyQR2,
+DESIGN.md §2): for A (m, n) with m ≫ n, the Gram product is ~m·n² MACs while
+everything downstream (Cholesky, small inverse) is O(n³).  The kernel streams
+row-panels of A HBM→VMEM and accumulates the (n, n) Gram block in VMEM across
+the sequential TPU grid, so A is read exactly once and the accumulator never
+leaves VMEM.
+
+Tiling:
+  * grid = (m_pad / block_rows,) — sequential row sweep ("arbitrary"
+    dimension semantics: the accumulation is order-independent).
+  * A panel  BlockSpec (block_rows, n_pad), index_map i → (i, 0).
+  * G output BlockSpec (n_pad, n_pad), index_map i → (0, 0): a constant
+    output block revisited by every grid step = the VMEM accumulator.
+  * n is zero-padded to the 128-lane boundary and m to the row-block size;
+    zero rows/columns contribute nothing to AᵀA, so padding is exact, and
+    the MXU sees native (8·k × 128·j) tiles.
+
+VMEM budget at defaults (block_rows=1024, n≤512, bf16 in / f32 acc):
+1 MiB panel + 1 MiB accumulator — comfortably inside the ~16 MiB/core VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["gram", "DEFAULT_BLOCK_ROWS"]
+
+DEFAULT_BLOCK_ROWS = 1024
+_LANE = 128
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def _gram_kernel(a_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    o_ref[...] += lax.dot_general(
+        a, a, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def gram(a, *, block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+    """G = AᵀA, float32.  a: (m, n); returns (n, n).
+
+    ``interpret=True`` (the default in this CPU container) runs the kernel
+    body in the Pallas interpreter; on a TPU runtime pass ``interpret=False``
+    for the compiled Mosaic kernel.
+    """
+    m, n = a.shape
+    n_pad = _ceil_to(max(n, 1), _LANE)
+    block_rows = max(_LANE, min(block_rows, _ceil_to(m, _LANE)))
+    m_pad = _ceil_to(m, block_rows)
+    a_pad = jnp.pad(a, ((0, m_pad - m), (0, n_pad - n)))
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=(m_pad // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, n_pad), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(a_pad)
+    return out[:n, :n]

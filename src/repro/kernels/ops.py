@@ -1,0 +1,101 @@
+"""Jit'd public wrappers over the Pallas kernels (with pure-jnp fallbacks).
+
+``cholesky_qr2`` is the TPU-native local QR used by the TSQR variants
+(DESIGN.md §2, adaptation #2): Householder panels are sequential and
+VPU-bound, while CQR2 is two rounds of (Gram matmul → n×n Cholesky →
+triangular inverse → panel matmul) — all MXU-shaped.  Numerically CQR2
+delivers Householder-grade orthogonality for κ(A) ≲ 1/√ε per round.
+
+Every wrapper accepts arbitrary leading batch dimensions (the SimComm
+backend carries a (P,) rank axis); Pallas calls are vmapped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from . import apply_right as _apply_mod
+from . import combine_gram as _combine_mod
+from . import gram as _gram_mod
+from . import ref as _ref
+
+__all__ = [
+    "gram",
+    "apply_right",
+    "combine_gram",
+    "cholesky_qr",
+    "cholesky_qr2",
+    "tri_inv",
+]
+
+
+def _batched(fn, n_array_args):
+    """Apply ``fn`` over arbitrary shared leading batch dims."""
+
+    def wrapped(*args, **kwargs):
+        arrays = args[:n_array_args]
+        extra = arrays[0].ndim - 2
+        if extra == 0:
+            return fn(*args, **kwargs)
+        f = functools.partial(fn, **kwargs)
+        for _ in range(extra):
+            f = jax.vmap(f)
+        return f(*arrays)
+
+    return wrapped
+
+
+# -- kernel entry points (batched, pallas/jnp switchable) -------------------
+
+def gram(a, *, use_pallas: bool = False, interpret: bool = True):
+    if not use_pallas:
+        return _ref.gram(a)
+    return _batched(_gram_mod.gram, 1)(a, interpret=interpret)
+
+
+def apply_right(a, w, *, use_pallas: bool = False, interpret: bool = True):
+    if not use_pallas:
+        return _ref.apply_right(a, w)
+    return _batched(_apply_mod.apply_right, 2)(a, w, interpret=interpret)
+
+
+def combine_gram(r1, r2, *, use_pallas: bool = False, interpret: bool = True):
+    if not use_pallas:
+        return _ref.combine_gram(r1, r2)
+    return _batched(_combine_mod.combine_gram, 2)(r1, r2, interpret=interpret)
+
+
+# -- composed ops -----------------------------------------------------------
+
+def tri_inv(r):
+    """Inverse of an upper-triangular (…, n, n) factor."""
+    eye = jnp.broadcast_to(
+        jnp.eye(r.shape[-1], dtype=r.dtype), r.shape
+    )
+    return jsl.solve_triangular(r, eye, lower=False)
+
+
+def _posdiag(r):
+    d = jnp.diagonal(r, axis1=-2, axis2=-1)
+    s = jnp.where(d < 0, -1.0, 1.0).astype(r.dtype)
+    return r * s[..., :, None]
+
+
+def cholesky_qr(a, *, use_pallas: bool = False, interpret: bool = True):
+    """One CholeskyQR round.  a: (…, m, n) → (Q (…, m, n), R (…, n, n) f32)."""
+    g = gram(a, use_pallas=use_pallas, interpret=interpret)
+    r = jnp.swapaxes(jnp.linalg.cholesky(g), -1, -2)  # upper, positive diag
+    q = apply_right(
+        a, tri_inv(r).astype(a.dtype), use_pallas=use_pallas, interpret=interpret
+    )
+    return q, r
+
+
+def cholesky_qr2(a, *, use_pallas: bool = False, interpret: bool = True):
+    """CholeskyQR2: Householder-grade orthogonality, MXU-native FLOPs."""
+    q1, r1 = cholesky_qr(a, use_pallas=use_pallas, interpret=interpret)
+    q, r2 = cholesky_qr(q1, use_pallas=use_pallas, interpret=interpret)
+    return q, _posdiag(r2 @ r1)

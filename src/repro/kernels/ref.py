@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against the
+function of the same name here.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gram", "apply_right", "combine_gram", "cholesky_qr", "cholesky_qr2"]
+
+
+def gram(a: jnp.ndarray) -> jnp.ndarray:
+    """G = AᵀA accumulated in float32.  a: (..., m, n) → (..., n, n) f32."""
+    a32 = a.astype(jnp.float32)
+    return jnp.einsum("...mi,...mj->...ij", a32, a32)
+
+
+def apply_right(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """A @ W with float32 accumulation, result in A's dtype.  w: (..., n, k)."""
+    out = a.astype(jnp.float32) @ w.astype(jnp.float32)
+    return out.astype(a.dtype)
+
+
+def combine_gram(r1: jnp.ndarray, r2: jnp.ndarray) -> jnp.ndarray:
+    """G = R1ᵀR1 + R2ᵀR2 in float32 — the Gram-combine of two R̃ factors."""
+    return gram(r1) + gram(r2)
+
+
+def _posdiag(r):
+    d = jnp.diagonal(r, axis1=-2, axis2=-1)
+    s = jnp.where(d < 0, -1.0, 1.0).astype(r.dtype)
+    return r * s[..., :, None]
+
+
+def cholesky_qr(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One CholeskyQR round: Q = A·R⁻¹ with R = chol(AᵀA)ᵀ.
+
+    Certified only for κ(A) ≲ 1/√ε; use :func:`cholesky_qr2` in general.
+    """
+    import jax.scipy.linalg as jsl
+
+    g = gram(a)
+    l = jnp.linalg.cholesky(g)
+    r = l.T  # upper, positive diagonal by construction
+    rinv = jsl.solve_triangular(r, jnp.eye(r.shape[-1], dtype=r.dtype), lower=False)
+    q = apply_right(a, rinv)
+    return q, r
+
+
+def cholesky_qr2(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """CholeskyQR2 — two rounds; the TPU-native tall-skinny QR."""
+    q1, r1 = cholesky_qr(a)
+    q, r2 = cholesky_qr(q1)
+    return q, _posdiag(r2 @ r1)

@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell
+the jitted step (train_step / prefill_step / serve_step) is lowered with
+ShapeDtypeStruct stand-ins (no allocation), compiled for the production
+mesh, and its ``memory_analysis()`` / ``cost_analysis()`` plus the
+collective schedule parsed from the partitioned HLO are recorded to JSON —
+the raw inputs of EXPERIMENTS.md §Dry-run and §Roofline.
+
+The two lines above MUST precede every other import: jax locks the device
+count at first initialization, and only the dry-run wants 512 placeholder
+host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tsqr   # paper's cells
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def _bytes_of_shape_text(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-collective-type result bytes (per-device, SPMD module) + counts.
+
+    ``-done`` ops are skipped so async pairs aren't double counted.
+    """
+    out = {k: {"bytes": 0, "count": 0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        shape_text, kind = m.group(1), m.group(2)
+        out[kind]["bytes"] += _bytes_of_shape_text(shape_text)
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items() if k in COLLECTIVES)
+    out["total_count"] = sum(v["count"] for k, v in out.items() if k in COLLECTIVES)
+    return out
+
+
+def memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend without memory analysis
+        return {"error": str(e)}
+    out = {}
+    for field in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    out["total_hbm_bytes"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0)
+    )
+    return out
+
+
+def cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" not in k)}
+
+
+# ---------------------------------------------------------------------------
+# Accounting probes: XLA's HloCostAnalysis counts while-loop (scan) bodies
+# ONCE, so exact per-step FLOP/byte/collective totals come from *unrolled*
+# reduced-depth builds, extrapolated linearly in layer count (exact: layers
+# are structurally identical).  Weights w give  target = Σ w_i · probe_i.
+# ---------------------------------------------------------------------------
+
+def _probe_plan(cfg):
+    if cfg.family in ("dense", "moe", "vlm"):
+        period = 2 if cfg.local_global else 1
+        n = cfg.n_layers // period
+        return (
+            [{"n_layers": period}, {"n_layers": 2 * period}],
+            [2.0 - n, n - 1.0],
+        )
+    if cfg.family == "ssm":
+        n = cfg.n_layers
+        return [{"n_layers": 1}, {"n_layers": 2}], [2.0 - n, n - 1.0]
+    if cfg.family == "encdec":
+        n = cfg.n_layers               # enc and dec depths move together
+        return (
+            [{"n_layers": 1, "n_enc_layers": 1},
+             {"n_layers": 2, "n_enc_layers": 2}],
+            [2.0 - n, n - 1.0],
+        )
+    if cfg.family == "hybrid":
+        # cost(u units, t tail) affine; target (13, 3) from (1,0),(2,0),(1,3)
+        u = cfg.n_layers // cfg.attn_every
+        t = cfg.n_layers - u * cfg.attn_every
+        e = cfg.attn_every
+        w1 = 1.0 - (u - 1.0) - (t / 3.0)
+        return (
+            [{"n_layers": e}, {"n_layers": 2 * e}, {"n_layers": e + 3}],
+            [w1, u - 1.0, t / 3.0],
+        )
+    raise ValueError(cfg.family)
+
+
+def _extract_scalars(rec: dict) -> dict:
+    out = {}
+    for k in ("flops", "transcendentals", "bytes accessed"):
+        if k in rec["cost"]:
+            out[f"cost.{k}"] = rec["cost"][k]
+    for c in COLLECTIVES:
+        out[f"coll.{c}.bytes"] = rec["collectives"][c]["bytes"]
+        out[f"coll.{c}.count"] = rec["collectives"][c]["count"]
+    out["coll.total_bytes"] = rec["collectives"]["total_bytes"]
+    out["coll.total_count"] = rec["collectives"]["total_count"]
+    return out
+
+
+def _lower_cell(cfg, shape, mesh, *, accounting: bool) -> dict:
+    from repro.launch.shardings import CellPlan
+    from repro.models.sharding import mesh_context
+
+    plan = CellPlan(cfg, shape, mesh, accounting=accounting)
+    fn, args, ins, outs = plan.lowerable()
+    # donate params/opt (train) and cache (decode): new state aliases old —
+    # without this the dry-run double-counts every weight & Adam buffer
+    donate = (0, 1) if shape.kind == "train" else ((1,) if shape.kind == "decode" else ())
+    t0 = time.time()
+    with mesh_context(mesh):
+        jitted = jax.jit(fn, in_shardings=plan.named(ins),
+                         out_shardings=plan.named(outs) if outs is not None else None,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    hlo = compiled.as_text()
+    return {
+        "gather_axis": plan.gather_axis,
+        "microbatches": plan.microbatches,
+        "seq_parallel": plan.cfg.seq_parallel,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": memory_dict(compiled),
+        "cost": cost_dict(compiled),
+        "collectives": parse_collectives(hlo),
+        "hlo_bytes": len(hlo),
+    }
+
+
+def run_model_cell(arch: str, shape_name: str, multi_pod: bool,
+                   accounting: bool = True) -> dict:
+    import dataclasses
+
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = _lower_cell(cfg, shape, mesh, accounting=False)
+    rec.update(
+        arch=arch, shape=shape_name, kind=shape.kind,
+        mesh="2x16x16" if multi_pod else "16x16",
+        n_devices=int(np.prod(list(mesh.shape.values()))),
+        seq_len=shape.seq_len, global_batch=shape.global_batch,
+    )
+    if accounting:
+        overrides, weights = _probe_plan(cfg)
+        probes = []
+        for ov in overrides:
+            pcfg = dataclasses.replace(cfg, **ov)
+            prec = _lower_cell(pcfg, shape, mesh, accounting=True)
+            probes.append({"overrides": ov, **_extract_scalars(prec),
+                           "compile_s": prec["compile_s"]})
+        extrap = {}
+        for k in probes[0]:
+            if k in ("overrides", "compile_s"):
+                continue
+            extrap[k] = float(sum(w * p[k] for w, p in zip(weights, probes)))
+        rec["accounting"] = {
+            "probes": probes, "weights": weights, "extrapolated": extrap,
+        }
+    return rec
+
+
+def run_tsqr_cell(workload_name: str, multi_pod: bool) -> dict:
+    from repro.configs.tsqr_paper import WORKLOADS
+    from repro.core import tsqr_shard_map
+    from repro.launch.mesh import make_tsqr_mesh
+    import jax.numpy as jnp
+
+    w = WORKLOADS[workload_name]
+    mesh = make_tsqr_mesh(multi_pod=multi_pod)
+    p = mesh.shape["rows"]
+    a = jax.ShapeDtypeStruct((w.n_rows, w.n_cols), jnp.dtype(w.dtype))
+
+    t0 = time.time()
+
+    compute_q = w.variant != "tree"     # tree: only rank 0 holds R (no Q)
+
+    def run(a_):
+        res = tsqr_shard_map(
+            a_, mesh=mesh, axis="rows", variant=w.variant,
+            compute_q=compute_q, jit=False,
+        )
+        return res.r, res.valid, res.q
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    jitted = jax.jit(run, in_shardings=NamedSharding(mesh, P("rows")))
+    lowered = jitted.lower(a)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    hlo = compiled.as_text()
+    return {
+        "arch": "tsqr",
+        "shape": workload_name,
+        "kind": "tsqr",
+        "mesh": f"{p}flat",
+        "n_devices": p,
+        "variant": w.variant,
+        "rows": w.n_rows,
+        "cols": w.n_cols,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": memory_dict(compiled),
+        "cost": cost_dict(compiled),
+        "collectives": parse_collectives(hlo),
+        "hlo_bytes": len(hlo),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-accounting", action="store_true",
+                    help="skip the unrolled L=1/2 accounting probes")
+    args = ap.parse_args()
+
+    from repro.configs.base import get_config, list_archs, shapes_for
+    from repro.configs.tsqr_paper import WORKLOADS
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    cells: list[tuple] = []
+    if args.arch in ("all", "tsqr"):
+        names = list(WORKLOADS) if args.shape == "all" else [args.shape]
+        cells += [("tsqr", n) for n in names]
+    if args.arch != "tsqr":
+        archs = list_archs() if args.arch == "all" else [args.arch]
+        for a in archs:
+            cfg = get_config(a)
+            shapes = (
+                [s.name for s in shapes_for(cfg)]
+                if args.shape == "all" else [args.shape]
+            )
+            cells += [(a, s) for s in shapes]
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+            path = os.path.join(args.out, tag.replace("/", "-") + ".json")
+            try:
+                # roofline accounting is single-pod only; multi-pod proves
+                # the pod axis shards
+                acct = (not args.no_accounting) and not mp
+                rec = (run_tsqr_cell(shape, mp) if arch == "tsqr"
+                       else run_model_cell(arch, shape, mp, accounting=acct))
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                mem = rec["memory"].get("total_hbm_bytes", 0)
+                fl = (rec.get("accounting", {}).get("extrapolated", {})
+                      .get("cost.flops", rec["cost"].get("flops", 0)))
+                print(f"[dryrun OK ] {tag}: compile={rec['compile_s']}s "
+                      f"flops/dev={fl:.3e} "
+                      f"coll={rec['collectives']['total_bytes']:.3e}B "
+                      f"hbm/dev≈{mem/1e9:.2f}GB", flush=True)
+            except Exception as e:
+                failures += 1
+                with open(path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"[dryrun ERR] {tag}: {type(e).__name__}: {str(e)[:200]}",
+                      flush=True)
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run entry point must
+set ``XLA_FLAGS`` before the first jax call.
+
+Topology: TPU v5e pods, 16×16 = 256 chips per pod; the multi-pod mesh adds
+a leading "pod" axis over DCN.  ``make_tsqr_mesh`` flattens all devices
+into one "rows" axis — the layout the factorization's butterfly runs on
+(log2(256) = 8, log2(512) = 9 exchange levels).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_tsqr_mesh", "make_smoke_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_tsqr_mesh(*, multi_pod: bool = False):
+    n = 512 if multi_pod else 256
+    return jax.make_mesh((n,), ("rows",), axis_types=(AxisType.Auto,))
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1):
+    return jax.make_mesh(
+        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

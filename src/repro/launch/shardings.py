@@ -1,0 +1,359 @@
+"""Sharding policies per (arch × shape) cell — params, optimizer, batch,
+and decode caches (DESIGN.md §6).
+
+Policies:
+  * train/prefill: batch over ('pod','data'); TP dims over 'model'; Adam
+    state ZeRO-1 over the batch axes.
+  * weight-gathered layout (``gather_axis='data'``) for archs whose bf16
+    params exceed the model-axis HBM budget (mixtral-8x22b) — FSDP-style
+    per-layer all-gather, emitted by GSPMD from the sharding specs alone.
+  * decode caches: KV heads over 'model', batch over 'data'; when the
+    batch is too small to shard (long_500k, B=1), the cache *sequence* dim
+    (attention) / *state* dim (SSM) shards over 'data' instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import api
+from repro.models.partitioning import param_shardings
+from repro.models.sharding import batch_axes, mesh_context
+from repro.optim import adamw
+
+__all__ = [
+    "param_bytes", "plan_cell", "CellPlan",
+]
+
+HBM_BUDGET = 12e9          # leave headroom of the 16 GB v5e HBM
+
+
+def _axes_size(mesh, entry) -> int:
+    names = (entry,) if isinstance(entry, str) else tuple(entry)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_specs(spec_tree, struct_tree, mesh):
+    """Drop axis assignments that don't divide the actual dim (pjit argument
+    shardings — unlike internal constraints — require exact divisibility:
+    non-divisible vocab sizes, KV-head counts below the model-axis width,
+    layer-stack dims, 1500-frame encoders...)."""
+
+    def fix(spec, struct):
+        if spec is None or not isinstance(spec, P):
+            return spec
+        parts = list(spec)
+        parts += [None] * (len(struct.shape) - len(parts))
+        out = []
+        homeless = []
+        for i, entry in enumerate(parts):
+            if entry is None:
+                out.append(None)
+                continue
+            size = _axes_size(mesh, entry)
+            if struct.shape[i] % size == 0 and struct.shape[i] >= size:
+                out.append(entry)
+            else:
+                out.append(None)
+                homeless.append(entry)
+        # relocate dropped assignments to a free divisible dim (largest
+        # first) — e.g. FSDP sharding of a 29568-wide ff dim (not a
+        # multiple of 256) moves to the 8192-wide d_model dim instead of
+        # replicating 38 GB of weights.  Only multi-axis (FSDP) entries
+        # relocate: moving a plain TP axis onto a contraction dim changes
+        # the compute partitioning and can hit XLA SPMD's replicate-
+        # repartition fallback (crashed the mamba2 embedding).
+        for entry in homeless:
+            if isinstance(entry, str) or len(entry) < 2:
+                continue
+            size = _axes_size(mesh, entry)
+            cand = [
+                i for i, cur in enumerate(out)
+                if cur is None and struct.shape[i] % size == 0
+                and struct.shape[i] >= size
+            ]
+            if cand:
+                best = max(cand, key=lambda i: struct.shape[i])
+                out[best] = entry
+        return P(*out)
+
+    is_leaf = lambda x: isinstance(x, P) or x is None
+    return jax.tree.map(fix, spec_tree, struct_tree, is_leaf=is_leaf)
+
+
+def param_bytes(cfg) -> int:
+    specs = api.param_specs(cfg)
+    return sum(
+        int(np.prod(s.shape)) * s.dtype.itemsize for s in jax.tree.leaves(specs)
+    )
+
+
+def _gather_axis_for(cfg, mesh, kind: str) -> str | None:
+    """Weight-gathered (FSDP) layout when model-axis sharding alone can't
+    hold the weights.  Training uses a much tighter budget: beyond the bf16
+    params themselves, the backward's loop-carried gradient accumulators
+    mirror the param layout, so FSDP (whose backward reduce-scatters each
+    layer's grads) is the only way the biggest archs fit.  Measured on
+    qwen2-vl-72b: replicated-over-data grads kept ~4× params bf16 of
+    temp buffers alive."""
+    per_model_shard = param_bytes(cfg) / mesh.shape["model"]
+    budget = 4e9 if kind == "train" else HBM_BUDGET
+    return "data" if per_model_shard > budget else None
+
+
+def _batch_spec(mesh, name: str, kind: str):
+    ba = batch_axes(mesh)
+    if name == "positions":              # (3, B, S)
+        return P(None, ba)
+    if name == "frames":                 # (B, F, d)
+        return P(ba)
+    return P(ba)                         # tokens / labels / loss_weight
+
+
+def _cache_spec(path_name: str, parent: str, leaf, mesh, batch: int):
+    """Shape-aware decode-cache specs (see module docstring).
+
+    KV tensors prefer head-sharding over 'model'; when the head count does
+    not divide the axis (GQA kv=8 on model=16), the *time* dim shards
+    instead (flash-decode layout: distributed softmax over the cache).
+    Small-batch cells (long_500k, B=1) shard time/state over 'data'.
+    """
+    ba = batch_axes(mesh)
+    data_sz = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+    model_sz = mesh.shape["model"]
+    big_batch = batch >= data_sz
+    nd = len(leaf.shape)
+    if path_name in ("k", "v"):
+        if parent == "cross_kv":         # (L, B, F, KH, hd)
+            head_ax = 3
+            time_ax = 2
+        else:                            # (L, B, KH, T, hd)
+            head_ax = 2
+            time_ax = 3
+        spec = [None] * nd
+        if big_batch:
+            spec[1] = ba
+        n_heads = leaf.shape[head_ax]
+        if n_heads % model_sz == 0:
+            spec[head_ax] = "model"
+        else:
+            spec[time_ax] = "model"
+        if not big_batch and spec[time_ax] is None:
+            spec[time_ax] = ba
+        return P(*spec)
+    if path_name == "ssm":               # (L, B, nh, hp, N)
+        if big_batch:
+            return P(None, ba, "model", None, None)
+        return P(None, None, "model", None, ba)
+    if path_name in ("conv_x",):         # (L, B, K, d_inner)
+        base = [None] * nd
+        base[-1] = "model"
+        if big_batch:
+            base[1] = ba
+        return P(*base)
+    if path_name in ("conv_bc",):
+        base = [None] * nd
+        if big_batch:
+            base[1] = ba
+        return P(*base)
+    return P(*([None] * nd))
+
+
+def cache_shardings(cache_specs, mesh, batch: int):
+    def walk(tree, name, parent):
+        if isinstance(tree, dict):
+            return {k: walk(v, k, name) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(walk(v, name, parent) for v in tree)
+        if tree is None:
+            return None
+        return _cache_spec(name, parent, tree, mesh, batch)
+
+    return walk(cache_specs, "", "")
+
+
+def _cell_policies(cfg, shape_spec, mesh, accounting: bool):
+    """Per-cell structural policy (DESIGN.md §6):
+
+    * sequence parallelism for train/prefill of attention families — divides
+      stored activations (scan carries) by the model-axis size;
+    * gradient-accumulation microbatches sized so the per-device residual
+      carries stay under ~4 GB (SSM families have no SP: their inter-chunk
+      recurrence is sequential in S).
+    """
+    updates: dict = {}
+    kind = shape_spec.kind
+    if kind in ("train", "prefill") and cfg.family in ("dense", "moe", "vlm", "encdec"):
+        updates["seq_parallel"] = True
+    if kind == "decode" and cfg.n_experts:
+        dsz = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                dsz *= mesh.shape[a]
+        if shape_spec.global_batch % dsz == 0:
+            updates["moe_decode_groups"] = dsz
+    if accounting:
+        updates["unroll"] = True
+        updates["scan_layers"] = False
+    microbatches = 1
+    if kind == "train":
+        data_sz = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                data_sz *= mesh.shape[a]
+        b_loc = max(shape_spec.global_batch // data_sz, 1)
+        div = mesh.shape["model"] if updates.get("seq_parallel") else 1
+        carry = cfg.n_layers * b_loc * shape_spec.seq_len * cfg.d_model * 2 / div
+        # MoE dispatch transients: ~16 (B, S·k, d)-class buffers coexist
+        # through a layer's forward+backward (dispatch buffer, expert
+        # activations, gather/scatter cotangents in f32) — all scale
+        # 1/microbatch.  Multiplier measured on the qwen2-moe cell.
+        moe_t = (
+            16 * b_loc * shape_spec.seq_len * cfg.top_k * cfg.d_model * 2
+            if cfg.n_experts else 0
+        )
+        while (max(carry, moe_t) / microbatches > 4e9
+               and microbatches < b_loc):
+            microbatches *= 2
+    return dataclasses.replace(cfg, **updates), microbatches
+
+
+class CellPlan:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+
+    def __init__(self, cfg, shape_spec, mesh, opt_cfg=None, *, accounting=False):
+        cfg, self.microbatches = _cell_policies(cfg, shape_spec, mesh, accounting)
+        self.cfg = cfg
+        self.shape = shape_spec
+        self.mesh = mesh
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig()
+        with mesh_context(mesh):
+            self.gather_axis = _gather_axis_for(cfg, mesh, shape_spec.kind)
+            if self.gather_axis:
+                # FSDP: per-layer gather inside the scan body.  (A per-
+                # expert scan was tried for MoE and REGRESSED memory ~2×:
+                # the expert-loop backward stores per-iteration residuals —
+                # see EXPERIMENTS.md §Perf iteration log.)
+                cfg = dataclasses.replace(cfg, fsdp=True)
+                self.cfg = cfg
+            pspecs = api.param_specs(cfg)
+            self.param_spec_tree = sanitize_specs(
+                param_shardings(pspecs, gather_axis=self.gather_axis),
+                pspecs, mesh,
+            )
+            self.param_specs = pspecs
+            kind = shape_spec.kind
+            b, s = shape_spec.global_batch, shape_spec.seq_len
+            self.batch_struct = api.batch_specs(cfg, kind, b, s)
+            self.batch_spec_tree = sanitize_specs(
+                {k: _batch_spec(mesh, k, kind) for k in self.batch_struct},
+                self.batch_struct, mesh,
+            )
+            if kind == "train":
+                self.opt_struct = jax.eval_shape(adamw.init, pspecs)
+                self.opt_spec_tree = adamw.state_shardings(
+                    self.param_spec_tree, pspecs, mesh,
+                    zero1_axis=batch_axes(mesh),
+                )
+            elif kind == "decode":
+                self.cache_struct = api.decode_cache_specs(cfg, b, s)
+                self.cache_spec_tree = sanitize_specs(
+                    cache_shardings(self.cache_struct, mesh, b),
+                    self.cache_struct, mesh,
+                )
+
+    # -- step functions -----------------------------------------------
+    def named(self, spec_tree):
+        return jax.tree.map(
+            lambda sp: None if sp is None else NamedSharding(self.mesh, sp),
+            spec_tree,
+            is_leaf=lambda x: isinstance(x, P) or x is None,
+        )
+
+    def lowerable(self):
+        """Returns (fn, args_structs, in_shardings, out_shardings)."""
+        cfg, opt_cfg = self.cfg, self.opt_cfg
+        kind = self.shape.kind
+        mb = self.microbatches
+        if kind == "train":
+            def train_step(params, opt_state, batch):
+                def total_loss(p):
+                    if mb == 1:
+                        return api.loss_fn(p, batch, cfg)
+
+                    def split(x):
+                        if x.shape[0] == 3:      # M-RoPE positions (3, B, S)
+                            y = x.reshape((3, mb, x.shape[1] // mb) + x.shape[2:])
+                            return jnp.moveaxis(y, 1, 0)
+                        return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+                    splits = jax.tree.map(split, batch)
+                    # remat each microbatch: without this, backward keeps
+                    # every micro's layer-scan carries alive simultaneously
+                    # and grad accumulation saves no memory at all
+                    micro_loss = jax.checkpoint(
+                        lambda p_, m_: api.loss_fn(p_, m_, cfg),
+                        policy=jax.checkpoint_policies.nothing_saveable,
+                    )
+                    if cfg.unroll:               # accounting build: no while loop
+                        micros = [
+                            jax.tree.map(lambda x, i=i: x[i], splits)
+                            for i in range(mb)
+                        ]
+                        return sum(micro_loss(p, m) for m in micros) / mb
+
+                    def micro(acc, m_batch):
+                        return acc + micro_loss(p, m_batch) / mb, None
+
+                    out, _ = jax.lax.scan(micro, 0.0, splits)
+                    return out
+
+                loss, grads = jax.value_and_grad(total_loss)(params)
+                # ZeRO-2: shard gradients like the Adam moments (params'
+                # sharding + batch axes on the largest free dim).  GSPMD
+                # propagates this into the backward scans' loop-carried
+                # accumulators, which otherwise hold the full replicated
+                # gradient tree double-buffered (~4× params bf16 on the
+                # biggest archs — measured on qwen2-vl-72b).
+                grads = jax.tree.map(
+                    lambda g, sp: g if sp is None else
+                    jax.lax.with_sharding_constraint(
+                        g, NamedSharding(self.mesh, sp)),
+                    grads, self.opt_spec_tree["m"],
+                    is_leaf=lambda x: x is None,
+                )
+                new_p, new_o, metrics = adamw.update(opt_cfg, params, grads, opt_state)
+                return new_p, new_o, {"loss": loss, **metrics}
+
+            args = (self.param_specs, self.opt_struct, self.batch_struct)
+            ins = (self.param_spec_tree, self.opt_spec_tree, self.batch_spec_tree)
+            outs = (self.param_spec_tree, self.opt_spec_tree, None)
+            return train_step, args, ins, outs
+        if kind == "prefill":
+            def prefill_step(params, batch):
+                return api.prefill(params, batch, cfg)
+
+            args = (self.param_specs, self.batch_struct)
+            ins = (self.param_spec_tree, self.batch_spec_tree)
+            return prefill_step, args, ins, None
+        if kind == "decode":
+            def serve_step(params, cache, batch):
+                return api.decode_step(params, cache, batch["tokens"], cfg)
+
+            args = (self.param_specs, self.cache_struct, self.batch_struct)
+            ins = (
+                self.param_spec_tree,
+                self.cache_spec_tree,
+                self.batch_spec_tree,
+            )
+            outs = (None, self.cache_spec_tree)
+            return serve_step, args, ins, outs
+        raise ValueError(kind)

@@ -1,0 +1,102 @@
+"""Training launcher.
+
+Smoke-scale by default (reduced config, 1-device mesh — runs on this CPU
+container); ``--mesh single|multi`` selects the production meshes for
+dry-run-style launches on a real fleet.
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 100
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      --on-failure rebuild --fail "10:0" --straggle "20:1:3"
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def parse_events(fail: str, straggle: str, recover: str):
+    from repro.runtime.trainer import FaultEvent
+
+    events = []
+    for spec, kind in ((fail, "fail"), (recover, "recover")):
+        for item in filter(None, spec.split(",")):
+            step, rep = item.split(":")
+            events.append(FaultEvent(step=int(step), kind=kind, replica=int(rep)))
+    for item in filter(None, straggle.split(",")):
+        parts = item.split(":")
+        step, rep = int(parts[0]), int(parts[1])
+        dur = int(parts[2]) if len(parts) > 2 else 1
+        events.append(FaultEvent(step=step, kind="straggle", replica=rep, duration=dur))
+    return tuple(events)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false",
+                    help="full published config (needs a real fleet)")
+    ap.add_argument("--mesh", default="auto",
+                    help="auto | dxm (e.g. 2x2) | single | multi")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--on-failure", default="blank",
+                    choices=["blank", "shrink", "rebuild"])
+    ap.add_argument("--fail", default="", help="step:replica[,...]")
+    ap.add_argument("--recover", default="", help="step:replica[,...]")
+    ap.add_argument("--straggle", default="", help="step:replica[:dur][,...]")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    if args.mesh == "single":
+        mesh = make_production_mesh(multi_pod=False)
+    elif args.mesh == "multi":
+        mesh = make_production_mesh(multi_pod=True)
+    elif args.mesh == "auto":
+        n = len(jax.devices())
+        mesh = make_smoke_mesh(data=n, model=1)
+    else:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_smoke_mesh(data=d, model=m)
+
+    tcfg = TrainerConfig(
+        steps=args.steps,
+        microbatches=args.microbatches,
+        on_failure=args.on_failure,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        lr=args.lr,
+    )
+    dcfg = DataConfig(
+        vocab=cfg.vocab,
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+        family=cfg.family,
+        enc_frames=cfg.enc_frames if cfg.family == "encdec" else 0,
+        d_model=cfg.d_model,
+    )
+    trainer = Trainer(cfg, tcfg, mesh, dcfg)
+    params, opt = trainer.init_state()
+    trainer.run(
+        params, opt,
+        fault_schedule=parse_events(args.fail, args.straggle, args.recover),
+    )
+    print("\n".join(trainer.events_log))
+    print(f"final loss: {trainer.metrics_log[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

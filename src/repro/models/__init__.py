@@ -1,0 +1,9 @@
+"""Model zoo: composable JAX definitions for the 10 assigned architectures.
+
+Families: dense / MoE / VLM transformers (:mod:`transformer`), Mamba2 SSD
+(:mod:`ssm`), Zamba2 hybrid (:mod:`hybrid`), Whisper enc-dec
+(:mod:`encdec`).  All expose the uniform :mod:`repro.models.api` surface.
+"""
+from . import api
+
+__all__ = ["api"]

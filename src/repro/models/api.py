@@ -1,0 +1,138 @@
+"""Uniform model API over all families: init / loss / prefill / decode.
+
+Every architecture config routes here; the launcher, trainer, and dry-run
+only speak this interface.
+
+  * ``init(key, cfg)``                → params
+  * ``param_specs(cfg)``              → ShapeDtypeStruct pytree (eval_shape)
+  * ``loss_fn(params, batch, cfg)``   → scalar  (train step body)
+  * ``prefill_fn / decode_fn``        → serving step bodies
+  * ``batch_specs(cfg, shape)``       → ShapeDtypeStruct inputs per cell
+  * ``synth_batch(key, cfg, ...)``    → concrete small batch for smoke tests
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, frontends, hybrid, ssm, transformer
+from .partitioning import param_shardings
+
+__all__ = [
+    "module_for", "init", "param_specs", "loss_fn", "forward",
+    "prefill", "decode_step", "init_decode_cache", "decode_cache_specs",
+    "batch_specs", "synth_batch", "param_shardings",
+]
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+def module_for(cfg):
+    return _FAMILIES[cfg.family]
+
+
+def init(key, cfg):
+    return module_for(cfg).init(key, cfg)
+
+
+def param_specs(cfg):
+    return jax.eval_shape(lambda: init(jax.random.key(0), cfg))
+
+
+def forward(params, batch, cfg):
+    mod = module_for(cfg)
+    if cfg.family == "encdec":
+        return mod.forward(params, batch["tokens"], cfg, frames=batch["frames"])
+    return mod.forward(params, batch["tokens"], cfg, batch.get("positions"))
+
+
+def loss_fn(params, batch, cfg):
+    """Weighted next-token loss.  ``batch['loss_weight']`` (B,) optionally
+    down-weights rows — the BLANK-semantics path where a failed replica's
+    contribution is dropped and the rest rescaled (runtime/trainer.py)."""
+    logits = forward(params, batch, cfg)
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll                                   # (B, S)
+    w = batch.get("loss_weight")
+    if w is None:
+        loss = nll.mean()
+    else:
+        wf = w[:, None].astype(nll.dtype)
+        loss = (nll * wf).sum() / jnp.maximum((wf * jnp.ones_like(nll)).sum(), 1.0)
+    return loss + 1e-4 * jnp.square(lse).mean()
+
+
+def prefill(params, batch, cfg, s_max=None):
+    mod = module_for(cfg)
+    if cfg.family == "encdec":
+        return mod.prefill(
+            params, batch["tokens"], cfg, frames=batch["frames"], s_max=s_max
+        )
+    return mod.prefill(
+        params, batch["tokens"], cfg, positions=batch.get("positions"), s_max=s_max
+    )
+
+
+def decode_step(params, cache, token, cfg):
+    return module_for(cfg).decode_step(params, cache, token, cfg)
+
+
+def init_decode_cache(cfg, batch: int, s_max: int, dtype=None):
+    return module_for(cfg).init_decode_cache(cfg, batch, s_max, dtype)
+
+
+def decode_cache_specs(cfg, batch: int, s_max: int):
+    return jax.eval_shape(lambda: init_decode_cache(cfg, batch, s_max))
+
+
+# ---------------------------------------------------------------------------
+# Input specs / synthetic batches per shape cell
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg, kind: str, batch: int, seq: int):
+    """ShapeDtypeStruct inputs for a (train | prefill | decode) step."""
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if kind == "train":
+        out = {"tokens": tok, "labels": tok}
+    elif kind == "prefill":
+        out = {"tokens": tok}
+    elif kind == "decode":
+        out = {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    else:
+        raise ValueError(kind)
+    if cfg.family == "encdec" and kind in ("train", "prefill"):
+        out["frames"] = frontends.audio_frames_spec(cfg, batch)
+    if cfg.family == "vlm" and kind in ("train", "prefill"):
+        out["positions"] = frontends.mrope_positions_spec(cfg, batch, seq)
+    return out
+
+
+def synth_batch(key, cfg, kind: str, batch: int, seq: int):
+    """Concrete random batch matching :func:`batch_specs` (smoke tests)."""
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab, jnp.int32)
+    if kind == "train":
+        out = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    elif kind == "prefill":
+        out = {"tokens": tokens}
+    elif kind == "decode":
+        out = {"tokens": tokens[:, :1]}
+    else:
+        raise ValueError(kind)
+    if cfg.family == "encdec" and kind in ("train", "prefill"):
+        out["frames"] = frontends.audio_frames(k2, cfg, batch)
+    if cfg.family == "vlm" and kind in ("train", "prefill"):
+        span = (8, 8 + min(16, seq // 2)) if seq >= 24 else None
+        out["positions"] = frontends.mrope_positions(
+            cfg, batch, seq, image_span=span, grid=(4, 4)
+        )
+    return out

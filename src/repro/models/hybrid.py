@@ -1,0 +1,237 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+applied every ``cfg.attn_every`` layers (arXiv:2411.15242).
+
+The shared block's parameters exist once (the Zamba trick — attention
+quality at ~1/13th of the attention parameter cost); each of its
+``n_units`` applications keeps its own KV cache.  Deviation from the
+published model: the shared block attends over the hidden state x rather
+than concat(x, x_embed) (DESIGN.md §5 note).
+
+Structure: n_units = n_layers // attn_every scanned units of
+(attn_every mamba layers → shared attn block), then a tail of
+n_layers % attn_every mamba layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from . import ssm as S
+from .sharding import constrain
+
+__all__ = [
+    "init", "forward", "loss_fn", "prefill", "decode_step", "init_decode_cache",
+]
+
+
+def _unit_counts(cfg):
+    n_units = cfg.n_layers // cfg.attn_every
+    n_tail = cfg.n_layers - n_units * cfg.attn_every
+    return n_units, n_tail
+
+
+def init(key, cfg):
+    n_units, n_tail = _unit_counts(cfg)
+    ks = jax.random.split(key, 5)
+
+    def one_mamba(k):
+        kn, kb = jax.random.split(k)
+        return {
+            "norm": L.init_norm(cfg, cfg.d_model),
+            "block": S.init_mamba_block(kb, cfg),
+        }
+
+    def unit(k):
+        return jax.vmap(one_mamba)(jax.random.split(k, cfg.attn_every))
+
+    units = jax.vmap(unit)(jax.random.split(ks[0], n_units))
+    tail = (
+        jax.vmap(one_mamba)(jax.random.split(ks[1], n_tail))
+        if n_tail else None
+    )
+    shared = {
+        "attn_norm": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attention(ks[2], cfg),
+        "mlp_norm": L.init_norm(cfg, cfg.d_model),
+        "mlp": L.init_mlp(ks[3], cfg),
+    }
+    return {
+        "embed": L.init_embedding(ks[4], cfg),
+        "units": units,            # stacked (n_units, attn_every, ...)
+        "tail": tail,              # stacked (n_tail, ...) or None
+        "shared": shared,          # single copy
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def _mamba_sublayer(lp, h, cfg, state=None):
+    y, carry = (
+        S.mamba_block(lp["block"], L.apply_norm(lp["norm"], h, cfg), cfg)
+        if state is None
+        else S.mamba_step(lp["block"], L.apply_norm(lp["norm"], h, cfg), cfg, state)
+    )
+    return constrain(h + y, "batch", None, None), carry
+
+
+def _shared_block(sp, h, cfg, cos_sin, cache):
+    a = L.apply_norm(sp["attn_norm"], h, cfg)
+    a, aux = L.attention(sp["attn"], a, cfg, cos_sin=cos_sin, causal=True, cache=cache)
+    h = h + a
+    m = L.mlp(sp["mlp"], L.apply_norm(sp["mlp_norm"], h, cfg), cfg)
+    h = constrain(h + m, "batch", None, None)
+    return h, aux
+
+
+def _mamba_scan_train(stacked, h, cfg):
+    def body(hh, lp):
+        hh, _ = _mamba_sublayer(lp, hh, cfg)
+        return hh, None
+
+    h, _ = L.scan_or_unroll(body, h, stacked, cfg)
+    return h
+
+
+def forward(params, tokens, cfg, positions=None):
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    pos = positions if positions is not None else jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[None], (b, s)
+    )
+    cos_sin = L.rope_cos_sin(pos, cfg.d_head, cfg.rope_theta)
+    shared = params["shared"]
+
+    def unit_body(h, unit_params):
+        h = _mamba_scan_train(unit_params, h, cfg)
+        h, _ = _shared_block(shared, h, cfg, cos_sin, None)
+        return h, None
+
+    if cfg.remat:
+        unit_body = jax.checkpoint(unit_body, policy=L.remat_policy())
+    x, _ = L.scan_or_unroll(unit_body, x, params["units"], cfg)
+    if params["tail"] is not None:
+        x = _mamba_scan_train(params["tail"], x, cfg)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return L.unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg):
+    return L.cross_entropy(forward(params, batch["tokens"], cfg), batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg, batch: int, s_max: int, dtype=None):
+    n_units, n_tail = _unit_counts(cfg)
+    dt = jnp.dtype(dtype or cfg.dtype)
+    kh, hd = cfg.n_kv_heads, cfg.d_head
+    return {
+        "unit_states": S.init_ssm_state(cfg, batch, n_units * cfg.attn_every)
+        if n_units else None,
+        "tail_states": S.init_ssm_state(cfg, batch, n_tail) if n_tail else None,
+        "kv": {
+            "k": jnp.zeros((n_units, batch, kh, s_max, hd), dt),
+            "v": jnp.zeros((n_units, batch, kh, s_max, hd), dt),
+        },
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _reshape_unit_states(st, n_units, attn_every):
+    return jax.tree.map(
+        lambda a: a.reshape((n_units, attn_every) + a.shape[1:]), st
+    )
+
+
+def prefill(params, tokens, cfg, positions=None, s_max: int | None = None):
+    b, s = tokens.shape
+    s_max = s_max or s
+    x = L.embed(params["embed"], tokens, cfg)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    cos_sin = L.rope_cos_sin(pos, cfg.d_head, cfg.rope_theta)
+    shared = params["shared"]
+    n_units, n_tail = _unit_counts(cfg)
+
+    def mamba_scan_state(stacked, h):
+        def body(hh, lp):
+            hh, (st, (cx, cbc)) = _mamba_sublayer(lp, hh, cfg)
+            return hh, {"ssm": st, "conv_x": cx, "conv_bc": cbc}
+
+        return L.scan_or_unroll(body, h, stacked, cfg)
+
+    def unit_body(h, unit_params):
+        h, states = mamba_scan_state(unit_params, h)
+        h, (k, v) = _shared_block(shared, h, cfg, cos_sin, None)
+        pad = s_max - s
+        k = jnp.pad(jnp.moveaxis(k, 1, 2), ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(jnp.moveaxis(v, 1, 2), ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return h, (states, {"k": k, "v": v})
+
+    if cfg.remat:
+        unit_body = jax.checkpoint(unit_body, policy=L.remat_policy())
+    x, (unit_states, kv) = L.scan_or_unroll(unit_body, x, params["units"], cfg)
+    tail_states = None
+    if params["tail"] is not None:
+        x, tail_states = mamba_scan_state(params["tail"], x)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    flat_unit_states = jax.tree.map(
+        lambda a: a.reshape((n_units * cfg.attn_every,) + a.shape[2:]), unit_states
+    )
+    return logits, {
+        "unit_states": flat_unit_states if n_units else None,
+        "tail_states": tail_states,
+        "kv": kv,
+        "len": jnp.asarray(s, jnp.int32),
+    }
+
+
+def decode_step(params, cache, token, cfg):
+    b = token.shape[0]
+    x = L.embed(params["embed"], token, cfg)
+    pos_len = cache["len"]
+    pos = jnp.broadcast_to(pos_len[None, None], (b, 1)).astype(jnp.int32)
+    cos_sin = L.rope_cos_sin(pos, cfg.d_head, cfg.rope_theta)
+    shared = params["shared"]
+    n_units, n_tail = _unit_counts(cfg)
+    unit_states = _reshape_unit_states(cache["unit_states"], n_units, cfg.attn_every)
+
+    def unit_body(h, slices):
+        unit_params, states, kv = slices
+
+        def inner(hh, inner_slices):
+            lp, st = inner_slices
+            hh, new_st = _mamba_sublayer(lp, hh, cfg, st)
+            return hh, new_st
+
+        h, new_states = L.scan_or_unroll(inner, h, (unit_params, states), cfg)
+        sub_cache = {"k": kv["k"], "v": kv["v"], "len": pos_len}
+        h, nc = _shared_block(shared, h, cfg, cos_sin, sub_cache)
+        return h, (new_states, {"k": nc["k"], "v": nc["v"]})
+
+    x, (new_unit_states, new_kv) = L.scan_or_unroll(
+        unit_body, x, (params["units"], unit_states, cache["kv"]), cfg
+    )
+    new_tail = None
+    if params["tail"] is not None:
+        def inner(hh, inner_slices):
+            lp, st = inner_slices
+            hh, new_st = _mamba_sublayer(lp, hh, cfg, st)
+            return hh, new_st
+
+        x, new_tail = L.scan_or_unroll(inner, x, (params["tail"], cache["tail_states"]), cfg)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    flat_states = jax.tree.map(
+        lambda a: a.reshape((n_units * cfg.attn_every,) + a.shape[2:]),
+        new_unit_states,
+    )
+    return logits, {
+        "unit_states": flat_states,
+        "tail_states": new_tail,
+        "kv": new_kv,
+        "len": pos_len + 1,
+    }

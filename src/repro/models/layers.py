@@ -1,0 +1,481 @@
+"""Shared neural-net layers for the architecture zoo (pure functions).
+
+Conventions:
+  * params are nested dicts of jnp arrays; ``init_*`` functions are pure jax
+    so ``jax.eval_shape`` over them yields the dry-run ShapeDtypeStructs.
+  * activations x are (B, S, d_model); attention caches are
+    ``{"k": (B, KH, S_cache, hd), "v": ..., "len": ()}``.
+  * TP: head / ff dims are sharded over "model" via
+    :func:`repro.models.sharding.constrain`; batch over ('pod','data').
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import constrain
+
+__all__ = [
+    "init_norm", "apply_norm",
+    "rope_cos_sin", "apply_rope",
+    "init_attention", "attention", "init_cache",
+    "init_mlp", "mlp",
+    "init_embedding", "embed", "unembed",
+    "softcap", "cross_entropy",
+    "scan_or_unroll", "remat_policy", "residual_axes", "resolve_q_chunk",
+]
+
+
+def residual_axes(cfg):
+    """Sharding of the residual stream (B, S, d).  With Megatron-style
+    sequence parallelism the S dim shards over 'model' between blocks —
+    GSPMD then emits the all-gather (entering attention/MLP, whose inner
+    dims are model-sharded) and reduce-scatter (leaving) pair, which moves
+    the same bytes as the TP all-reduce it replaces but divides stored
+    activations (scan carries, remat residuals) by the model-axis size."""
+    return ("batch", "model", None) if cfg.seq_parallel else ("batch", None, None)
+
+
+def remat_policy():
+    """Full recompute: only scan carries (the per-layer residual stream)
+    survive the forward pass — the production activation-memory posture."""
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def scan_or_unroll(body, carry, xs, cfg):
+    """lax.scan over the layer stack, or a python unroll for the dry-run
+    accounting build (XLA's HloCostAnalysis counts while-loop bodies once,
+    so exact FLOP/collective totals need explicit layers; see
+    launch/dryrun.py)."""
+    if cfg.scan_layers and not cfg.unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *ys)
+    return carry, stacked
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, d: int):
+    if cfg.norm in ("ln_nonparam",):
+        return {}
+    if cfg.norm in ("rmsnorm", "rmsnorm_offset"):
+        return {"scale": jnp.zeros((d,), jnp.float32)
+                if cfg.norm == "rmsnorm_offset" else jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "ln":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(p, x, cfg, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "ln_nonparam":
+        # OLMo: LayerNorm without learned scale/bias.
+        mu = xf.mean(-1, keepdims=True)
+        var = xf.var(-1, keepdims=True)
+        return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    if cfg.norm == "ln":
+        mu = xf.mean(-1, keepdims=True)
+        var = xf.var(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"] + p["bias"]).astype(x.dtype)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    scale = p["scale"]
+    if cfg.norm == "rmsnorm_offset":      # gemma: (1 + w)
+        scale = 1.0 + scale
+    return (y * scale).astype(x.dtype)
+
+
+def _rms_head_norm(scale, x, eps: float = 1e-6):
+    """Per-head q/k RMSNorm (qwen3)."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * scale).astype(x.dtype)
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions, head_dim: int, theta: float, sections=()):
+    """cos/sin tables, each (B, S, head_dim/2).
+
+    ``positions``: (B, S) — standard RoPE — or (3, B, S) for M-RoPE, in which
+    case ``sections`` (summing to head_dim/2) assigns frequency bands to the
+    temporal/height/width position streams (Qwen2-VL §2.1).
+    """
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if positions.ndim == 2:
+        ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, half)
+    else:
+        assert sections and sum(sections) == half, (sections, half)
+        sec_id = jnp.repeat(
+            jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half
+        )
+        pos = positions[sec_id]                              # (half, B, S)
+        ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); rotate-half convention (NeoX/Llama)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window / softcap / qk_norm / cross-attn)
+# ---------------------------------------------------------------------------
+
+def eff_heads(cfg) -> int:
+    """Query-head count incl. sharding padding (``pad_heads_to``): head
+    counts that don't divide the model axis (minitron: 24 on 16) otherwise
+    trigger GSPMD's replicate-repartition fallback on every attention
+    einsum — zero-padding to the next multiple trades +33% attention FLOPs
+    for clean head-sharding (EXPERIMENTS.md §Perf)."""
+    return cfg.pad_heads_to or cfg.n_heads
+
+
+def init_attention(key, cfg, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    h, kh, hd = eff_heads(cfg), cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * scale).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, kh * hd)) * scale).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, kh * hd)) * scale).astype(dt),
+        "wo": (jax.random.normal(ks[3], (h * hd, d)) * scale).astype(dt),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kh * hd,), dt)
+        p["bv"] = jnp.zeros((kh * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def init_cache(cfg, batch: int, s_cache: int, dtype, n_layers: int | None = None):
+    """Stacked (L, B, KH, S, hd) KV cache for the scanned decoder."""
+    layers = cfg.n_layers if n_layers is None else n_layers
+    kh, hd = cfg.n_kv_heads, cfg.d_head
+    shape = (layers, batch, kh, s_cache, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _qkv(p, x, cfg):
+    h, kh, hd = eff_heads(cfg), cfg.n_kv_heads, cfg.d_head
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kh, hd)
+    v = v.reshape(b, s, kh, hd)
+    if cfg.qk_norm:
+        q = _rms_head_norm(p["q_norm"], q)
+        k = _rms_head_norm(p["k_norm"], k)
+    return q, k, v
+
+
+def _expand_kv(cfg) -> bool:
+    """Expand KV heads to the full query-head count before the score einsum
+    when the KV count doesn't divide the model axis (GQA kv=8 on a 16-wide
+    axis).  Without this, GSPMD pads the KV-head dim and resharding the
+    padded probs against sequence-parallel layouts triggers involuntary
+    full rematerialization of the S×S probability tensor in backward.
+    The repeat is free FLOPs-wise and the expanded K/V transient is small."""
+    from .sharding import current_mesh
+
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    msz = mesh.shape["model"]
+    return (cfg.n_kv_heads % msz != 0) and (eff_heads(cfg) % msz == 0)
+
+
+def _gqa_scores(q, k, cfg):
+    """q (B,S,H,hd), k (B,T,KH,hd) → scores (B,KH,G,S,T), f32."""
+    h, kh = eff_heads(cfg), cfg.n_kv_heads
+    g = h // kh
+    b, s, _, hd = q.shape
+    if _expand_kv(cfg):
+        k = jnp.repeat(k, g, axis=2)                      # (B,T,H,hd)
+        k = k if k.shape[2] == h else jnp.repeat(k, h // k.shape[2], axis=2)
+        scores = jnp.einsum(
+            "bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32
+        )
+        scores = scores.reshape(b, h, 1, s, -1)           # (B,H,1,S,T)
+        return scores / math.sqrt(hd)
+    qg = q.reshape(b, s, kh, g, hd)
+    scores = jnp.einsum(
+        "bskgh,btkh->bkgst", qg, k, preferred_element_type=jnp.float32
+    )
+    return scores / math.sqrt(hd)
+
+
+def _gqa_out(probs, v, cfg):
+    b, kh, g, s, t = probs.shape
+    heff = eff_heads(cfg)
+    if g == 1 and kh == heff and cfg.n_kv_heads != heff:
+        # expanded-KV layout: probs (B,H,1,S,T), v (B,T,KH,hd)
+        vv = jnp.repeat(v, heff // cfg.n_kv_heads, axis=2)
+        out = jnp.einsum(
+            "bhst,bthd->bshd", probs[:, :, 0].astype(v.dtype), vv,
+            preferred_element_type=jnp.float32,
+        )
+        return out.astype(v.dtype)
+    out = jnp.einsum(
+        "bkgst,btkh->bskgh", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, s, kh * g, v.shape[-1]).astype(v.dtype)
+
+
+def _mask_bias(s, t, *, causal, window, offset):
+    """(S, T) additive mask. ``offset``: absolute position of query 0 minus
+    that of key 0 (0 for self-attn over the same span)."""
+    iq = jnp.arange(s)[:, None] + offset
+    jk = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok = ok & (jk <= iq)
+    if window is not None:
+        ok = ok & ((iq - jk) < window)
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def resolve_q_chunk(cfg, s: int) -> int:
+    """Query-chunk size for flash-style attention (0 = unchunked).
+
+    Unchunked S×S score tensors are fine to ~8k (head-sharded over 'model'
+    they stay ~1 GB/device); past that the S² f32 buffer must be tiled.
+    On a real TPU this layer is a Pallas flash kernel; the chunked pure-JAX
+    form keeps the same FLOPs and a bounded working set for the dry-run.
+    """
+    if cfg.q_chunk:
+        return cfg.q_chunk if s > cfg.q_chunk else 0
+    if s <= 8192:
+        return 0
+    return 1024
+
+
+def _attend_full(q, k, v, cfg, bias):
+    scores = _gqa_scores(q, k, cfg) + bias
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v, cfg)
+
+
+def _attend_chunked(q, k, v, cfg, *, causal, window, qc: int):
+    """Flash-style query chunking: softmax rows are exact per chunk (keys are
+    never split), memory is O(qc·T) instead of O(S·T)."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    assert s % qc == 0, (s, qc)
+    nc = s // qc
+
+    def one(idx, q_blk):
+        bias = _mask_bias(qc, t, causal=causal, window=window, offset=idx * qc)
+        return _attend_full(q_blk, k, v, cfg, bias)
+
+    if cfg.unroll:
+        outs = [one(i, q[:, i * qc:(i + 1) * qc]) for i in range(nc)]
+        return jnp.concatenate(outs, axis=1)
+    q_blocks = jnp.moveaxis(q.reshape(b, nc, qc, h, hd), 1, 0)
+
+    def body(_, xs):
+        idx, q_blk = xs
+        return None, one(idx, q_blk)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nc), q_blocks))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+
+
+def attention(
+    p, x, cfg, *,
+    cos_sin=None,
+    causal=True,
+    window=None,
+    cache=None,
+    kv=None,
+):
+    """Returns (y, aux).
+
+    * train/prefill: ``cache=None``, x (B,S,d); aux = (k_roped, v) so prefill
+      can materialize caches without recomputing projections.
+    * decode: ``cache`` holds T_max keys, x is (B,1,d) at position
+      ``cache['len']``; aux = updated cache.
+    * cross-attention: ``kv = (k, v)`` precomputed encoder states; aux = None.
+    """
+    b, s, _ = x.shape
+    q, k_new, v_new = _qkv(p, x, cfg)
+    chunked = False
+    if kv is not None:
+        k, v = kv
+        if cos_sin is not None:
+            q = apply_rope(q, *cos_sin)
+        bias = jnp.zeros((s, k.shape[1]), jnp.float32)
+        new_cache = None
+    elif cache is None:
+        if cos_sin is not None:
+            q = apply_rope(q, *cos_sin)
+            k_new = apply_rope(k_new, *cos_sin)
+        k, v = k_new, v_new
+        qc = resolve_q_chunk(cfg, s)
+        chunked = bool(qc)
+        if not chunked:
+            bias = _mask_bias(s, s, causal=causal, window=window, offset=0)
+        new_cache = (k, v)
+    else:
+        # single-token decode against a ring/linear cache
+        pos = cache["len"]
+        if cos_sin is not None:
+            q = apply_rope(q, *cos_sin)
+            k_new = apply_rope(k_new, *cos_sin)
+        t_max = cache["k"].shape[2]
+        slot = pos % t_max if window is not None else pos
+        k_cache = jax.lax.dynamic_update_index_in_dim(
+            cache["k"], jnp.moveaxis(k_new, 1, 2)[:, :, 0], slot, axis=2
+        )
+        v_cache = jax.lax.dynamic_update_index_in_dim(
+            cache["v"], jnp.moveaxis(v_new, 1, 2)[:, :, 0], slot, axis=2
+        )
+        k = jnp.moveaxis(k_cache, 2, 1)      # (B, T, KH, hd)
+        v = jnp.moveaxis(v_cache, 2, 1)
+        jk = jnp.arange(t_max)[None, :]
+        if window is not None:
+            ok = (jk <= pos) | (pos >= t_max)    # ring: all slots live once full
+        else:
+            ok = jk <= pos
+        bias = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[0]
+        bias = jnp.broadcast_to(bias, (s, t_max))
+        new_cache = {"k": k_cache, "v": v_cache, "len": pos + 1}
+
+    if chunked:
+        y = _attend_chunked(q, k, v, cfg, causal=causal, window=window, qc=qc)
+    else:
+        y = _attend_full(q, k, v, cfg, bias)
+    y = constrain(y, "batch", None, "model", None)
+    y = y.reshape(b, s, -1) @ p["wo"]
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff: int | None = None, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(ff)
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "wg": (jax.random.normal(ks[0], (d, ff)) * scale_in).astype(dt),
+            "wu": (jax.random.normal(ks[1], (d, ff)) * scale_in).astype(dt),
+            "wd": (jax.random.normal(ks[2], (ff, d)) * scale_out).astype(dt),
+        }
+    return {
+        "w1": (jax.random.normal(ks[0], (d, ff)) * scale_in).astype(dt),
+        "w2": (jax.random.normal(ks[1], (ff, d)) * scale_out).astype(dt),
+    }
+
+
+def mlp(p, x, cfg):
+    if cfg.act in ("swiglu", "geglu"):
+        g = x @ p["wg"]
+        u = x @ p["wu"]
+        g = constrain(g, "batch", None, "model")
+        u = constrain(u, "batch", None, "model")
+        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g, approximate=True)
+        return (act * u) @ p["wd"]
+    h = x @ p["w1"]
+    h = constrain(h, "batch", None, "model")
+    if cfg.act == "gelu":
+        h = jax.nn.gelu(h, approximate=False)
+    elif cfg.act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(cfg.act)
+    return h @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    emb = (jax.random.normal(key, (cfg.vocab, cfg.d_model)) * 0.02).astype(dt)
+    p = {"tok": emb}
+    if not cfg.tie_embeddings:
+        p["out"] = (
+            jax.random.normal(jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab))
+            / math.sqrt(cfg.d_model)
+        ).astype(dt)
+    return p
+
+
+def embed(p, tokens, cfg):
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.norm == "rmsnorm_offset":       # gemma scales embeddings by sqrt(d)
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return constrain(x, *residual_axes(cfg))
+
+
+def unembed(p, x, cfg):
+    w = p["tok"].T if cfg.tie_embeddings else p["out"]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    logits = softcap(logits, cfg.final_logit_softcap)
+    if cfg.seq_parallel:
+        # sequence-sharded logits: the f32 (B,S,V) buffer divides by the
+        # model axis; the vocab-sharded table is gathered instead.
+        return constrain(logits, "batch", "model", None)
+    return constrain(logits, "batch", None, "model")
+
+
+def cross_entropy(logits, labels, z_loss: float = 1e-4):
+    """Mean token NLL (+ z-loss for logit drift).  logits f32 (B,S,V)."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    loss = nll.mean()
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse).mean()
+    return loss

@@ -1,0 +1,192 @@
+"""Mixture-of-Experts layer (qwen2-moe / mixtral families).
+
+Two compute paths, chosen by sequence length:
+
+  * **train / prefill** (S > 1): per-sequence capacity-based dispatch
+    (GShard-style, group = sequence).  Tokens are routed top-k, sorted by
+    expert id *within their sequence* (a vmapped argsort — no cross-shard
+    collectives), and scattered into a (B, E, C, d) buffer with
+    C = ceil(S·k/E · capacity_factor).  Expert FLOPs are therefore the
+    *active* FLOPs (× capacity factor), not the dense all-experts product —
+    keeping the roofline's MODEL_FLOPS/HLO_FLOPs ratio honest.  Overflow
+    tokens are dropped (standard capacity semantics).
+  * **decode** (S == 1): per-token gather of the k selected experts'
+    weights.  With a handful of tokens per shard this moves less HBM than
+    an all-experts pass and keeps FLOPs exact.
+
+TP: expert ff dims are sharded over "model" ("expert slicing"); the optional
+``cfg.expert_parallel`` EP layout is a §Perf experiment (see EXPERIMENTS.md).
+Shared experts (qwen2-moe) are a dense SwiGLU gated by a learned sigmoid.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import constrain
+
+__all__ = ["init_moe", "moe", "capacity"]
+
+
+def capacity(cfg, s: int) -> int:
+    c = int(math.ceil(s * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)        # sublane-aligned
+
+
+def init_moe(key, cfg):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_expert_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    si, so = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * si).astype(jnp.float32),
+        "we_gate": (jax.random.normal(ks[1], (e, d, f)) * si).astype(dt),
+        "we_up": (jax.random.normal(ks[2], (e, d, f)) * si).astype(dt),
+        "we_down": (jax.random.normal(ks[3], (e, f, d)) * so).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        p["ws_gate"] = (jax.random.normal(ks[4], (d, fs)) * si).astype(dt)
+        p["ws_up"] = (jax.random.normal(ks[5], (d, fs)) * si).astype(dt)
+        p["ws_down"] = (jax.random.normal(ks[6], (fs, d)) / math.sqrt(fs)).astype(dt)
+        p["w_shared_gate"] = (jax.random.normal(ks[7], (d, 1)) * si).astype(dt)
+    return p
+
+
+def _route(p, x, cfg):
+    """x (..., d) → (weights (..., k) f32, ids (..., k) i32)."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)      # renormalized top-k
+    return w, ids
+
+
+def _expert_ffn(h, p, cfg):
+    """h (..., E, C, d) → (..., E, C, d), ff dim TP-sharded.
+
+    With ``cfg.moe_scan_experts`` (FSDP layouts) experts are processed one
+    at a time so only a single expert's weights are gathered per step —
+    the all-at-once einsum would transiently materialize the whole
+    (E, d, ff) stack on every device."""
+    if not cfg.moe_scan_experts:
+        g = jnp.einsum("becd,edf->becf", h, p["we_gate"])
+        u = jnp.einsum("becd,edf->becf", h, p["we_up"])
+        g = constrain(g, "batch", None, None, "model")
+        u = constrain(u, "batch", None, None, "model")
+        return jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, p["we_down"])
+
+    he = jnp.moveaxis(h, -3, 0)                 # (E, B, C, d)
+
+    def one(xe, wg, wu, wd):
+        # per-expert gather: constrain each sliced expert to the TP layout
+        # so the all-gather happens inside the expert loop, not hoisted
+        wg = constrain(wg, None, "model")
+        wu = constrain(wu, None, "model")
+        wd = constrain(wd, "model", None)
+        g = constrain(xe @ wg, None, None, "model")
+        u = constrain(xe @ wu, None, None, "model")
+        return (jax.nn.silu(g) * u) @ wd
+
+    if cfg.unroll:
+        out = jnp.stack([
+            one(he[e], p["we_gate"][e], p["we_up"][e], p["we_down"][e])
+            for e in range(he.shape[0])
+        ])
+    else:
+        def body(_, xs):
+            xe, wg, wu, wd = xs
+            return None, one(xe, wg, wu, wd)
+
+        _, out = jax.lax.scan(
+            body, None, (he, p["we_gate"], p["we_up"], p["we_down"])
+        )
+    return jnp.moveaxis(out, 0, -3)
+
+
+def _shared(p, x, cfg):
+    if "ws_gate" not in p:
+        return 0.0
+    g = x @ p["ws_gate"]
+    u = x @ p["ws_up"]
+    g = constrain(g, "batch", None, "model")
+    u = constrain(u, "batch", None, "model")
+    y = (jax.nn.silu(g) * u) @ p["ws_down"]
+    gate = jax.nn.sigmoid((x @ p["w_shared_gate"]).astype(jnp.float32))
+    return y * gate.astype(y.dtype)
+
+
+def _moe_dispatch(p, x, cfg):
+    """Capacity-based per-sequence dispatch.  x (B, S, d)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(cfg, s)
+    w, ids = _route(p, x, cfg)                      # (B, S, k)
+
+    flat_e = ids.reshape(b, s * k)                  # (B, S·k)
+    order = jnp.argsort(flat_e, axis=-1)            # vmapped over B by XLA
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    # position of each sorted assignment inside its expert segment
+    counts = jax.vmap(lambda v: jnp.bincount(v, length=e))(flat_e)  # (B, E)
+    starts = jnp.cumsum(counts, axis=-1) - counts                    # exclusive
+    pos = jnp.arange(s * k)[None, :] - jnp.take_along_axis(starts, se, axis=-1)
+    keep = pos < c
+    slot = jnp.where(keep, se * c + pos, e * c)     # drop → sentinel slot
+
+    tok = order // k                                # source token of assignment
+    xs = jnp.take_along_axis(x, tok[..., None], axis=1)              # (B, S·k, d)
+    buf = jnp.zeros((b, e * c + 1, d), x.dtype)
+    buf = jax.vmap(lambda bb, sl, xx: bb.at[sl].set(xx))(buf, slot, xs)
+    buf = buf[:, : e * c].reshape(b, e, c, d)
+    buf = constrain(buf, "batch", None, None, None)
+
+    out = _expert_ffn(buf, p, cfg).reshape(b, e * c, d)
+    out = jnp.concatenate([out, jnp.zeros((b, 1, d), out.dtype)], axis=1)
+    gathered = jax.vmap(lambda oo, sl: oo[sl])(out, slot)            # (B, S·k, d)
+    wsort = jnp.take_along_axis(w.reshape(b, s * k), order, axis=-1)
+    contrib = gathered * wsort[..., None].astype(gathered.dtype)
+    y = jnp.zeros((b, s, d), x.dtype)
+    y = jax.vmap(lambda yy, tk, cc: yy.at[tk].add(cc))(y, tok, contrib)
+    return y
+
+
+def _moe_gather(p, x, cfg):
+    """Per-token expert-weight gather — the decode (S == 1) path."""
+    b, s, d = x.shape
+    w, ids = _route(p, x, cfg)                      # (B, 1, k)
+    wg = p["we_gate"][ids[:, 0]]                    # (B, k, d, f)
+    wu = p["we_up"][ids[:, 0]]
+    wd = p["we_down"][ids[:, 0]]                    # (B, k, f, d)
+    xt = x[:, 0]                                    # (B, d)
+    g = jnp.einsum("bd,bkdf->bkf", xt, wg)
+    u = jnp.einsum("bd,bkdf->bkf", xt, wu)
+    g = constrain(g, "batch", None, "model")
+    u = constrain(u, "batch", None, "model")
+    yk = jnp.einsum("bkf,bkfd->bkd", jax.nn.silu(g) * u, wd)
+    y = jnp.einsum("bkd,bk->bd", yk, w[:, 0].astype(yk.dtype))
+    return y[:, None, :]
+
+
+def moe(p, x, cfg):
+    if x.shape[1] > 1 and cfg.seq_parallel:
+        # dispatch wants whole sequences per DP shard: gather S before
+        # routing (Megatron-SP behavior), scatter back via the caller's
+        # residual constraint.
+        x = constrain(x, "batch", None, None)
+    if x.shape[1] == 1:
+        if cfg.moe_decode_groups and x.shape[0] % cfg.moe_decode_groups == 0:
+            # grouped capacity dispatch for decode: one group per data
+            # shard (no cross-shard sort, no giant per-token weight gather
+            # — the (B,k,d,ff) gather replicates expert weights on fleets
+            # whose experts are sharded finer than the batch).
+            g = cfg.moe_decode_groups
+            b, _, d = x.shape
+            xg = x.reshape(g, b // g, d)
+            y = _moe_dispatch(p, xg, cfg).reshape(b, 1, d)
+        else:
+            y = _moe_gather(p, x, cfg)
+    else:
+        y = _moe_dispatch(p, x, cfg)
+    return y + _shared(p, x, cfg)

@@ -1,0 +1,94 @@
+"""Mesh context + activation-sharding helpers for the model zoo.
+
+Models are written once as pure functions; distribution is injected via
+``constrain(x, *axes)`` sharding constraints that no-op when no mesh context
+is active (CPU smoke tests) and lower to GSPMD annotations under the
+production mesh.  Batch dims shard over ``("pod", "data")`` when the pod
+axis exists (multi-pod dry-run) and ``("data",)`` otherwise.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["mesh_context", "constrain", "batch_axes", "current_mesh", "named_sharding"]
+
+_state = threading.local()
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh | None):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def batch_axes(mesh: Mesh | None = None):
+    """Axes the global batch shards over: ('pod','data') or ('data',)."""
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return ("data",)
+    names = mesh.axis_names
+    return tuple(n for n in ("pod", "data") if n in names)
+
+
+def _resolve(axes):
+    """Map the symbolic 'batch' axis to the mesh's real batch axes."""
+    out = []
+    for a in axes:
+        if a == "batch":
+            out.append(batch_axes())
+        else:
+            out.append(a)
+    return tuple(out)
+
+
+def named_sharding(mesh: Mesh, *axes) -> NamedSharding:
+    with mesh_context(mesh):
+        return NamedSharding(mesh, P(*_resolve(axes)))
+
+
+def constrain(x, *axes):
+    """``with_sharding_constraint`` against the active mesh (no-op if none).
+
+    ``axes`` entries: mesh axis name, tuple of names, None, or the symbolic
+    ``"batch"`` which resolves to ('pod','data')/('data',)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = P(*_resolve(axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_kv(x, *, head_axis: int, time_axis: int, batch_dim: int = None):
+    """KV-cache layout constraint matching launch/shardings._cache_spec:
+    heads over 'model' when they divide the axis, else the time dim
+    (flash-decode layout); batch over the batch axes when divisible."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = [None] * x.ndim
+    model_sz = mesh.shape["model"]
+    if x.shape[head_axis] % model_sz == 0:
+        spec[head_axis] = "model"
+    elif x.shape[time_axis] % model_sz == 0:
+        spec[time_axis] = "model"
+    if batch_dim is not None:
+        ba = batch_axes(mesh)
+        sz = 1
+        for a in ba:
+            sz *= mesh.shape[a]
+        if x.shape[batch_dim] % sz == 0:
+            spec[batch_dim] = ba
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

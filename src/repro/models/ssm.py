@@ -1,0 +1,335 @@
+"""Mamba2 (SSD — state-space duality) blocks and LM (arXiv:2405.21060).
+
+Training uses the chunked SSD form: intra-chunk quadratic ("attention-like")
+term + inter-chunk state recurrence (a ``lax.scan`` over S/chunk steps with a
+(B, nh, hp, N) running state).  Decode is the O(1)-per-token recurrence —
+which is why the ``long_500k`` cell runs for the SSM/hybrid archs only.
+
+TP: heads (nh = d_inner / head_dim) shard over "model"; B/C projections are
+group-shared (G groups, replicated for G=1).  No attention, no RoPE.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .sharding import constrain
+
+__all__ = [
+    "init_mamba_block", "mamba_chunked", "mamba_step", "init_ssm_state",
+    "init", "forward", "loss_fn", "prefill", "decode_step", "init_decode_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# Block params
+# ---------------------------------------------------------------------------
+
+def init_mamba_block(key, cfg, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    di = cfg.ssm_expand * d
+    nh = di // cfg.ssm_head_dim
+    gn = cfg.ssm_groups * cfg.ssm_state
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_z": (jax.random.normal(ks[0], (d, di)) * s).astype(dt),
+        "w_x": (jax.random.normal(ks[1], (d, di)) * s).astype(dt),
+        "w_bc": (jax.random.normal(ks[2], (d, 2 * gn)) * s).astype(dt),
+        "w_dt": (jax.random.normal(ks[3], (d, nh)) * s).astype(dt),
+        "conv_x": (jax.random.normal(ks[4], (cfg.ssm_conv, di)) * 0.1).astype(dt),
+        "conv_bc": (jax.random.normal(ks[5], (cfg.ssm_conv, 2 * gn)) * 0.1).astype(dt),
+        "conv_x_b": jnp.zeros((di,), dt),
+        "conv_bc_b": jnp.zeros((2 * gn,), dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": jnp.ones((di,), jnp.float32),
+        "w_out": (jax.random.normal(jax.random.fold_in(key, 7), (di, d))
+                  / math.sqrt(di)).astype(dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B, S, ch), w (K, ch)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    """Mamba2 RMSNormGated: norm(y · silu(z)) · scale."""
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    y = yf * lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + eps)
+    return (y * scale).astype(z.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _segsum(a):
+    """a (..., Q) → lower-triangular pairwise sums Σ_{j<i≤q} (..., Q, Q)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]        # cs[i] - cs[j]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba_chunked(xh, da, b_mat, c_mat, cfg, state0=None):
+    """SSD over full sequence, chunk-parallel.
+
+    xh (B,S,nh,hp) — dt-scaled inputs; da (B,S,nh) = dt·A (negative);
+    b_mat/c_mat (B,S,G,N).  Returns (y (B,S,nh,hp), final state (B,nh,hp,N)).
+    """
+    bsz, s, nh, hp = xh.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    q = min(cfg.ssm_chunk, s)
+    while s % q:          # ragged sequence (tests): largest divisor ≤ chunk
+        q -= 1
+    nc = s // q
+    rep = nh // g
+
+    xh = xh.reshape(bsz, nc, q, nh, hp)
+    da = da.reshape(bsz, nc, q, nh).astype(jnp.float32)
+    bm = b_mat.reshape(bsz, nc, q, g, n)
+    cm = c_mat.reshape(bsz, nc, q, g, n)
+
+    cs = jnp.cumsum(da, axis=2)                              # inclusive
+    # ---- intra-chunk (diagonal blocks) ---------------------------------
+    lmat = jnp.exp(_segsum(jnp.moveaxis(da, 3, 2)))          # (B,nc,nh,Q,Q)
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", cm, bm,
+                        preferred_element_type=jnp.float32)
+    scores = jnp.repeat(scores, rep, axis=2)                 # (B,nc,nh,Q,K)
+    att = (scores * lmat).astype(xh.dtype)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", att, xh)
+    # ---- chunk-final states ---------------------------------------------
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)               # (B,nc,Q,nh)
+    states = jnp.einsum(
+        "bcqgn,bcqhp,bcqh->bchpn",
+        bm.astype(jnp.float32), xh.astype(jnp.float32), decay_end,
+    )
+    total = jnp.exp(cs[:, :, -1, :])                         # (B,nc,nh)
+    # ---- inter-chunk recurrence (sequential scan over chunks) -----------
+    s0 = (jnp.zeros((bsz, nh, hp, n), jnp.float32)
+          if state0 is None else state0.astype(jnp.float32))
+
+    def step(carry, inp):
+        st_new, tot = inp                                    # (B,nh,hp,n),(B,nh)
+        prev = carry
+        nxt = prev * tot[..., None, None] + st_new
+        return nxt, prev
+
+    final, prev_states = lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # (B,nc,nh,hp,n)
+    # ---- inter-chunk contribution ----------------------------------------
+    y_off = jnp.einsum(
+        "bcqgn,bchpn,bcqh->bcqhp",
+        cm.astype(jnp.float32), prev_states, jnp.exp(cs),
+    ).astype(xh.dtype)
+    y = (y_diag + y_off).reshape(bsz, s, nh, hp)
+    return y, final
+
+
+def mamba_block(p, x, cfg, state=None):
+    """Full block: projections + conv + SSD + gated norm.  x (B,S,d).
+
+    Returns (y (B,S,d), carry) with carry = (ssm_state, conv tail states)
+    so prefill can hand off to decode.
+    """
+    bsz, s, _ = x.shape
+    di = p["w_x"].shape[1]
+    nh = p["A_log"].shape[0]
+    hp = di // nh
+    gn2 = p["w_bc"].shape[1]
+    g = cfg.ssm_groups
+    n = cfg.ssm_state
+
+    z = x @ p["w_z"]
+    xin = x @ p["w_x"]
+    bc = x @ p["w_bc"]
+    dt_raw = (x @ p["w_dt"]).astype(jnp.float32)
+    z = constrain(z, "batch", None, "model")
+    xin = constrain(xin, "batch", None, "model")
+
+    xc = jax.nn.silu(_causal_conv(xin, p["conv_x"], p["conv_x_b"]))
+    bcc = jax.nn.silu(_causal_conv(bc, p["conv_bc"], p["conv_bc_b"]))
+    b_mat = bcc[..., : gn2 // 2].reshape(bsz, s, g, n)
+    c_mat = bcc[..., gn2 // 2 :].reshape(bsz, s, g, n)
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])              # (B,S,nh)
+    a = -jnp.exp(p["A_log"])                                 # (nh,)
+    da = dt * a
+    xh = xc.reshape(bsz, s, nh, hp)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+
+    y, final_state = mamba_chunked(xdt, da, b_mat, c_mat, cfg, state)
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = _gated_norm(y.reshape(bsz, s, di), z, p["gate_norm"])
+    out = y @ p["w_out"]
+    conv_tail = (xin[:, s - (cfg.ssm_conv - 1):, :], bc[:, s - (cfg.ssm_conv - 1):, :])
+    return out, (final_state, conv_tail)
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode recurrence
+# ---------------------------------------------------------------------------
+
+def init_ssm_state(cfg, batch: int, n_layers: int, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    di = cfg.ssm_expand * d
+    nh = di // cfg.ssm_head_dim
+    hp = cfg.ssm_head_dim
+    gn = cfg.ssm_groups * cfg.ssm_state
+    kc = cfg.ssm_conv - 1
+    return {
+        "ssm": jnp.zeros((n_layers, batch, nh, hp, cfg.ssm_state), jnp.float32),
+        "conv_x": jnp.zeros((n_layers, batch, kc, di), jnp.dtype(cfg.dtype)),
+        "conv_bc": jnp.zeros((n_layers, batch, kc, 2 * gn), jnp.dtype(cfg.dtype)),
+    }
+
+
+def mamba_step(p, x, cfg, state):
+    """One-token step.  x (B,1,d); state {"ssm","conv_x","conv_bc"} slices."""
+    bsz = x.shape[0]
+    di = p["w_x"].shape[1]
+    nh = p["A_log"].shape[0]
+    hp = di // nh
+    g, n = cfg.ssm_groups, cfg.ssm_state
+
+    xt = x[:, 0]
+    z = xt @ p["w_z"]
+    xin = xt @ p["w_x"]
+    bc = xt @ p["w_bc"]
+    dt_raw = (xt @ p["w_dt"]).astype(jnp.float32)
+
+    # conv windows: state holds the previous (K-1) raw inputs
+    win_x = jnp.concatenate([state["conv_x"], xin[:, None, :]], axis=1)
+    win_bc = jnp.concatenate([state["conv_bc"], bc[:, None, :]], axis=1)
+    xc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", win_x, p["conv_x"]) + p["conv_x_b"]
+    )
+    bcc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", win_bc, p["conv_bc"]) + p["conv_bc_b"]
+    )
+    b_t = bcc[:, : g * n].reshape(bsz, g, n)
+    c_t = bcc[:, g * n :].reshape(bsz, g, n)
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])              # (B,nh)
+    a = -jnp.exp(p["A_log"])
+    da_t = jnp.exp(dt * a)                                   # (B,nh)
+    xh = xc.reshape(bsz, nh, hp).astype(jnp.float32)
+    rep = nh // g
+    b_h = jnp.repeat(b_t, rep, axis=1).astype(jnp.float32)   # (B,nh,n)
+    c_h = jnp.repeat(c_t, rep, axis=1).astype(jnp.float32)
+
+    ssm = state["ssm"] * da_t[..., None, None] + (
+        dt[..., None, None] * xh[..., :, None] * b_h[..., None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, c_h) + xh * p["D"][None, :, None]
+    y = _gated_norm(y.reshape(bsz, 1, di).astype(x.dtype), z[:, None], p["gate_norm"])
+    out = (y @ p["w_out"])
+    new_state = {
+        "ssm": ssm,
+        "conv_x": win_x[:, 1:],
+        "conv_bc": win_bc[:, 1:],
+    }
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 LM (embed → scanned blocks → head)
+# ---------------------------------------------------------------------------
+
+def init(key, cfg):
+    k_emb, k_layers = jax.random.split(key)
+
+    def one(k):
+        kn, kb = jax.random.split(k)
+        return {
+            "norm": L.init_norm(cfg, cfg.d_model),
+            "block": init_mamba_block(kb, cfg),
+        }
+
+    layers = jax.vmap(one)(jax.random.split(k_layers, cfg.n_layers))
+    return {
+        "embed": L.init_embedding(k_emb, cfg),
+        "layers": layers,
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def forward(params, tokens, cfg, positions=None):
+    del positions
+    x = L.embed(params["embed"], tokens, cfg)
+
+    def body(h, lp):
+        y, _ = mamba_block(lp["block"], L.apply_norm(lp["norm"], h, cfg), cfg)
+        h = constrain(h + y, "batch", None, None)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=L.remat_policy())
+    x, _ = L.scan_or_unroll(body, x, params["layers"], cfg)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return L.unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg):
+    logits = forward(params, batch["tokens"], cfg)
+    return L.cross_entropy(logits, batch["labels"])
+
+
+def init_decode_cache(cfg, batch: int, s_max: int, dtype=None):
+    del s_max, dtype
+    st = init_ssm_state(cfg, batch, cfg.n_layers)
+    return {"state": st, "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, tokens, cfg, positions=None, s_max: int | None = None):
+    """Forward pass that also returns the decode-ready recurrent state."""
+    del positions, s_max
+    bsz, s = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+
+    def body(h, lp):
+        y, (st, (cx, cbc)) = mamba_block(
+            lp["block"], L.apply_norm(lp["norm"], h, cfg), cfg
+        )
+        h = constrain(h + y, "batch", None, None)
+        return h, {"ssm": st, "conv_x": cx, "conv_bc": cbc}
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=L.remat_policy())
+    x, states = L.scan_or_unroll(body, x, params["layers"], cfg)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, {"state": states, "len": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(params, cache, token, cfg):
+    x = L.embed(params["embed"], token, cfg)
+
+    def body(h, slices):
+        lp, st = slices
+        y, new_st = mamba_step(lp["block"], L.apply_norm(lp["norm"], h, cfg), cfg, st)
+        return h + y, new_st
+
+    x, new_states = L.scan_or_unroll(body, x, (params["layers"], cache["state"]), cfg)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"state": new_states, "len": cache["len"] + 1}

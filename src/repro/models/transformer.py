@@ -1,0 +1,336 @@
+"""Decoder-only transformer LM covering the dense / MoE / VLM families.
+
+Layers are stacked and scanned (``lax.scan``) so the lowered HLO contains one
+layer body regardless of depth — essential for compiling the 40-cell dry-run
+matrix on this 1-core container, and the natural remat unit.  Alternating
+patterns (gemma2 local/global) scan over a repeating *unit* of ``period``
+sublayers, each with its own stacked params and static kind.
+
+Decode caches are stacked along the unit axis and threaded through the same
+scan: ``cache = {"kv": tuple_per_position({"k","v"}), "len": ()}`` where k/v
+are (n_units, B, KH, T, hd).  Sliding-window sublayers use a ring buffer of
+T = window slots (RoPE is applied at write time with absolute positions, so
+ring rotation is transparent).
+
+Entry points: :func:`init`, :func:`forward`, :func:`loss_fn`,
+:func:`prefill`, :func:`decode_step`, :func:`init_decode_cache`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from . import moe as M
+from .sharding import constrain
+
+__all__ = [
+    "unit_pattern", "init", "forward", "loss_fn",
+    "prefill", "decode_step", "init_decode_cache", "param_shardings",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SubKind:
+    """Static description of one sublayer in the repeating unit."""
+
+    window: int | None
+    moe: bool
+
+
+def unit_pattern(cfg) -> list[SubKind]:
+    """The repeating sublayer pattern (period divides n_layers)."""
+    if cfg.local_global:
+        # gemma2: sliding-window layer followed by a global layer
+        return [SubKind(cfg.sliding_window, cfg.n_experts > 0),
+                SubKind(None, cfg.n_experts > 0)]
+    return [SubKind(cfg.sliding_window, cfg.n_experts > 0)]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(key, cfg, kind: SubKind):
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg),
+        "mlp_norm": L.init_norm(cfg, cfg.d_model),
+    }
+    if kind.moe:
+        p["moe"] = M.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[2], cfg)
+    if cfg.post_norms:
+        p["post_attn_norm"] = L.init_norm(cfg, cfg.d_model)
+        p["post_mlp_norm"] = L.init_norm(cfg, cfg.d_model)
+    return p
+
+
+def init(key, cfg):
+    """Params with per-sublayer-position stacks of shape (n_units, ...)."""
+    pattern = unit_pattern(cfg)
+    period = len(pattern)
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    n_units = cfg.n_layers // period
+    k_emb, k_layers = jax.random.split(key)
+
+    def one_unit(k):
+        ks = jax.random.split(k, period)
+        return tuple(
+            _init_sublayer(ks[i], cfg, kind) for i, kind in enumerate(pattern)
+        )
+
+    units = jax.vmap(one_unit)(jax.random.split(k_layers, n_units))
+    return {
+        "embed": L.init_embedding(k_emb, cfg),
+        "units": units,                      # tuple(period) of stacked dicts
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _positions_default(cfg, b, s, offset=0):
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+def _cos_sin(cfg, positions):
+    return L.rope_cos_sin(
+        positions, cfg.d_head, cfg.rope_theta, cfg.mrope_sections
+    )
+
+
+def _sublayer(p, x, cfg, kind: SubKind, cos_sin, cache):
+    """One attention+MLP sublayer. Returns (x, aux) — aux per L.attention."""
+    if cfg.fsdp:
+        from .partitioning import gather_layer_params
+        p = gather_layer_params(p)
+    h = L.apply_norm(p["attn_norm"], x, cfg)
+    h, aux = L.attention(
+        p["attn"], h, cfg, cos_sin=cos_sin, causal=True,
+        window=kind.window, cache=cache,
+    )
+    if cfg.post_norms:
+        h = L.apply_norm(p["post_attn_norm"], h, cfg)
+    x = x + h
+    h = L.apply_norm(p["mlp_norm"], x, cfg)
+    h = M.moe(p["moe"], h, cfg) if kind.moe else L.mlp(p["mlp"], h, cfg)
+    if cfg.post_norms:
+        h = L.apply_norm(p["post_mlp_norm"], h, cfg)
+    x = x + h
+    x = constrain(x, *L.residual_axes(cfg))
+    return x, aux
+
+
+def _remat(body, cfg):
+    if not cfg.remat:
+        return body
+    return jax.checkpoint(body, policy=L.remat_policy())
+
+
+def forward(params, tokens, cfg, positions=None):
+    """tokens (B, S) → logits (B, S, V).  Training/eval forward."""
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    pos = positions if positions is not None else _positions_default(cfg, b, s)
+    cos_sin = _cos_sin(cfg, pos)
+    pattern = unit_pattern(cfg)
+
+    def body(h, unit_params):
+        for i, kind in enumerate(pattern):
+            h, _ = _sublayer(unit_params[i], h, cfg, kind, cos_sin, None)
+        return h, None
+
+    x, _ = L.scan_or_unroll(_remat(body, cfg), x, params["units"], cfg)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return L.unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg):
+    logits = forward(params, batch["tokens"], cfg, batch.get("positions"))
+    return L.cross_entropy(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with stacked caches
+# ---------------------------------------------------------------------------
+
+def _cache_sizes(cfg, s_max):
+    """Per-sublayer-position cache length (ring = window for local layers)."""
+    return [
+        min(k.window, s_max) if k.window is not None else s_max
+        for k in unit_pattern(cfg)
+    ]
+
+
+def _shard_kv(kv):
+    """KV caches: batch over ('pod','data'), heads over 'model' (time dim
+    when GQA heads don't divide the axis); rank-aware for (n_units, B, KH,
+    T, hd) stacks vs (B, KH, T, hd) per-layer slices."""
+    from .sharding import constrain_kv
+
+    def spec(a):
+        off = 1 if a.ndim == 5 else 0
+        return constrain_kv(
+            a, head_axis=off + 1, time_axis=off + 2, batch_dim=off
+        )
+
+    return {"k": spec(kv["k"]), "v": spec(kv["v"])}
+
+
+def init_decode_cache(cfg, batch: int, s_max: int, dtype=None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    pattern = unit_pattern(cfg)
+    n_units = cfg.n_layers // len(pattern)
+    kh, hd = cfg.n_kv_heads, cfg.d_head
+    kv = tuple(
+        _shard_kv({
+            "k": jnp.zeros((n_units, batch, kh, t, hd), dt),
+            "v": jnp.zeros((n_units, batch, kh, t, hd), dt),
+        })
+        for t in _cache_sizes(cfg, s_max)
+    )
+    return {"kv": kv, "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, tokens, cfg, positions=None, s_max: int | None = None):
+    """Full forward that also materializes the KV caches (inference-prefill).
+
+    Returns (last-token logits (B, V), cache).  KV tensors come straight out
+    of the layer scan (no recompute, no per-token loop).
+    """
+    b, s = tokens.shape
+    s_max = s_max or s
+    x = L.embed(params["embed"], tokens, cfg)
+    pos = positions if positions is not None else _positions_default(cfg, b, s)
+    cos_sin = _cos_sin(cfg, pos)
+    pattern = unit_pattern(cfg)
+    sizes = _cache_sizes(cfg, s_max)
+
+    def body(h, unit_params):
+        kvs = []
+        for i, kind in enumerate(pattern):
+            h, (k, v) = _sublayer(unit_params[i], h, cfg, kind, cos_sin, None)
+            t = min(sizes[i], s)
+            pad = sizes[i] - t
+            k = jnp.moveaxis(k[:, s - t:], 1, 2)     # (B, KH, t, hd)
+            v = jnp.moveaxis(v[:, s - t:], 1, 2)
+            if pad:
+                k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            elif kind.window is not None and t == sizes[i]:
+                # ring alignment: decode writes token p at slot p % window,
+                # so position s-t+j must sit at slot (s-t+j) % t
+                k = jnp.roll(k, (s - t) % t, axis=2)
+                v = jnp.roll(v, (s - t) % t, axis=2)
+            kvs.append(_shard_kv({"k": k, "v": v}))
+        return h, tuple(kvs)
+
+    x, kv_stk = L.scan_or_unroll(_remat(body, cfg), x, params["units"], cfg)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    cache = {
+        "kv": tuple(_shard_kv(kv) for kv in kv_stk),
+        "len": jnp.asarray(s, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, cache, token, cfg):
+    """One new token (B, 1) against the cache → (logits (B, V), cache).
+
+    Note on ring caches: slots are written at ``len % window`` with RoPE
+    already applied at absolute positions, so no rotation is needed.
+    After prefill at s == window the ring restarts at slot ``len % window``,
+    overwriting the oldest in-window entry — exact sliding-window semantics.
+    """
+    b = token.shape[0]
+    x = L.embed(params["embed"], token, cfg)
+    pos_len = cache["len"]
+    pos = _positions_default(cfg, b, 1, offset=pos_len)
+    cos_sin = _cos_sin(cfg, pos)
+    pattern = unit_pattern(cfg)
+
+    def body(h, slices):
+        unit_params, unit_kv = slices
+        new_kv = []
+        for i, kind in enumerate(pattern):
+            sub_cache = {
+                "k": unit_kv[i]["k"], "v": unit_kv[i]["v"], "len": pos_len,
+            }
+            h, nc = _sublayer(unit_params[i], h, cfg, kind, cos_sin, sub_cache)
+            new_kv.append(_shard_kv({"k": nc["k"], "v": nc["v"]}))
+        return h, tuple(new_kv)
+
+    x, new_kv = L.scan_or_unroll(body, x, (params["units"], cache["kv"]), cfg)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"kv": new_kv, "len": pos_len + 1}
+
+
+# ---------------------------------------------------------------------------
+# Param shardings (TP over "model", replicated over batch axes)
+# ---------------------------------------------------------------------------
+
+def param_shardings(params_shape, cfg, mesh=None, *, gather_axis=None):
+    """PartitionSpec pytree for the param tree.
+
+    TP rule-of-thumb: shard the biggest contraction-free dim over "model" —
+    heads for attention, ff for MLPs, vocab for embeddings, expert-ff for
+    MoE.  ``gather_axis`` (e.g. "data") additionally spreads every TP'd dim
+    over (gather_axis, "model") — the weight-gathered serving layout for
+    models whose bf16 weights exceed model-axis HBM (DESIGN.md §6).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    tp = "model" if gather_axis is None else (gather_axis, "model")
+
+    def spec_for(path: str, leaf) -> P:
+        nd = len(leaf.shape)
+        stacked = path.startswith("units/")
+        pre = (None,) if stacked else ()
+
+        def mk(*axes):
+            axes = axes + (None,) * (nd - len(pre) - len(axes))
+            return P(*(pre + axes))
+
+        name = path.rsplit("/", 1)[-1]
+        if name in ("wq", "wk", "wv"):
+            return mk(None, tp)
+        if name == "wo":
+            return mk(tp, None)
+        if name in ("bq", "bk", "bv"):
+            return mk(tp)
+        if name in ("wg", "wu", "w1"):
+            return mk(None, tp)
+        if name in ("wd", "w2"):
+            return mk(tp, None)
+        if name in ("we_gate", "we_up"):          # (E, d, ff)
+            return mk(None, None, tp)
+        if name == "we_down":                     # (E, ff, d)
+            return mk(None, tp, None)
+        if name == "tok":
+            return P(tp, None)
+        if name == "out":
+            return P(None, tp)
+        return mk()
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}" if path else k) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(walk(v, f"{path}/{i}") for i, v in enumerate(tree))
+        return spec_for(path, tree)
+
+    return walk(params_shape, "")

@@ -1,0 +1,7 @@
+"""Optimizers: AdamW (+ZeRO-1), PowerSGD-TSQR gradient compression,
+low-rank (GaLore-style) with distributed-CQR2 bases, QR-orthogonalized
+momentum.  The latter three embed the paper's distributed tall-skinny QR
+in the training loop (DESIGN.md §3)."""
+from . import adamw, lowrank, orthosgd, powersgd
+
+__all__ = ["adamw", "lowrank", "orthosgd", "powersgd"]

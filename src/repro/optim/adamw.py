@@ -1,0 +1,141 @@
+"""AdamW with ZeRO-1 optimizer-state sharding.
+
+Pure-pytree implementation (no optax dependency in this offline container).
+Optimizer state (m, v, f32 master copy optional) carries its own sharding
+specs: parameter sharding *plus* the batch axes spread over every large
+tensor's first shardable dim — the ZeRO-1 layout that keeps the 12
+bytes/param of Adam state off the replicated-memory budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["AdamWConfig", "init", "update", "state_shardings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup) / jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0, 1
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {
+        "m": zeros,
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def update(cfg: AdamWConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gn, "lr": lr,
+    }
+
+
+def state_shardings(param_specs_tree, params_struct=None, mesh=None, *,
+                    zero1_axis=None):
+    """m/v inherit the param spec; with ``zero1_axis`` (e.g. ('data',) or
+    ('pod','data')), the largest *divisible* unsharded dim of every tensor
+    is additionally spread over those axes (ZeRO-1).  Shape-aware: pjit
+    argument shardings require exact divisibility, so dims that don't
+    divide (layer stacks, odd vocab) are left alone."""
+
+    axes = (
+        (zero1_axis,) if isinstance(zero1_axis, str) else tuple(zero1_axis or ())
+    )
+    div = 1
+    if mesh is not None:
+        for a in axes:
+            div *= mesh.shape[a]
+
+    def zero1(spec, struct=None):
+        if not axes or not isinstance(spec, P):
+            return spec
+        parts = list(spec)
+        parts += [None] * ((len(struct.shape) if struct is not None else 0) - len(parts))
+        # a mesh axis may appear at most once per spec (weight-gathered
+        # layouts already consume 'data')
+        used: set[str] = set()
+        for ax in parts:
+            for name in ((ax,) if isinstance(ax, str) else (ax or ())):
+                used.add(name)
+        free = tuple(a for a in axes if a not in used)
+        if not free:
+            return P(*parts)
+        fdiv = 1
+        if mesh is not None:
+            for a in free:
+                fdiv *= mesh.shape[a]
+        cand = [
+            i for i, ax in enumerate(parts)
+            if ax is None and (
+                struct is None
+                or (struct.shape[i] % fdiv == 0 and struct.shape[i] >= fdiv)
+            )
+        ]
+        if not cand:
+            return P(*parts)
+        best = max(cand, key=lambda i: struct.shape[i] if struct is not None else i)
+        parts[best] = free if len(free) > 1 else free[0]
+        return P(*parts)
+
+    is_leaf = lambda x: isinstance(x, P) or x is None
+    if params_struct is None:
+        mv = jax.tree.map(zero1, param_specs_tree, is_leaf=is_leaf)
+    else:
+        mv = jax.tree.map(zero1, param_specs_tree, params_struct, is_leaf=is_leaf)
+    return {"m": mv, "v": mv, "step": P()}

@@ -1,0 +1,71 @@
+"""QR-orthogonalized momentum ("Muon-flavoured" via QR, not Newton-Schulz).
+
+For each 2D parameter: momentum M ← β·M + G; the update direction is the
+orthonormal factor Q of M's tall orientation, computed with the same
+distributed CholeskyQR2 the low-rank optimizer uses (Gram contraction over
+the sharded dim → XLA all-reduce; the paper's butterfly is the shard_map
+path).  1D params fall back to SGD+momentum.
+
+This is the orthogonalized-momentum family (Tuddenham et al.; Muon uses a
+Newton-Schulz polar iterate instead of QR — QR yields Q from M = QR, which
+shares the column space; DESIGN.md §3.2 records the distinction).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .lowrank import gram_cqr2_q
+
+__all__ = ["OrthoSGDConfig", "init", "update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OrthoSGDConfig:
+    lr: float = 0.02
+    momentum: float = 0.95
+    nesterov: bool = True
+    weight_decay: float = 0.0
+
+
+def init(params):
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _orth_update(m):
+    tall = m.shape[-2] >= m.shape[-1]
+    x = m if tall else jnp.swapaxes(m, -1, -2)
+    q = gram_cqr2_q(x)
+    q = q if tall else jnp.swapaxes(q, -1, -2)
+    # Muon-style shape rescale so update RMS matches across aspect ratios
+    out_scale = jnp.sqrt(jnp.maximum(m.shape[-2], m.shape[-1]) / m.shape[-1])
+    return q * out_scale
+
+
+def update(cfg: OrthoSGDConfig, params, grads, state):
+    step = state["step"] + 1
+
+    def one(p, g, m):
+        gf = g.astype(jnp.float32)
+        m_ = cfg.momentum * m + gf
+        eff = gf + cfg.momentum * m_ if cfg.nesterov else m_
+        if p.ndim >= 2 and min(p.shape[-2:]) >= 2:
+            d = _orth_update(eff)
+        else:
+            d = eff
+        newp = p.astype(jnp.float32) - cfg.lr * (d + cfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m_
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    out = [one(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    return (
+        tdef.unflatten([o[0] for o in out]),
+        {"m": tdef.unflatten([o[1] for o in out]), "step": step},
+    )

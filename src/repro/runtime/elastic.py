@@ -1,0 +1,50 @@
+"""Elastic mesh management: SHRINK / REBUILD at the device level.
+
+``shrink_mesh`` halves the data axis (power-of-two widths keep the TSQR
+butterfly well-formed and the collectives balanced) and returns a mesh over
+the surviving device subset; state is re-sharded by the trainer via
+device_put.  ``rebuild_mesh`` re-creates the original topology once
+replacement hardware is available (REBUILD semantics).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import AxisType, Mesh
+
+__all__ = ["shrink_mesh", "rebuild_mesh"]
+
+
+def _axis_index(mesh: Mesh, name: str) -> int:
+    return mesh.axis_names.index(name)
+
+
+def shrink_mesh(mesh: Mesh, drop_replicas: int = 1) -> Mesh | None:
+    """Return a mesh with the data axis halved (dropping ≥ drop_replicas),
+    or None if no further shrink is possible."""
+    if "data" not in mesh.axis_names:
+        return None
+    ax = _axis_index(mesh, "data")
+    d = mesh.devices.shape[ax]
+    new_d = d // 2
+    while new_d > 0 and d - new_d < drop_replicas:
+        new_d //= 2
+    if new_d < 1:
+        return None
+    take = [slice(None)] * mesh.devices.ndim
+    take[ax] = slice(0, new_d)
+    devs = mesh.devices[tuple(take)]
+    return Mesh(
+        devs, mesh.axis_names,
+        axis_types=(AxisType.Auto,) * len(mesh.axis_names),
+    )
+
+
+def rebuild_mesh(template_mesh: Mesh) -> Mesh:
+    """REBUILD: re-instantiate the full original topology (replacement
+    devices joined).  On real fleets this waits for the scheduler; here the
+    devices never physically left."""
+    return Mesh(
+        template_mesh.devices, template_mesh.axis_names,
+        axis_types=(AxisType.Auto,) * len(template_mesh.axis_names),
+    )

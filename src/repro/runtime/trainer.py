@@ -1,0 +1,330 @@
+"""Fault-tolerant training runtime.
+
+Exposes the paper's three failure semantics at training-step granularity
+(DESIGN.md §2 — the step boundary is where a TPU fleet adjudicates health):
+
+  * ``rebuild``  (Self-Healing / REBUILD): the lost replica's state is
+    restored — from the in-memory buddy store when a replica exists
+    (diskless path, zero I/O), else from the latest disk checkpoint — and
+    the step is retried at full width.
+  * ``shrink``   (Replace / SHRINK): the mesh is rebuilt without the lost
+    replicas' devices; state is resharded onto the smaller mesh and the
+    run continues at reduced width (elastic scaling).
+  * ``blank``    (Redundant / BLANK): the dead replica's rows are masked
+    out of the loss (weight 0) and the gradient rescales over survivors;
+    width is restored when the replica returns.
+
+Failures are injected via a schedule of :class:`FaultEvent` — this CPU
+container has no real failing hosts, so the runtime consumes simulated
+health transitions exactly where a real deployment consumes its health
+service.  Straggler mitigation: a step-time EMA flags outliers; in
+``blank`` mode flagged replicas are masked for the step (drop-straggler
+gradient), otherwise they are only logged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.replicated import BuddyStore
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.models import api
+from repro.models.partitioning import param_shardings
+from repro.models.sharding import batch_axes, mesh_context
+from repro.optim import adamw
+
+__all__ = ["TrainerConfig", "FaultEvent", "Trainer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    step: int
+    kind: str              # "fail" | "recover" | "straggle"
+    replica: int           # data-parallel replica index
+    duration: int = 1      # steps (straggle)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    steps: int = 50
+    log_every: int = 10
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 2
+    microbatches: int = 1
+    on_failure: str = "blank"          # blank | shrink | rebuild
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    straggler_factor: float = 3.0
+    drop_stragglers: bool = True
+    buddy_levels: int = 1              # 2^levels in-memory replicas
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model_cfg, tcfg: TrainerConfig, mesh, data_cfg: DataConfig,
+                 opt_cfg: adamw.AdamWConfig | None = None):
+        self.model_cfg = model_cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.data_cfg = data_cfg
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig(lr=tcfg.lr, total_steps=tcfg.steps)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
+        self.n_replicas = self._mesh_replicas(mesh)
+        self.buddies = BuddyStore(max(2, 1 << (self.n_replicas - 1).bit_length())) \
+            if self.n_replicas > 1 else None
+        self.alive = np.ones(self.n_replicas, dtype=bool)
+        self.straggling = np.zeros(self.n_replicas, dtype=np.int64)
+        self.metrics_log: list[dict] = []
+        self.events_log: list[str] = []
+        self._build(mesh)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _mesh_replicas(mesh):
+        n = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                n *= mesh.shape[a]
+        return n
+
+    def _build(self, mesh):
+        """(Re)create shardings + jitted step for the current mesh."""
+        self.mesh = mesh
+        cfg = self.model_cfg
+        with mesh_context(mesh):
+            from repro.launch.shardings import sanitize_specs
+
+            pspecs = api.param_specs(cfg)
+            self.param_spec_tree = sanitize_specs(
+                param_shardings(pspecs), pspecs, mesh
+            )
+            self.param_shardings = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), self.param_spec_tree
+            )
+            opt_specs = adamw.state_shardings(
+                self.param_spec_tree, pspecs, mesh, zero1_axis=batch_axes(mesh)
+            )
+            self.opt_shardings = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), opt_specs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            ba = batch_axes(mesh)
+            self.batch_sharding = {
+                "tokens": NamedSharding(mesh, P(ba)),
+                "labels": NamedSharding(mesh, P(ba)),
+                "loss_weight": NamedSharding(mesh, P(ba)),
+            }
+            if cfg.family == "encdec":
+                self.batch_sharding["frames"] = NamedSharding(mesh, P(ba))
+            if cfg.family == "vlm":
+                self.batch_sharding["positions"] = NamedSharding(mesh, P(None, ba))
+
+        tcfg, opt_cfg = self.tcfg, self.opt_cfg
+
+        def step_fn(params, opt_state, batch):
+            def loss_over_micro(p):
+                if tcfg.microbatches == 1:
+                    return api.loss_fn(p, batch, cfg)
+                splits = jax.tree.map(
+                    lambda x: x.reshape((tcfg.microbatches,
+                                         x.shape[0] // tcfg.microbatches) + x.shape[1:]),
+                    batch,
+                )
+
+                def micro(acc, mb):
+                    return acc + api.loss_fn(p, mb, cfg) / tcfg.microbatches, None
+
+                total, _ = jax.lax.scan(micro, 0.0, splits)
+                return total
+
+            loss, grads = jax.value_and_grad(loss_over_micro)(params)
+            new_params, new_opt, om = adamw.update(opt_cfg, params, grads, opt_state)
+            return new_params, new_opt, {"loss": loss, **om}
+
+        with mesh_context(mesh):
+            self.step_fn = jax.jit(
+                step_fn,
+                in_shardings=(self.param_shardings, self.opt_shardings,
+                              self.batch_sharding),
+                out_shardings=(self.param_shardings, self.opt_shardings, None),
+                donate_argnums=(0, 1),
+            )
+
+    # ------------------------------------------------------------------
+    def init_state(self, key=None):
+        key = key if key is not None else jax.random.key(self.tcfg.seed)
+        with mesh_context(self.mesh):
+            params = jax.jit(
+                partial(api.init, cfg=self.model_cfg),
+                out_shardings=self.param_shardings,
+            )(key)
+            opt_state = jax.jit(
+                adamw.init, out_shardings=self.opt_shardings
+            )(params)
+        return params, opt_state
+
+    # ------------------------------------------------------------------
+    def _mask_for(self, rows: int) -> np.ndarray:
+        """Per-row loss weight from replica health (BLANK semantics)."""
+        w = np.ones(rows, np.float32)
+        per = rows // self.n_replicas
+        dead = ~self.alive
+        if self.tcfg.drop_stragglers:
+            dead = dead | (self.straggling > 0)
+        for r in np.nonzero(dead)[0]:
+            w[r * per : (r + 1) * per] = 0.0
+        alive_frac = max(w.mean(), 1e-6)
+        return w / alive_frac
+
+    def _device_batch(self, host_batch):
+        rows = host_batch["tokens"].shape[0]
+        hb = dict(host_batch, loss_weight=self._mask_for(rows))
+        return {
+            k: jax.device_put(v, self.batch_sharding[k]) for k, v in hb.items()
+        }
+
+    # ------------------------------------------------------------------
+    def run(self, params, opt_state, *, start_step: int = 0,
+            fault_schedule: tuple[FaultEvent, ...] = (),
+            on_step: Callable | None = None):
+        corpus = SyntheticCorpus(self.data_cfg)
+        events = sorted(fault_schedule, key=lambda e: e.step)
+        fired: set[int] = set()
+        ema = None
+        step = start_step
+        while step < self.tcfg.steps:
+            # --- consume health transitions for this step (once each:
+            # after a REBUILD rollback the step counter passes the event's
+            # step again — re-firing it would loop forever) ---------------
+            for i, ev in enumerate(events):
+                if ev.step == step and i not in fired:
+                    fired.add(i)
+                    params, opt_state, step = self._handle_event(
+                        ev, params, opt_state, step
+                    )
+            t0 = time.perf_counter()
+            batch = self._device_batch(corpus.batch(step))
+            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            # --- straggler detector --------------------------------------
+            ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+            slow = dt > self.tcfg.straggler_factor * ema
+            if slow:
+                self.events_log.append(f"step {step}: straggler ({dt:.3f}s vs {ema:.3f}s)")
+            self.straggling = np.maximum(self.straggling - 1, 0)
+            metrics.update(step=step, wall=dt)
+            self.metrics_log.append(metrics)
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps - 1:
+                print(f"[train] step={step} loss={metrics['loss']:.4f} "
+                      f"gnorm={metrics['grad_norm']:.3f} wall={dt:.2f}s")
+            if self.tcfg.ckpt_every and step and step % self.tcfg.ckpt_every == 0:
+                self._checkpoint(step, params, opt_state)
+            if on_step:
+                on_step(step, params, metrics)
+            step += 1
+        self.ckpt.wait()
+        return params, opt_state
+
+    # ------------------------------------------------------------------
+    def _checkpoint(self, step, params, opt_state):
+        self.ckpt.save(step, {"params": params, "opt": opt_state},
+                       meta={"arch": self.model_cfg.name}, block=False)
+        if self.buddies is not None:
+            # ZeRO-1 shard ownership: replica r owns its optimizer slice.
+            # Host-simulated diskless copy: one logical shard per replica.
+            shards = {
+                r: {"step": step}
+                for r in range(self.n_replicas) if self.alive[r]
+            }
+            self.buddies.checkpoint(step, shards, levels=self.tcfg.buddy_levels)
+        self.events_log.append(f"step {step}: checkpoint")
+
+    def _handle_event(self, ev: FaultEvent, params, opt_state, step):
+        if ev.kind == "straggle":
+            self.straggling[ev.replica] = ev.duration
+            self.events_log.append(f"step {step}: replica {ev.replica} straggling")
+            return params, opt_state, step
+        if ev.kind == "recover":
+            self.alive[ev.replica] = True
+            if self.buddies is not None:
+                self.buddies.respawn(ev.replica)
+            self.events_log.append(f"step {step}: replica {ev.replica} recovered")
+            return params, opt_state, step
+        assert ev.kind == "fail"
+        self.alive[ev.replica] = False
+        if self.buddies is not None:
+            self.buddies.fail(ev.replica)
+        mode = self.tcfg.on_failure
+        self.events_log.append(
+            f"step {step}: replica {ev.replica} FAILED → {mode}"
+        )
+        if mode == "blank":
+            return params, opt_state, step          # masked out by _mask_for
+        if mode == "rebuild":
+            # Diskless first: a live buddy replica of the lost shard means
+            # no rollback at all (the paper's Self-Healing semantics);
+            # otherwise restore the latest disk checkpoint.
+            restored = None
+            if self.buddies is not None:
+                try:
+                    ck_step, _ = self.buddies.recover(ev.replica)
+                    restored = step  # in-memory state is current: no rollback
+                    self.events_log.append(
+                        f"step {step}: replica {ev.replica} restored from buddy "
+                        f"(ckpt step {ck_step}, no rollback)"
+                    )
+                except KeyError:
+                    pass
+            if restored is None and self.ckpt.latest_step() is not None:
+                self.ckpt.wait()
+                tpl = jax.tree.map(np.asarray, jax.device_get(
+                    {"params": params, "opt": opt_state}))
+                state, meta = self.ckpt.restore(tpl)
+                with mesh_context(self.mesh):
+                    params = jax.device_put(state["params"], self.param_shardings)
+                    opt_state = jax.device_put(state["opt"], self.opt_shardings)
+                step = int(meta["step"]) + 1
+                self.events_log.append(
+                    f"rollback to checkpoint step {meta['step']}"
+                )
+            self.alive[ev.replica] = True            # respawned
+            if self.buddies is not None:
+                self.buddies.respawn(ev.replica)
+            return params, opt_state, step
+        if mode == "shrink":
+            params, opt_state = self._shrink(params, opt_state, ev.replica)
+            return params, opt_state, step
+        raise ValueError(mode)
+
+    def _shrink(self, params, opt_state, dead_replica: int):
+        """Elastic SHRINK: rebuild the mesh without the dead replica's
+        devices and reshard live state onto it."""
+        from repro.runtime.elastic import shrink_mesh
+
+        new_mesh = shrink_mesh(self.mesh, drop_replicas=1)
+        if new_mesh is None:
+            self.events_log.append("shrink impossible (data axis exhausted) — blanking")
+            return params, opt_state
+        host = jax.device_get({"params": params, "opt": opt_state})
+        self.n_replicas = self._mesh_replicas(new_mesh)
+        self.alive = np.ones(self.n_replicas, dtype=bool)
+        self.straggling = np.zeros(self.n_replicas, dtype=np.int64)
+        self._build(new_mesh)
+        with mesh_context(new_mesh):
+            params = jax.device_put(host["params"], self.param_shardings)
+            opt_state = jax.device_put(host["opt"], self.opt_shardings)
+        self.events_log.append(
+            f"elastic shrink → mesh {dict(zip(new_mesh.axis_names, new_mesh.devices.shape))}"
+        )
+        return params, opt_state

@@ -1,0 +1,116 @@
+"""Checkpoint manager (atomicity, keep-k, async) and the diskless buddy
+store (replica placement math shared with the butterfly — 2^s copies)."""
+import os
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager, flatten_tree, unflatten_like
+from repro.checkpoint.replicated import BuddyStore
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(6.0).reshape(2, 3), "none": None},
+        "opt": ({"m": jnp.ones((4,))}, {"v": jnp.zeros((2,))}),
+        "step": jnp.asarray(17),
+    }
+
+
+def test_flatten_roundtrip():
+    t = _tree()
+    flat = flatten_tree(t)
+    back = unflatten_like(t, flat)
+    assert back["params"]["none"] is None
+    np.testing.assert_array_equal(back["params"]["w"], np.asarray(t["params"]["w"]))
+    assert back["step"] == 17
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    mgr.save(10, t)
+    restored, meta = mgr.restore(t)
+    assert meta["step"] == 10
+    np.testing.assert_array_equal(restored["opt"][0]["m"], np.ones((4,)))
+
+
+def test_keep_k_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t)
+    assert mgr.steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    t = _tree()
+    th = mgr.save(5, t, block=False)
+    assert isinstance(th, threading.Thread)
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    """A crash mid-write (tmp dir, no manifest) must not be restorable."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    os.makedirs(tmp_path / "step_00000009")      # no MANIFEST.json
+    os.makedirs(tmp_path / "step_00000008.tmp")
+    assert mgr.steps() == []
+    mgr.save(3, _tree())
+    assert mgr.latest_step() == 3
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, {"w": jnp.ones((2, 2))})
+    with pytest.raises(AssertionError):
+        mgr.restore({"w": jnp.ones((3, 3))})
+
+
+# ---------------------------------------------------------------------------
+# Diskless buddy store
+# ---------------------------------------------------------------------------
+
+def test_buddy_replication_counts():
+    bs = BuddyStore(8)
+    shards = {r: {"r": r} for r in range(8)}
+    bs.checkpoint(1, shards, levels=2)          # 2^2 = 4 copies
+    for r in range(8):
+        assert bs.copies(r) == 4
+
+
+def test_buddy_recover_within_tolerance():
+    bs = BuddyStore(8)
+    bs.checkpoint(1, {r: {"val": r * 10} for r in range(8)}, levels=2)
+    # kill 3 ranks = 2^2 - 1 — every shard must still be recoverable
+    for dead in (0, 3, 5):
+        bs.fail(dead)
+    for r in range(8):
+        step, state = bs.recover(r)
+        assert step == 1 and state["val"] == r * 10
+
+
+def test_buddy_tolerance_is_tight():
+    bs = BuddyStore(4)
+    bs.checkpoint(1, {r: {"v": r} for r in range(4)}, levels=1)  # 2 copies
+    bs.fail(0)
+    bs.fail(1)          # 2 failures > 2^1 - 1: shard 0 lived on {0,1} only
+    with pytest.raises(KeyError):
+        bs.recover(0)
+    # but shard 2's copies {2,3} are intact
+    assert bs.recover(2)[1] == {"v": 2}
+
+
+def test_buddy_respawn_rejoins():
+    bs = BuddyStore(4)
+    bs.checkpoint(1, {r: {"v": r} for r in range(4)}, levels=1)
+    bs.fail(2)
+    step, state = bs.recover(2)
+    bs.respawn(2)
+    bs.checkpoint(2, {2: state}, levels=1)
+    assert bs.copies(2) >= 2

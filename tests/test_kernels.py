@@ -1,0 +1,96 @@
+"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes
+(interpret=True executes the Pallas kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(64, 4), (257, 7), (1024, 128), (500, 130), (2048, 64)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dt):
+    # blocked accumulation reorders sums vs the single-matmul oracle
+    if dt == jnp.bfloat16:
+        return dict(rtol=3e-2, atol=3e-2)
+    return dict(rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("m,n", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_gram_matches_ref(rng, m, n, dt):
+    a = jnp.asarray(rng.standard_normal((m, n)), dtype=dt)
+    got = ops.gram(a, use_pallas=True)
+    want = ref.gram(a)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dt))
+
+
+@pytest.mark.parametrize("m,n", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_apply_right_matches_ref(rng, m, n, dt):
+    a = jnp.asarray(rng.standard_normal((m, n)), dtype=dt)
+    w = jnp.asarray(rng.standard_normal((n, n)), dtype=dt)
+    got = ops.apply_right(a, w, use_pallas=True)
+    want = ref.apply_right(a, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dt)
+    )
+
+
+@pytest.mark.parametrize("n", [3, 16, 129, 256])
+def test_combine_gram_matches_ref(rng, n):
+    r1 = jnp.asarray(np.triu(rng.standard_normal((n, n))), dtype=jnp.float32)
+    r2 = jnp.asarray(np.triu(rng.standard_normal((n, n))), dtype=jnp.float32)
+    got = ops.combine_gram(r1, r2, use_pallas=True)
+    want = ref.combine_gram(r1, r2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5)
+
+
+@pytest.mark.parametrize("m,n", [(256, 16), (1000, 32), (4096, 64)])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_cholesky_qr2_orthogonality_and_reconstruction(rng, m, n, use_pallas):
+    a = jnp.asarray(rng.standard_normal((m, n)), dtype=jnp.float32)
+    q, r = ops.cholesky_qr2(a, use_pallas=use_pallas)
+    np.testing.assert_allclose(
+        np.asarray(q.T @ q), np.eye(n), atol=2e-5
+    )
+    np.testing.assert_allclose(np.asarray(q @ r), np.asarray(a), rtol=1e-4, atol=1e-4)
+    # R matches Householder ground truth (unique with positive diagonal)
+    rt = np.linalg.qr(np.asarray(a, np.float64), mode="r")
+    rt = rt * np.where(np.diagonal(rt) < 0, -1.0, 1.0)[:, None]
+    np.testing.assert_allclose(np.asarray(r), rt, rtol=2e-3, atol=2e-3)
+
+
+def test_cholesky_qr2_batched(rng):
+    a = jnp.asarray(rng.standard_normal((5, 256, 16)), dtype=jnp.float32)
+    q, r = ops.cholesky_qr2(a, use_pallas=True)
+    assert q.shape == (5, 256, 16) and r.shape == (5, 16, 16)
+    eye = np.broadcast_to(np.eye(16), (5, 16, 16))
+    np.testing.assert_allclose(
+        np.asarray(jnp.einsum("bmi,bmj->bij", q, q)), eye, atol=2e-5
+    )
+
+
+def test_gram_block_rows_invariance(rng):
+    """Result must not depend on the streaming block size."""
+    a = jnp.asarray(rng.standard_normal((777, 50)), dtype=jnp.float32)
+    outs = [
+        np.asarray(ops.gram(a, use_pallas=True))
+    ]
+    from repro.kernels.gram import gram as raw_gram
+
+    for br in (128, 256, 1024):
+        outs.append(np.asarray(raw_gram(a, block_rows=br)))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=2e-3)  # accumulation order
+
+
+def test_tri_inv(rng):
+    r = jnp.asarray(
+        np.triu(rng.standard_normal((24, 24))) + 8 * np.eye(24), jnp.float32
+    )
+    inv = ops.tri_inv(r)
+    np.testing.assert_allclose(np.asarray(r @ inv), np.eye(24), atol=1e-5)

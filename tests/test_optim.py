@@ -1,0 +1,176 @@
+"""Optimizer tests: AdamW behavior, PowerSGD-TSQR compression (the paper's
+algorithm in the gradient path), low-rank and ortho-momentum updates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.comm import SimComm
+from repro.optim import adamw, lowrank, orthosgd, powersgd
+from repro.core import FaultSpec
+
+
+def _quad_problem(key, d=16):
+    target = jax.random.normal(key, (d, d))
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    params = {"w": jnp.zeros((d, d))}
+    return loss, params
+
+
+def test_adamw_minimizes_quadratic():
+    loss, params = _quad_problem(jax.random.key(0))
+    cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0, warmup=0, total_steps=200)
+    state = adamw.init(params)
+    l0 = float(loss(params))
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.update(cfg, params, g, state)
+    assert float(loss(params)) < 0.02 * l0
+
+
+def test_adamw_grad_clip_and_schedule():
+    cfg = adamw.AdamWConfig(lr=1.0, grad_clip=1e-3, warmup=10, total_steps=100,
+                            weight_decay=0.0)
+    params = {"w": jnp.ones((4,))}
+    state = adamw.init(params)
+    g = {"w": jnp.full((4,), 100.0)}
+    new_p, state, m = adamw.update(cfg, params, g, state)
+    # warmup step 1: lr = 0.1; Adam normalizes the (clipped) gradient so
+    # the step magnitude is bounded by lr, not the clip threshold
+    assert float(jnp.abs(new_p["w"] - params["w"]).max()) <= 0.1 + 1e-5
+    assert float(m["grad_norm"]) > 10        # pre-clip norm is reported
+    assert float(m["lr"]) == pytest.approx(0.1)
+
+
+def test_zero1_state_shardings_divisibility():
+    from jax.sharding import PartitionSpec as P
+
+    import jax as j
+    mesh = j.make_mesh((1, 1), ("data", "model"),
+                       axis_types=(j.sharding.AxisType.Auto,) * 2)
+    specs = {"a": P(None, "model"), "b": P("model")}
+    struct = {
+        "a": jax.ShapeDtypeStruct((3, 64), jnp.float32),   # 3 not divisible
+        "b": jax.ShapeDtypeStruct((64,), jnp.float32),
+    }
+    out = adamw.state_shardings(specs, struct, mesh, zero1_axis=("data",))
+    assert out["m"]["a"] == P(("data",), "model")  # dim0 divisible by 1
+    assert out["step"] == P()
+
+
+# ---------------------------------------------------------------------------
+# PowerSGD with FT-TSQR orthogonalization (SimComm backend)
+# ---------------------------------------------------------------------------
+
+def _psum_id(x):
+    return x
+
+
+def _psum_model_sim(x):
+    # SimComm carries the model ranks in the leading axis: sum & broadcast
+    return jnp.broadcast_to(x.sum(0, keepdims=True), x.shape)
+
+
+def test_powersgd_exact_on_lowrank():
+    """A rank-r gradient must be reconstructed exactly in one round."""
+    key = jax.random.key(3)
+    p_ranks, m_loc, n, r = 4, 32, 24, 4
+    u = jax.random.normal(key, (p_ranks * m_loc, r))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (n, r))
+    g_full = (u @ v.T).reshape(p_ranks, m_loc, n)
+
+    cfg = powersgd.PowerSGDConfig(rank=r, error_feedback=False)
+    comm = SimComm(p_ranks)
+    state = powersgd.init_state(jax.random.key(9), (m_loc, n), cfg, leading=(p_ranks,))
+    g_hat, state, stats = powersgd.compress_grad(
+        g_full, state, comm,
+        cfg=cfg, psum_data=_psum_id, psum_model=_psum_model_sim, n_data=1,
+    )
+    np.testing.assert_allclose(np.asarray(g_hat), np.asarray(g_full), rtol=1e-3, atol=1e-3)
+    assert stats["data_bytes_compressed"] < stats["data_bytes_dense"]
+
+
+def test_powersgd_error_feedback_reduces_residual():
+    key = jax.random.key(4)
+    p_ranks, m_loc, n, r = 4, 16, 16, 2
+    g = jax.random.normal(key, (p_ranks, m_loc, n))
+    cfg = powersgd.PowerSGDConfig(rank=r, error_feedback=True)
+    comm = SimComm(p_ranks)
+    state = powersgd.init_state(jax.random.key(5), (m_loc, n), cfg, leading=(p_ranks,))
+    # feed the SAME gradient repeatedly: error feedback should recover more
+    # of it cumulatively
+    acc = jnp.zeros_like(g)
+    for _ in range(8):
+        g_hat, state, _ = powersgd.compress_grad(
+            g, state, comm,
+            cfg=cfg, psum_data=_psum_id, psum_model=_psum_model_sim, n_data=1,
+        )
+        acc = acc + g_hat
+    resid0 = float(jnp.linalg.norm(g))
+    resid = float(jnp.linalg.norm(g - acc / 8))
+    # with EF the running mean of reconstructions approaches g
+    assert resid < 0.9 * resid0
+
+
+def test_powersgd_survives_rank_failure():
+    """The butterfly orthogonalization tolerates a model-rank failure within
+    the paper's bound (2^s − 1 at entry of step s) — survivors still agree."""
+    key = jax.random.key(6)
+    p_ranks, m_loc, n, r = 4, 16, 12, 3
+    g = jax.random.normal(key, (p_ranks, m_loc, n))
+    cfg = powersgd.PowerSGDConfig(rank=r, error_feedback=False,
+                                  variant="selfhealing")
+    comm = SimComm(p_ranks)
+    state = powersgd.init_state(jax.random.key(7), (m_loc, n), cfg, leading=(p_ranks,))
+    g_hat, _, stats = powersgd.compress_grad(
+        g, state, comm, cfg=cfg, psum_data=_psum_id,
+        psum_model=_psum_model_sim, n_data=1,
+        fault_spec=FaultSpec.of({2: 1}),
+    )
+    assert np.asarray(stats["valid"]).all()
+    assert np.isfinite(np.asarray(g_hat)).all()
+
+
+# ---------------------------------------------------------------------------
+
+def test_lowrank_optimizer_state_compression():
+    key = jax.random.key(8)
+    params = {"w": jax.random.normal(key, (512, 512), jnp.float32),
+              "b": jnp.zeros((512,), jnp.float32)}
+    cfg = lowrank.LowRankConfig(rank=16, min_dim=256, lr=1e-2)
+    state = lowrank.init(params, cfg)
+    assert state["per_param"]["w"]["m"].shape == (512, 16)   # 32× smaller
+    assert state["per_param"]["b"]["basis"] is None
+
+    target = jax.random.normal(jax.random.fold_in(key, 2), (512, 512))
+    loss = lambda p: jnp.mean((p["w"] - target) ** 2) + jnp.mean(p["b"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(30):
+        g = jax.grad(loss)(params)
+        params, state = lowrank.update(cfg, params, g, state)
+    assert float(loss(params)) < l0
+
+
+def test_orthosgd_update_is_orthogonal():
+    key = jax.random.key(9)
+    m = jax.random.normal(key, (64, 16))
+    q = orthosgd._orth_update(m)
+    qn = np.asarray(q) / np.sqrt(64 / 16)
+    np.testing.assert_allclose(qn.T @ qn, np.eye(16), atol=1e-4)
+
+
+def test_orthosgd_minimizes():
+    key = jax.random.key(10)
+    target = jax.random.normal(key, (32, 8))
+    params = {"w": jnp.zeros((32, 8))}
+    loss = lambda p: jnp.mean((p["w"] - target) ** 2)
+    cfg = orthosgd.OrthoSGDConfig(lr=0.05)
+    state = orthosgd.init(params)
+    l0 = float(loss(params))
+    for _ in range(40):
+        g = jax.grad(loss)(params)
+        params, state = orthosgd.update(cfg, params, g, state)
+    assert float(loss(params)) < 0.5 * l0

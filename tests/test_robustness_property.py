@@ -1,0 +1,208 @@
+"""Property-based robustness tests (hypothesis) — the paper's §III-B3/C3/D3
+claims verified over randomized fault sets:
+
+  * within the guaranteed tolerance (cumulative failures < 2^s at entry of
+    every exchange s), Redundant/Replace always leave ≥1 holder of the
+    correct final R; Replace leaves *every* live rank valid; Self-Healing
+    (per-step bound) leaves *all* ranks valid;
+  * the guarantees are TIGHT: adversarial placements exactly at 2^s kill
+    each variant;
+  * the dynamic (in-jit) validity propagation agrees bit-for-bit with the
+    host planner, for any fault set — in or out of tolerance.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import FaultSpec, make_plan, tsqr_sim, within_tolerance
+from repro.core import ref
+
+SET = settings(
+    max_examples=60,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@st.composite
+def fault_specs(draw, max_log_p=4):
+    log_p = draw(st.integers(2, max_log_p))
+    p = 1 << log_p
+    n_faults = draw(st.integers(0, p - 1))
+    ranks = draw(
+        st.lists(st.integers(0, p - 1), min_size=n_faults, max_size=n_faults,
+                 unique=True)
+    )
+    steps = draw(
+        st.lists(st.integers(0, log_p - 1), min_size=n_faults, max_size=n_faults)
+    )
+    return p, FaultSpec.of(dict(zip(ranks, steps)))
+
+
+@st.composite
+def tolerable_fault_specs(draw, variant="redundant", max_log_p=4):
+    """Fault sets within the guaranteed-survival bound (see
+    faults.within_tolerance — for redundant that is the cascade-measure
+    condition Σ n_k 2^{-k} < 1, not the paper's data-copy count)."""
+    log_p = draw(st.integers(2, max_log_p))
+    p = 1 << log_p
+    deaths = {}
+    pool = list(range(p))
+    for s in range(log_p):
+        if variant == "selfhealing":
+            budget = (1 << s) - 1
+        elif variant == "redundant":
+            measure = sum(2.0 ** (-d) for d in deaths.values())
+            budget = int((1.0 - measure) * (1 << s) - 1e-9)
+        else:  # replace: paper's cumulative bound
+            budget = ((1 << s) - 1) - sum(1 for d in deaths.values() if d <= s)
+        k = draw(st.integers(0, max(budget, 0)))
+        for _ in range(min(k, len(pool))):
+            r = pool.pop(draw(st.integers(0, len(pool) - 1)))
+            deaths[r] = s
+    return p, FaultSpec.of(deaths)
+
+
+def _truth(blocks):
+    n = blocks.shape[-1]
+    return ref.qr_r(blocks.reshape(-1, n).astype(np.float64)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# guarantee: within tolerance → survivors hold the right answer
+# ---------------------------------------------------------------------------
+
+@given(tolerable_fault_specs("redundant"))
+@SET
+def test_redundant_within_tolerance_survives(pf):
+    p, spec = pf
+    assert within_tolerance("redundant", spec, int(np.log2(p)))
+    plan = make_plan("redundant", p, spec)
+    assert plan.final_valid.any(), (spec, plan.final_valid)
+
+
+@given(tolerable_fault_specs("replace"))
+@SET
+def test_replace_within_tolerance_all_live_valid(pf):
+    p, spec = pf
+    plan = make_plan("replace", p, spec)
+    dead = spec.death_vector(p) < (1 << 30)
+    assert (plan.final_valid | dead).all(), (spec, plan.final_valid)
+
+
+@given(tolerable_fault_specs("selfhealing"))
+@SET
+def test_selfhealing_within_tolerance_all_valid(pf):
+    p, spec = pf
+    assert within_tolerance("selfhealing", spec, int(np.log2(p)))
+    plan = make_plan("selfhealing", p, spec)
+    assert plan.final_valid.all(), (spec, plan.final_valid)
+
+
+# ---------------------------------------------------------------------------
+# dynamic validity == host plan, and survivors' R is correct — any fault set
+# ---------------------------------------------------------------------------
+
+@given(fault_specs(max_log_p=3),
+       st.sampled_from(["tree", "redundant", "replace", "selfhealing"]))
+@SET
+def test_dynamic_matches_plan_and_oracle(pf, variant):
+    p, spec = pf
+    rng = np.random.default_rng(0)
+    blocks = ref.random_tall_skinny(rng, p, 8, 3)
+    plan = make_plan(variant, p, spec)
+    res = tsqr_sim(jnp.asarray(blocks), variant=variant, fault_spec=spec)
+    assert (np.asarray(res.valid) == plan.final_valid).all()
+    truth = _truth(blocks)
+    for r in np.nonzero(plan.final_valid)[0]:
+        np.testing.assert_allclose(
+            np.asarray(res.r)[r], truth, rtol=7e-4, atol=7e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# tightness: 2^s failures placed adversarially defeat the guarantee
+# ---------------------------------------------------------------------------
+
+def test_redundant_tightness():
+    """Killing a whole 2^s block right after exchange s-1 erases every copy
+    of that block's R̃ → nobody can finish (P=8, kill {2,3} at entry of
+    exchange 1: their combined R̃ existed only on ranks 2 and 3)."""
+    spec = FaultSpec.of({2: 1, 3: 1})
+    plan = make_plan("redundant", 8, spec)
+    assert not plan.final_valid.any()
+    plan = make_plan("replace", 8, spec)
+    assert not plan.final_valid.any()
+
+
+def test_selfhealing_tightness():
+    """2^s new failures at step s exceed the per-step bound."""
+    spec = FaultSpec.of({0: 0})          # 1 failure at step 0 > 2^0 - 1
+    plan = make_plan("selfhealing", 4, spec)
+    # rank 0's own block data is lost before any replication existed;
+    # respawn cannot recover it and its dependents collapse
+    assert not plan.final_valid.all()
+
+
+def test_single_failure_before_any_exchange_kills_everything():
+    """Tolerance at step 0 is 2^0 − 1 = 0: data not yet replicated."""
+    for variant in ("redundant", "replace"):
+        plan = make_plan(variant, 8, FaultSpec.of({3: 0}))
+        assert not plan.final_valid.any(), variant
+
+
+def test_redundant_cascade_finding():
+    """Reproduction finding: 7 failures on P=16 that satisfy the paper's
+    cumulative 2^s−1 data-copy count (1 by ex.1, 3 by ex.2, 7 by ex.3) can
+    still wipe out Redundant TSQR entirely, because invalidity cascades
+    through the butterfly — while Replace survives the identical schedule
+    on every live rank.  This is precisely the gap Replace TSQR closes."""
+    spec = FaultSpec.from_events({1: [3], 2: [8, 12], 3: [1, 6, 10, 14]})
+    assert all(spec.cumulative_by_entry(s) <= (1 << s) - 1 for s in range(4))
+    assert not within_tolerance("redundant", spec, 4)   # measure = 1.5 ≥ 1
+    assert within_tolerance("replace", spec, 4)
+    red = make_plan("redundant", 16, spec)
+    assert not red.final_valid.any()
+    rep = make_plan("replace", 16, spec)
+    dead = spec.death_vector(16) < (1 << 30)
+    assert (rep.final_valid | dead).all() and rep.final_valid.any()
+
+
+# ---------------------------------------------------------------------------
+# structural plan properties
+# ---------------------------------------------------------------------------
+
+@given(fault_specs(max_log_p=4),
+       st.sampled_from(["tree", "redundant", "replace", "selfhealing"]))
+@SET
+def test_plan_rounds_have_unique_endpoints(pf, variant):
+    """ppermute legality: within any round, sources and destinations unique;
+    across rounds of one level, destinations never repeat."""
+    p, spec = pf
+    plan = make_plan(variant, p, spec)
+    for step in plan.steps:
+        dsts_all = []
+        for rnd in list(step.perm_rounds) + list(step.restore_rounds):
+            srcs = [s for s, _ in rnd]
+            dsts = [d for _, d in rnd]
+            assert len(set(srcs)) == len(srcs)
+            assert len(set(dsts)) == len(dsts)
+        for rnd in step.perm_rounds:
+            dsts_all += [d for _, d in rnd]
+        assert len(set(dsts_all)) == len(dsts_all)
+
+
+@given(fault_specs(max_log_p=4))
+@SET
+def test_replace_never_routes_from_dead_or_invalid(pf):
+    p, spec = pf
+    death = spec.death_vector(p)
+    plan = make_plan("replace", p, spec)
+    valid = death > 0
+    for step in plan.steps:
+        ok = valid & (death > step.level)
+        for rnd in step.perm_rounds:
+            for s, d in rnd:
+                assert ok[s], (spec, step.level, s, d)
+        valid = step.valid_after

@@ -1,0 +1,165 @@
+"""Multi-device SPMD behavior, run in subprocesses with 8 forced host
+devices (the in-process suite keeps the default single device — see the
+dry-run spec).  Covers: shard_map TSQR all variants + faults + Q, the
+PowerSGD butterfly under real collectives, elastic mesh shrink, and a
+(4 data × 2 model) trainer run with failure semantics."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = REPO_SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_shard_map_tsqr_variants_and_faults():
+    _run("""
+    import jax, numpy as np, jax.numpy as jnp
+    from jax.sharding import AxisType
+    from repro.core import tsqr_shard_map, FaultSpec, make_plan
+    from repro.core import ref
+
+    mesh = jax.make_mesh((8,), ("rows",), axis_types=(AxisType.Auto,))
+    rng = np.random.default_rng(1)
+    blocks = ref.random_tall_skinny(rng, 8, 16, 4)
+    a = jnp.asarray(blocks.reshape(128, 4))
+    truth = ref.qr_r(blocks.reshape(-1, 4).astype(np.float64)).astype(np.float32)
+    for v in ["tree", "redundant", "replace", "selfhealing"]:
+        res = tsqr_shard_map(a, mesh=mesh, axis="rows", variant=v)
+        val = np.asarray(res.valid)
+        exp = (np.arange(8) == 0) if v == "tree" else np.ones(8, bool)
+        assert (val == exp).all(), (v, val)
+        for r in np.nonzero(val)[0]:
+            np.testing.assert_allclose(np.asarray(res.r)[r], truth, rtol=5e-4, atol=5e-4)
+    # fault scenarios across variants agree with the host plan
+    for fs in [FaultSpec.of({5: 1}), FaultSpec.of({5: 1, 2: 2}),
+               FaultSpec.of({1: 1, 4: 2, 6: 2})]:
+        for v in ["redundant", "replace", "selfhealing"]:
+            res = tsqr_shard_map(a, mesh=mesh, axis="rows", variant=v, fault_spec=fs)
+            plan = make_plan(v, 8, fs)
+            assert (np.asarray(res.valid) == plan.final_valid).all(), (v, fs)
+            for r in np.nonzero(plan.final_valid)[0]:
+                np.testing.assert_allclose(np.asarray(res.r)[r], truth,
+                                           rtol=7e-4, atol=7e-4)
+    # Q on the SPMD path
+    res = tsqr_shard_map(a, mesh=mesh, axis="rows", variant="redundant", compute_q=True)
+    q = np.asarray(res.q)
+    np.testing.assert_allclose(q.T @ q, np.eye(4), atol=2e-5)
+    print("SPMD TSQR OK")
+    """)
+
+
+@pytest.mark.slow
+def test_powersgd_under_shard_map():
+    """PowerSGD round on a (data=2, model=4) mesh with real psum/ppermute:
+    the decompressed mean gradient must equal the dense data-mean for a
+    rank-r gradient, on every device."""
+    _run("""
+    import jax, numpy as np, jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import AxisType, PartitionSpec as P
+    from repro.core.comm import ShardMapComm
+    from repro.optim import powersgd
+
+    D, M, m_loc, n, r = 2, 4, 8, 12, 3
+    mesh = jax.make_mesh((D, M), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+    key = jax.random.key(0)
+    # distinct rank-r gradient per data replica, rows sharded over model
+    u = jax.random.normal(key, (D, M * m_loc, r))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (n, r))
+    g = jnp.einsum("dmr,nr->dmn", u, v)          # (D, M*m_loc, n)
+    g_mean = g.mean(0)
+
+    cfg = powersgd.PowerSGDConfig(rank=r, error_feedback=False)
+    comm = ShardMapComm(M, "model")
+    q0 = jax.random.normal(jax.random.fold_in(key, 2), (n, r), jnp.float32)
+
+    def body(g_blk, q_blk):
+        state = {"q": q_blk, "e": None}
+        ghat, _, _ = powersgd.compress_grad(
+            g_blk[0], state, comm, cfg=cfg,
+            psum_data=lambda x: lax.psum(x, "data"),
+            psum_model=lambda x: lax.psum(x, "model"),
+            n_data=D)
+        return ghat[None]
+
+    f = jax.jit(jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data", "model", None), P()),
+        out_specs=P("data", "model", None)))
+    out = f(g, q0)                                # (D, M*m_loc, n)
+    for d in range(D):
+        np.testing.assert_allclose(np.asarray(out[d]), np.asarray(g_mean),
+                                   rtol=2e-3, atol=2e-3)
+    print("PowerSGD SPMD OK")
+    """)
+
+
+@pytest.mark.slow
+def test_trainer_multidevice_and_shrink():
+    _run("""
+    import jax, numpy as np
+    from jax.sharding import AxisType
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.runtime.trainer import Trainer, TrainerConfig, FaultEvent
+    from repro.runtime.elastic import shrink_mesh
+
+    cfg = get_config("qwen3-0.6b").smoke(n_layers=2)
+    mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+    tc = TrainerConfig(steps=8, log_every=100, ckpt_every=0, on_failure="shrink",
+                       ckpt_dir="/tmp/ck_spmd")
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    tr = Trainer(cfg, tc, mesh, dc)
+    assert tr.n_replicas == 4
+    p, o = tr.init_state()
+    p, o = tr.run(p, o, fault_schedule=(FaultEvent(step=4, kind="fail", replica=1),))
+    assert tr.n_replicas == 2, tr.n_replicas     # elastic shrink happened
+    assert any("elastic shrink" in e for e in tr.events_log)
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert np.isfinite(losses).all() and losses[-1] < losses[0] + 0.5
+    # shrink helper topology
+    small = shrink_mesh(mesh)
+    assert dict(zip(small.axis_names, small.devices.shape)) == {"data": 2, "model": 2}
+    print("trainer shrink OK")
+    """)
+
+
+@pytest.mark.slow
+def test_blank_rescaling_unbiased():
+    """BLANK semantics: masking one replica and rescaling gives the same
+    loss value as training on the survivors alone."""
+    _run("""
+    import jax, numpy as np
+    from jax.sharding import AxisType
+    from repro.configs.base import get_config
+    from repro.models import api
+    import jax.numpy as jnp
+
+    cfg = get_config("olmo-1b").smoke(n_layers=1)
+    key = jax.random.key(0)
+    params = api.init(key, cfg)
+    batch = api.synth_batch(key, cfg, "train", batch=8, seq=16)
+    w = np.ones(8, np.float32); w[:4] = 0        # replica 0 of 2 dead
+    w = w / w.mean()
+    masked = dict(batch, loss_weight=jnp.asarray(w))
+    l_masked = float(api.loss_fn(params, masked, cfg))
+    survivors = {k: v[4:] for k, v in batch.items()}
+    l_surv = float(api.loss_fn(params, survivors, cfg))
+    np.testing.assert_allclose(l_masked, l_surv, rtol=1e-5)
+    print("blank unbiased OK")
+    """)

@@ -1,0 +1,130 @@
+"""End-to-end behaviour of the paper's system: the full stack wired
+together — fault-tolerant TSQR inside an optimizer inside a training loop
+with checkpointing — plus the dry-run cell-plan machinery at smoke scale."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AxisType
+
+from repro.configs.base import SHAPES, ShapeSpec, get_config, list_archs, shapes_for
+from repro.models import api
+
+
+def test_cell_matrix_is_complete():
+    """32 assigned cells: 10 archs × {train,prefill,decode} + long_500k for
+    the two sub-quadratic archs (DESIGN.md §5)."""
+    cells = [(a, s.name) for a in list_archs() for s in shapes_for(get_config(a))]
+    assert len(cells) == 32
+    long_archs = {a for a, s in cells if s == "long_500k"}
+    assert long_archs == {"mamba2-2.7b", "zamba2-7b"}
+
+
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_cell_plan_lowers_on_tiny_mesh(kind):
+    """CellPlan (shardings, microbatching, step functions) must lower for a
+    smoke config on the 1-device mesh — the same machinery the 512-device
+    dry-run uses."""
+    from repro.launch.shardings import CellPlan
+    from repro.models.sharding import mesh_context
+
+    cfg = get_config("qwen3-0.6b").smoke()
+    shape = ShapeSpec(f"tiny_{kind}", kind, seq_len=32, global_batch=4)
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    plan = CellPlan(cfg, shape, mesh)
+    fn, args, ins, outs = plan.lowerable()
+    with mesh_context(mesh):
+        jitted = jax.jit(fn, in_shardings=plan.named(ins),
+                         out_shardings=plan.named(outs) if outs is not None else None)
+        lowered = jitted.lower(*args)
+        assert lowered.as_text()
+
+
+def test_dryrun_collective_parser():
+    from repro.launch.dryrun import parse_collectives
+
+    hlo = """
+  %ar = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %x), replica_groups={}
+  %ag.1 = bf16[4,256]{1,0} all-gather(bf16[1,256]{1,0} %y), dimensions={0}
+  %cp = (f32[8]{0}, f32[8]{0}) collective-permute-start(f32[8]{0} %z)
+  %cpd = f32[8]{0} collective-permute-done(%cp)
+  %rs = f32[2,64]{1,0} reduce-scatter(f32[16,64]{1,0} %w), dimensions={0}
+"""
+    out = parse_collectives(hlo)
+    assert out["all-reduce"]["bytes"] == 16 * 128 * 4
+    assert out["all-gather"]["bytes"] == 4 * 256 * 2
+    assert out["reduce-scatter"]["bytes"] == 2 * 64 * 4
+    assert out["collective-permute"]["count"] == 1     # start counted, done not
+    assert out["total_count"] == 4
+
+
+def test_probe_extrapolation_weights():
+    """Accounting extrapolation must reproduce exact linear/affine costs."""
+    from repro.launch.dryrun import _probe_plan
+
+    cfg = get_config("olmo-1b")                     # 16 layers, period 1
+    overrides, w = _probe_plan(cfg)
+    a, b = 3.0, 7.0
+    vals = [a + b * o["n_layers"] for o in overrides]
+    assert abs(sum(wi * v for wi, v in zip(w, vals)) - (a + b * 16)) < 1e-9
+
+    cfg = get_config("zamba2-7b")                   # 13 units + 3 tail
+    overrides, w = _probe_plan(cfg)
+    a, bu, bt = 2.0, 5.0, 1.5
+
+    def cost(n_layers):
+        u = n_layers // 6
+        t = n_layers - 6 * u
+        return a + bu * u + bt * t
+
+    vals = [cost(o["n_layers"]) for o in overrides]
+    assert abs(sum(wi * v for wi, v in zip(w, vals)) - (a + bu * 13 + bt * 3)) < 1e-9
+
+    cfg = get_config("gemma2-9b")                   # period 2, 21 units
+    overrides, w = _probe_plan(cfg)
+    vals = [a + b * (o["n_layers"] // 2) for o in overrides]
+    assert abs(sum(wi * v for wi, v in zip(w, vals)) - (a + b * 21)) < 1e-9
+
+
+def test_sanitize_specs_drops_nondivisible():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.shardings import sanitize_specs
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    spec = {"a": P("model", None), "b": P(None, "model")}
+    struct = {
+        "a": jax.ShapeDtypeStruct((7, 8), jnp.float32),
+        "b": jax.ShapeDtypeStruct((8, 64), jnp.float32),
+    }
+    out = sanitize_specs(spec, struct, mesh)
+    # every dim divides a size-1 axis; structure preserved
+    assert out["b"] == P(None, "model")
+    # and with a fake larger divisor nothing crashes (shape-driven)
+    assert out["a"] is not None
+
+
+@pytest.mark.slow
+def test_end_to_end_fault_tolerant_training(tmp_path):
+    """The headline behaviour: train, fail a replica, recover via rollback,
+    keep converging."""
+    from repro.data.pipeline import DataConfig
+    from repro.runtime.trainer import FaultEvent, Trainer, TrainerConfig
+
+    cfg = get_config("olmo-1b").smoke(n_layers=2)
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    tc = TrainerConfig(steps=10, log_every=100, ckpt_every=4,
+                       ckpt_dir=str(tmp_path), on_failure="rebuild")
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    tr = Trainer(cfg, tc, mesh, dc)
+    tr.buddies = None      # single replica: force the rollback path
+    p, o = tr.init_state()
+    p, o = tr.run(p, o, fault_schedule=(
+        FaultEvent(step=6, kind="fail", replica=0),))
+    steps = [m["step"] for m in tr.metrics_log]
+    assert steps.count(5) >= 2          # rollback re-ran step 5
+    assert tr.metrics_log[-1]["step"] == 9
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert losses[-1] < losses[0]

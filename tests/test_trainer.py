@@ -1,0 +1,106 @@
+"""Fault-tolerant runtime integration: loss decreases, checkpoints restore,
+and the three failure semantics (blank / rebuild / shrink) behave."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AxisType
+
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig
+from repro.runtime.elastic import shrink_mesh
+from repro.runtime.trainer import FaultEvent, Trainer, TrainerConfig
+
+
+def _mk(tmp_path, **kw):
+    cfg = get_config("olmo-1b").smoke(n_layers=2)
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    defaults = dict(steps=6, log_every=100, ckpt_every=3,
+                    ckpt_dir=str(tmp_path / "ck"), microbatches=1)
+    defaults.update(kw)
+    tc = TrainerConfig(**defaults)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    return Trainer(cfg, tc, mesh, dc)
+
+
+@pytest.mark.slow
+def test_loss_decreases(tmp_path):
+    tr = _mk(tmp_path, steps=10, ckpt_every=0)
+    p, o = tr.init_state()
+    tr.run(p, o)
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.slow
+def test_microbatched_step_matches_tokens(tmp_path):
+    tr = _mk(tmp_path, steps=3, microbatches=2, ckpt_every=0)
+    p, o = tr.init_state()
+    tr.run(p, o)
+    assert len(tr.metrics_log) == 3
+    assert all(np.isfinite(m["loss"]) for m in tr.metrics_log)
+
+
+@pytest.mark.slow
+def test_checkpoint_and_rebuild_rollback(tmp_path):
+    tr = _mk(tmp_path, steps=8, ckpt_every=3, on_failure="rebuild",
+             buddy_levels=0)
+    # buddy store exists only for >1 replicas; with 1 replica rollback path
+    tr.buddies = None
+    p, o = tr.init_state()
+    p, o = tr.run(p, o, fault_schedule=(FaultEvent(step=5, kind="fail", replica=0),))
+    log = " ".join(tr.events_log)
+    assert "FAILED → rebuild" in log
+    assert "rollback to checkpoint step 3" in log
+    # the run re-executed steps 4.. after rollback and finished
+    assert tr.metrics_log[-1]["step"] == 7
+
+
+@pytest.mark.slow
+def test_blank_semantics_masks_replica(tmp_path):
+    tr = _mk(tmp_path, steps=6, on_failure="blank", ckpt_every=0)
+    p, o = tr.init_state()
+    p, o = tr.run(p, o, fault_schedule=(
+        FaultEvent(step=3, kind="fail", replica=0),
+        FaultEvent(step=5, kind="recover", replica=0),
+    ))
+    log = " ".join(tr.events_log)
+    assert "FAILED → blank" in log and "recovered" in log
+    assert len(tr.metrics_log) == 6
+
+
+@pytest.mark.slow
+def test_straggler_detection_and_masking(tmp_path):
+    tr = _mk(tmp_path, steps=5, ckpt_every=0, drop_stragglers=True)
+    p, o = tr.init_state()
+    tr.run(p, o, fault_schedule=(
+        FaultEvent(step=2, kind="straggle", replica=0, duration=1),
+    ))
+    assert any("straggling" in e for e in tr.events_log)
+
+
+def test_shrink_mesh_topology():
+    import jax as j
+    mesh = j.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    assert shrink_mesh(mesh) is None          # cannot shrink below 1
+    # with 1 device we cannot build wider meshes; the multi-device shrink
+    # path is covered by tests/test_spmd.py in a subprocess.
+
+
+@pytest.mark.slow
+def test_checkpoint_restart_reproduces_data(tmp_path):
+    """Restore + rerun sees exactly the batches a never-failed run sees
+    (counter-mode corpus): loss curves after the restore point match."""
+    tr1 = _mk(tmp_path, steps=6, ckpt_every=2, ckpt_dir=str(tmp_path / "a"))
+    p, o = tr1.init_state()
+    tr1.run(p, o)
+    base = {m["step"]: m["loss"] for m in tr1.metrics_log}
+
+    tr2 = _mk(tmp_path, steps=6, ckpt_every=2, ckpt_dir=str(tmp_path / "a"))
+    tpl = jax.device_get({"params": tr2.init_state()[0],
+                          "opt": tr2.init_state()[1]})
+    state, meta = tr2.ckpt.restore(tpl)
+    p2 = jax.device_put(state["params"], tr2.param_shardings)
+    o2 = jax.device_put(state["opt"], tr2.opt_shardings)
+    tr2.run(p2, o2, start_step=int(meta["step"]) + 1)
+    for m in tr2.metrics_log:
+        np.testing.assert_allclose(m["loss"], base[m["step"]], rtol=1e-4)

@@ -1,0 +1,128 @@
+"""Core TSQR correctness: all variants vs the numpy oracle, the paper's
+worked failure examples (Figs. 3-5), Q factors, dtypes and shapes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FaultSpec, make_plan, tsqr_sim
+from repro.core import ref
+
+
+def _truth(blocks):
+    n = blocks.shape[-1]
+    return ref.qr_r(blocks.reshape(-1, n).astype(np.float64)).astype(np.float32)
+
+
+@pytest.mark.parametrize("variant", ["tree", "redundant", "replace", "selfhealing"])
+@pytest.mark.parametrize("p,m,n", [(4, 16, 3), (8, 32, 8), (16, 24, 5)])
+def test_fault_free_matches_oracle(rng, variant, p, m, n):
+    blocks = ref.random_tall_skinny(rng, p, m, n)
+    res = tsqr_sim(jnp.asarray(blocks), variant=variant)
+    truth = _truth(blocks)
+    valid = np.asarray(res.valid)
+    expect = (np.arange(p) == 0) if variant == "tree" else np.ones(p, bool)
+    assert (valid == expect).all()
+    for r in np.nonzero(valid)[0]:
+        np.testing.assert_allclose(np.asarray(res.r)[r], truth, rtol=5e-4, atol=5e-4)
+
+
+def test_butterfly_equals_sequential_oracle(rng):
+    blocks = ref.random_tall_skinny(rng, 8, 16, 4)
+    seq = ref.butterfly_tsqr(blocks.astype(np.float64))
+    res = tsqr_sim(jnp.asarray(blocks), variant="redundant")
+    for r in range(8):
+        np.testing.assert_allclose(
+            np.asarray(res.r)[r], seq[r].astype(np.float32), rtol=5e-4, atol=5e-4
+        )
+
+
+def test_paper_fig3_redundant(rng):
+    """P2 dies after step 1 → P0 cascades out; P1, P3 hold the final R."""
+    blocks = ref.random_tall_skinny(rng, 4, 16, 3)
+    res = tsqr_sim(jnp.asarray(blocks), variant="redundant",
+                   fault_spec=FaultSpec.of({2: 1}))
+    assert list(np.asarray(res.valid)) == [False, True, False, True]
+    truth = _truth(blocks)
+    np.testing.assert_allclose(np.asarray(res.r)[1], truth, rtol=5e-4, atol=5e-4)
+
+
+def test_paper_fig4_replace(rng):
+    """Same failure; P0 reroutes to the replica P3 and survives."""
+    blocks = ref.random_tall_skinny(rng, 4, 16, 3)
+    res = tsqr_sim(jnp.asarray(blocks), variant="replace",
+                   fault_spec=FaultSpec.of({2: 1}))
+    assert list(np.asarray(res.valid)) == [True, True, False, True]
+    truth = _truth(blocks)
+    np.testing.assert_allclose(np.asarray(res.r)[0], truth, rtol=5e-4, atol=5e-4)
+
+
+def test_paper_fig5_selfhealing(rng):
+    """Same failure; P2 is respawned from a replica — everyone ends valid."""
+    blocks = ref.random_tall_skinny(rng, 4, 16, 3)
+    res = tsqr_sim(jnp.asarray(blocks), variant="selfhealing",
+                   fault_spec=FaultSpec.of({2: 1}))
+    assert np.asarray(res.valid).all()
+    truth = _truth(blocks)
+    np.testing.assert_allclose(np.asarray(res.r)[2], truth, rtol=5e-4, atol=5e-4)
+
+
+def test_q_factor(rng):
+    blocks = ref.random_tall_skinny(rng, 8, 32, 6)
+    res = tsqr_sim(jnp.asarray(blocks), variant="redundant", compute_q=True)
+    q = np.asarray(res.q).reshape(-1, 6)
+    np.testing.assert_allclose(q.T @ q, np.eye(6), atol=2e-5)
+    np.testing.assert_allclose(
+        q @ np.asarray(res.r)[0], blocks.reshape(-1, 6), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_q_refused_when_data_lost(rng):
+    blocks = ref.random_tall_skinny(rng, 4, 8, 3)
+    with pytest.raises(ValueError):
+        tsqr_sim(jnp.asarray(blocks), variant="redundant",
+                 fault_spec=FaultSpec.of({2: 1}), compute_q=True)
+
+
+def test_selfhealing_q_with_faults(rng):
+    """Self-healing restores everyone → Q is computable despite the failure."""
+    blocks = ref.random_tall_skinny(rng, 8, 16, 4)
+    res = tsqr_sim(jnp.asarray(blocks), variant="selfhealing",
+                   fault_spec=FaultSpec.of({5: 1}), compute_q=True)
+    q = np.asarray(res.q).reshape(-1, 4)
+    np.testing.assert_allclose(q.T @ q, np.eye(4), atol=2e-5)
+
+
+def test_local_qr_cqr2_paths(rng):
+    blocks = ref.random_tall_skinny(rng, 4, 64, 8, cond=1e3)
+    truth = _truth(blocks)
+    for lq in ["jnp", "cqr2", "cqr2_pallas"]:
+        res = tsqr_sim(jnp.asarray(blocks), variant="redundant", local_qr=lq)
+        np.testing.assert_allclose(np.asarray(res.r)[0], truth, rtol=2e-3, atol=2e-3)
+
+
+def test_ill_conditioned_tall_skinny(rng):
+    blocks = ref.random_tall_skinny(rng, 8, 64, 6, cond=1e5)
+    res = tsqr_sim(jnp.asarray(blocks), variant="redundant", compute_q=True)
+    q = np.asarray(res.q).reshape(-1, 6)
+    np.testing.assert_allclose(q.T @ q, np.eye(6), atol=1e-4)
+
+
+def test_non_power_of_two_rejected(rng):
+    blocks = ref.random_tall_skinny(rng, 6, 8, 3)
+    with pytest.raises(ValueError):
+        tsqr_sim(jnp.asarray(blocks), variant="redundant")
+
+
+def test_comm_accounting():
+    """Message counts: tree sends P-1 totals; the butterfly P·log2(P) —
+    the paper's §III comparison (redundancy costs messages, not wire time,
+    because exchanges are full-duplex)."""
+    for p in (4, 8, 16, 32):
+        tree = make_plan("tree", p)
+        red = make_plan("redundant", p)
+        assert tree.message_count() == p - 1
+        assert red.message_count() == p * int(np.log2(p))
+        assert tree.round_count() == red.round_count() == int(np.log2(p))
+        # fault-free replace/selfheal run the identical butterfly
+        rep = make_plan("replace", p)
+        assert [s.perm_rounds for s in rep.steps] == [s.perm_rounds for s in red.steps]
