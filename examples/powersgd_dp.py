@@ -18,15 +18,14 @@ if "XLA_FLAGS" not in os.environ:
 
 import jax                                           # noqa: E402
 import jax.numpy as jnp                              # noqa: E402
-import numpy as np                                   # noqa: E402
 from jax import lax                                  # noqa: E402
-from jax.sharding import AxisType, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P           # noqa: E402
 
 import sys                                           # noqa: E402
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import FaultSpec                     # noqa: E402
-from repro.core.comm import ShardMapComm             # noqa: E402
+from repro.collective import FaultSpec, ShardMapComm  # noqa: E402
+from repro.compat import make_mesh, shard_map        # noqa: E402
 from repro.optim import powersgd                     # noqa: E402
 
 D, M = 2, 4                    # data x model mesh
@@ -37,8 +36,7 @@ LR = 0.3
 
 
 def main():
-    mesh = jax.make_mesh((D, M), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((D, M), ("data", "model"))
     key = jax.random.key(0)
     w_true1 = jax.random.normal(key, (DIN, DH)) / 8
     w_true2 = jax.random.normal(jax.random.fold_in(key, 1), (DH, DOUT)) / 8
@@ -80,7 +78,7 @@ def main():
                     jnp.asarray(stats["data_bytes_compressed"]),
                     jnp.asarray(stats["data_bytes_dense"]))
 
-        return jax.jit(jax.shard_map(
+        return jax.jit(shard_map(
             step, mesh=mesh,
             in_specs=(P("model", None), P(), P(), P("model", None),
                       P("data", None, None), P("data", None, None)),

@@ -15,8 +15,8 @@ import argparse
 import dataclasses
 
 import jax
-from jax.sharding import AxisType
 
+from repro.compat import make_mesh
 from repro.configs.base import get_config
 from repro.data.pipeline import DataConfig
 from repro.runtime.trainer import FaultEvent, Trainer, TrainerConfig
@@ -48,8 +48,7 @@ def main():
             dtype="float32", remat=False,
         )
     n = len(jax.devices())
-    mesh = jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((n, 1), ("data", "model"))
     tcfg = TrainerConfig(
         steps=args.steps, log_every=5, ckpt_every=20,
         ckpt_dir="/tmp/repro_train_lm", on_failure=args.on_failure,

@@ -2,22 +2,28 @@
 
 The paper motivates exploiting redundancy by pointing at diskless
 checkpointing [Plank et al.] where "the memory of other processes" stores
-each process's state.  We apply the *same replica-placement math as the
-TSQR butterfly*: the buddy of rank r at replication level s is r XOR 2^s,
-so after s rounds each shard exists ``2^s`` times and the scheme tolerates
-``2^s − 1`` simultaneous rank losses — the identical bound as the
-factorization (DESIGN.md §3.3).
+each process's state.  We apply the *same replica-placement routing as the
+collective butterfly*: ``push(level)`` replays the ``redundant`` plan's
+per-level ``(src, dst)`` exchange pairs (:mod:`repro.collective.plan` —
+level ``s`` pairs rank ``r`` with ``r XOR 2^s``), so after ``s`` levels each
+shard exists ``2^s`` times and the scheme tolerates ``2^s − 1``
+simultaneous rank losses — the identical bound, from the identical routing
+tables, as the factorization (DESIGN.md §3.3).  There is no separate
+placement math to keep in sync: a change to the planner changes the buddy
+placement with it.
 
-This host-side store simulates the per-rank memories: ``push(level)``
-replicates every rank's shard to its level-s buddies; ``recover(rank)``
-walks the replica set for the first live copy — ``findReplica`` at the
-checkpoint layer.
+This host-side store simulates the per-rank memories: ``checkpoint(...)``
+replicates every rank's shard along the plan's exchange routes;
+``recover(rank)`` walks the replica set for the first live copy —
+``findReplica`` at the checkpoint layer.
 """
 from __future__ import annotations
 
 import copy
 
 import numpy as np
+
+from repro.collective import Plan, make_plan
 
 __all__ = ["BuddyStore"]
 
@@ -27,6 +33,9 @@ class BuddyStore:
         if n_ranks & (n_ranks - 1):
             raise ValueError("buddy store needs a power-of-two rank count")
         self.n_ranks = n_ranks
+        # The fault-free redundant plan IS the replica-placement table:
+        # steps[s].perm_rounds pairs r with its level-s XOR buddy.
+        self.plan: Plan = make_plan("redundant", n_ranks)
         # holdings[r] = {owner_rank: (step, state)} — what r keeps in memory
         self.holdings: list[dict[int, tuple[int, object]]] = [
             {} for _ in range(n_ranks)
@@ -35,22 +44,21 @@ class BuddyStore:
 
     # ------------------------------------------------------------------
     def checkpoint(self, step: int, shards: dict[int, object], levels: int = 1):
-        """Each live rank stores its own shard and pushes copies to its
-        XOR-buddies for ``levels`` rounds (2^levels copies total)."""
+        """Each live rank stores its own shard, then pushes copies along the
+        redundant plan's exchange routes for ``levels`` butterfly levels
+        (2^levels copies total, capped at the plan depth)."""
         for r, shard in shards.items():
             if not self.alive[r]:
                 continue
             snap = copy.deepcopy(shard)
             self.holdings[r][r] = (step, snap)
-        for s in range(levels):
-            for r in range(self.n_ranks):
-                if not self.alive[r]:
-                    continue
-                b = r ^ (1 << s)
-                if not self.alive[b]:
-                    continue
-                for owner, item in list(self.holdings[r].items()):
-                    self.holdings[b].setdefault(owner, item)
+        for plan_step in self.plan.steps[:levels]:
+            for rnd in plan_step.perm_rounds:
+                for src, dst in rnd:
+                    if not (self.alive[src] and self.alive[dst]):
+                        continue
+                    for owner, item in list(self.holdings[src].items()):
+                        self.holdings[dst].setdefault(owner, item)
 
     def fail(self, rank: int):
         self.alive[rank] = False

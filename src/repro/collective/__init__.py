@@ -1,0 +1,70 @@
+"""Fault-tolerant butterfly collectives (the paper's machinery, generalized).
+
+The paper's core insight — redundant computation in a communication-avoiding
+butterfly buys fault tolerance — is not specific to the QR combiner: the
+plan/route/validity machinery applies to any combine that is associative
+over contiguous index blocks.  This package is that machinery, extracted
+into one subsystem:
+
+  * :mod:`~repro.collective.comm`      — the two execution backends
+    (``SimComm`` single-device simulation, ``ShardMapComm`` SPMD/ppermute);
+  * :mod:`~repro.collective.faults`    — the fail-stop fault model and the
+    paper's 2^s − 1 tolerance accounting;
+  * :mod:`~repro.collective.plan`      — host-side routing for the four
+    variants (tree / redundant / replace / selfhealing) + wire accounting;
+  * :mod:`~repro.collective.combiners` — the pluggable combine algebra
+    (``qr_combine``, ``sum``, ``mean``, ``max``, ``gram_sum``);
+  * :mod:`~repro.collective.engine`    — ``execute_plan`` / ``ft_allreduce``,
+    the plan executor with validity threading and self-healing restores.
+
+Consumers: :mod:`repro.core.tsqr` (QR-combiner instantiation),
+:mod:`repro.optim.powersgd` (orthogonalization + Gram reductions),
+:mod:`repro.checkpoint.replicated` (plan-derived buddy placement), and
+:mod:`repro.runtime.trainer` (BLANK-mode gradient all-reduce).
+See DESIGN.md §"Collective engine".
+"""
+from .combiners import (
+    COMBINERS,
+    Combiner,
+    GramSumCombiner,
+    MaxCombiner,
+    MeanCombiner,
+    QRCombiner,
+    SumCombiner,
+    get_combiner,
+    posdiag,
+    qr_r,
+)
+from .comm import Comm, ShardMapComm, SimComm
+from .engine import execute_plan, ft_allreduce
+from .faults import NEVER, FaultSpec, tolerance, total_tolerance, within_tolerance
+from .plan import VARIANTS, Plan, Step, ilog2, make_plan, payload_numel
+
+__all__ = [
+    "COMBINERS",
+    "Comm",
+    "Combiner",
+    "FaultSpec",
+    "GramSumCombiner",
+    "MaxCombiner",
+    "MeanCombiner",
+    "NEVER",
+    "Plan",
+    "QRCombiner",
+    "ShardMapComm",
+    "SimComm",
+    "Step",
+    "SumCombiner",
+    "VARIANTS",
+    "execute_plan",
+    "ft_allreduce",
+    "get_combiner",
+    "ilog2",
+    "make_plan",
+    "payload_numel",
+    "posdiag",
+    "qr_r",
+    "tolerance",
+    "total_tolerance",
+    "within_tolerance",
+]

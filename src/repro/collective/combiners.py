@@ -1,0 +1,156 @@
+"""Pluggable combiners for the fault-tolerant butterfly engine.
+
+The paper's plan/route/validity machinery (redundant exchange, replica
+rerouting, self-healing respawn) only requires the per-level combine to be
+*associative over contiguous index blocks*: after level ``s`` every valid
+rank holds the combine of its whole ``2^(s+1)`` block, so any block member
+is a replica.  A :class:`Combiner` packages the three algorithm-specific
+pieces the engine needs:
+
+  * ``prepare``  — the local transform applied before level 0 (local QR for
+    TSQR, identity for arithmetic reductions);
+  * ``combine``  — merge the lower-block and upper-block partials.  The
+    engine always presents operands ordered by the level bit of the block
+    index, so order-sensitive combines (QR row-stacking) produce
+    bit-identical results on every member of a block — the property that
+    makes the butterfly a true all-reduce;
+  * ``finalize`` — post-butterfly fixup (mean divides by the rank count).
+
+``wire_symmetric`` declares that payloads are symmetric matrices, enabling
+the n(n+1)/2 packed wire accounting in :meth:`repro.collective.plan.Plan.
+bytes_on_wire`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = [
+    "Combiner",
+    "SumCombiner",
+    "MeanCombiner",
+    "MaxCombiner",
+    "GramSumCombiner",
+    "QRCombiner",
+    "get_combiner",
+    "COMBINERS",
+    "posdiag",
+    "qr_r",
+]
+
+
+def posdiag(r):
+    """Normalize an upper-triangular factor to a non-negative diagonal.
+
+    Makes the R factor unique, so every rank (and the numpy oracle) computes
+    bit-comparable results.
+    """
+    d = jnp.diagonal(r, axis1=-2, axis2=-1)
+    s = jnp.where(d < 0, -1.0, 1.0).astype(r.dtype)
+    return r * s[..., :, None]
+
+
+def qr_r(a):
+    """Householder QR, R factor only, sign-normalized."""
+    return posdiag(jnp.linalg.qr(a, mode="r"))
+
+
+class Combiner:
+    """Protocol for butterfly combiners.  Subclasses override ``combine``."""
+
+    name: str = "?"
+    # Payload is a symmetric matrix → n(n+1)/2 packed wire encoding applies.
+    wire_symmetric: bool = False
+
+    def prepare(self, x):
+        """Local transform before the first exchange (per payload leaf)."""
+        return x
+
+    def combine(self, lo, hi):
+        """Merge two block partials; ``lo`` is the lower-index block."""
+        raise NotImplementedError
+
+    def finalize(self, x, n_ranks: int):
+        """Post-butterfly fixup (per payload leaf)."""
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class SumCombiner(Combiner):
+    name = "sum"
+
+    def combine(self, lo, hi):
+        return lo + hi
+
+
+@dataclasses.dataclass(frozen=True)
+class MeanCombiner(Combiner):
+    name = "mean"
+
+    def combine(self, lo, hi):
+        return lo + hi
+
+    def finalize(self, x, n_ranks: int):
+        return x / n_ranks
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxCombiner(Combiner):
+    name = "max"
+
+    def combine(self, lo, hi):
+        return jnp.maximum(lo, hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class GramSumCombiner(Combiner):
+    """Sum of symmetric Gram payloads (the Gram-butterfly TSQR and the
+    CholeskyQR reorthogonalization both ride this).  Arithmetically a plain
+    sum; the separate combiner records that the wire payload is symmetric,
+    so accounting can price the n(n+1)/2 packed encoding."""
+
+    name = "gram_sum"
+    wire_symmetric = True
+
+    def combine(self, lo, hi):
+        return lo + hi
+
+
+@dataclasses.dataclass(frozen=True)
+class QRCombiner(Combiner):
+    """The paper's TSQR combine: ``R = qr([R_lo; R_hi])`` with the operands
+    row-stacked in block order.  ``local_qr`` is the level-0 panel
+    factorization (Householder, CholeskyQR2, or the Pallas kernel)."""
+
+    local_qr: Callable = qr_r
+    name = "qr_combine"
+
+    def prepare(self, x):
+        return self.local_qr(x)
+
+    def combine(self, lo, hi):
+        return qr_r(jnp.concatenate([lo, hi], axis=-2))
+
+
+COMBINERS: dict[str, Callable[[], Combiner]] = {
+    "sum": SumCombiner,
+    "mean": MeanCombiner,
+    "max": MaxCombiner,
+    "gram_sum": GramSumCombiner,
+    "qr_combine": QRCombiner,
+    "qr": QRCombiner,
+}
+
+
+def get_combiner(op) -> Combiner:
+    """Resolve a combiner name (or pass an instance through)."""
+    if isinstance(op, Combiner):
+        return op
+    try:
+        return COMBINERS[op]()
+    except KeyError:
+        raise ValueError(
+            f"unknown combiner {op!r}; choose from {sorted(set(COMBINERS))}"
+        ) from None

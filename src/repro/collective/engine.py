@@ -1,0 +1,120 @@
+"""The plan-driven, fault-tolerant butterfly-collective engine.
+
+This is the generic half of the paper's contribution, factored out of the
+TSQR implementation: :func:`execute_plan` runs any
+:class:`~repro.collective.plan.Plan` (tree / redundant / replace /
+selfhealing) with any :class:`~repro.collective.combiners.Combiner`,
+threading validity bits alongside every payload and performing the
+Self-Healing restore rounds.  It is written once against
+:class:`~repro.collective.comm.Comm`, so every combiner executes identically
+on :class:`~repro.collective.comm.SimComm` (single device, leading (P,)
+axis) and :class:`~repro.collective.comm.ShardMapComm` (SPMD,
+``lax.ppermute``).
+
+:func:`ft_allreduce` is the public entry point for arithmetic reductions —
+a recursive-doubling all-reduce over the same butterfly as TSQR, inheriting
+the paper's ``2^s − 1`` fault tolerance for free.  It replaces the old
+fault-oblivious ``butterfly_allreduce_sum``: PowerSGD's Gram reductions,
+the CholeskyQR reorthogonalization passes, and the trainer's BLANK-mode
+gradient reduction all route through it.
+
+Validity semantics: a dead rank's contribution is zero-filled (XLA
+collective-permute semantics) and flagged invalid — the step-boundary
+analogue of ULFM's error returns.  The host plan predicts the same validity;
+tests assert the two agree bit-for-bit.  Invalid payload slots are poisoned
+(NaN for inexact dtypes) so accidental use is loud.
+
+Payloads may be arbitrary pytrees (one shared validity bit per rank): the
+trainer routes whole gradient trees through one call.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .combiners import Combiner, get_combiner
+from .comm import Comm
+from .faults import NEVER, FaultSpec
+from .plan import Plan, make_plan
+
+__all__ = ["execute_plan", "ft_allreduce"]
+
+
+def _poison(leaf):
+    """Fill for invalid slots: NaN where representable, zero otherwise."""
+    if jnp.issubdtype(leaf.dtype, jnp.inexact):
+        return jnp.full_like(leaf, jnp.nan)
+    return jnp.zeros_like(leaf)
+
+
+def execute_plan(x, comm: Comm, plan: Plan, combiner: Combiner | str):
+    """Run ``plan`` over ``x`` with ``combiner``.  Returns ``(value, valid)``.
+
+    ``x`` is a pytree of per-rank payloads (leading (P,) axis under
+    ``SimComm``, local blocks under ``ShardMapComm``).  ``value`` is the
+    un-finalized combine (callers wanting mean semantics etc. should use
+    :func:`ft_allreduce`); ``valid`` is the per-rank validity bit, which
+    matches ``plan.final_valid`` bit-for-bit.
+    """
+    combiner = get_combiner(combiner)
+    val = jax.tree.map(combiner.prepare, x)
+    d = comm.take(plan.death)
+    my = comm.ranks()
+    valid = d > 0
+    for step in plan.steps:
+        s = step.level
+        can = valid & (d > s)
+        # ---- exchange (possibly several unique-source rounds) -------------
+        recv = jax.tree.map(jnp.zeros_like, val)
+        recv_v = jnp.zeros_like(can)
+        for rnd in step.perm_rounds:
+            rr, rv = comm.exchange((val, can), rnd)
+            recv = jax.tree.map(jnp.add, recv, rr)  # each rank receives ≤once
+            recv_v = recv_v | rv
+        # ---- combine: operands ordered by this level's block bit ----------
+        mine_first = ((my >> s) & 1) == 0
+        lo = jax.tree.map(lambda m, o: comm.bwhere(mine_first, m, o), val, recv)
+        hi = jax.tree.map(lambda m, o: comm.bwhere(mine_first, o, m), val, recv)
+        new = jax.tree.map(combiner.combine, lo, hi)
+        valid = can & recv_v
+        val = jax.tree.map(lambda nv: comm.bwhere(valid, nv, _poison(nv)), new)
+        # ---- Self-Healing: respawn dead ranks from a replica ---------------
+        if step.restore_rounds:
+            for rnd in step.restore_rounds:
+                rr, rv = comm.exchange((val, valid), rnd)
+                got = rv & ~valid
+                val = jax.tree.map(
+                    lambda cur, rec: comm.bwhere(got, rec, cur), val, rr
+                )
+                valid = valid | got
+            respawned = comm.take(step.respawned)
+            d = jnp.where(respawned, jnp.asarray(NEVER, d.dtype), d)
+    return val, valid
+
+
+def ft_allreduce(
+    x,
+    comm: Comm,
+    *,
+    op: Combiner | str = "sum",
+    variant: str = "redundant",
+    fault_spec: FaultSpec | None = None,
+    plan: Plan | None = None,
+):
+    """Fault-tolerant all-reduce over the paper's butterfly.
+
+    Fault-free this is exactly the redundant-TSQR communication pattern with
+    the requested combiner; under a ``fault_spec`` (or explicit ``plan``) it
+    inherits the variant's tolerance — ``2^s − 1`` failures at the entry of
+    exchange ``s`` — and survivors end with the full reduction.
+
+    Returns ``(value, valid)``: ``value`` is the finalized reduction (pytree
+    like ``x``), ``valid`` the per-rank validity bit.  Invalid ranks hold
+    poisoned (NaN) payloads.
+    """
+    if plan is None:
+        plan = make_plan(variant, comm.n_ranks, fault_spec)
+    combiner = get_combiner(op)
+    val, valid = execute_plan(x, comm, plan, combiner)
+    val = jax.tree.map(lambda leaf: combiner.finalize(leaf, plan.n_ranks), val)
+    return val, valid

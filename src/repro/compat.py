@@ -1,0 +1,87 @@
+"""Version-compatibility shims for the installed jax.
+
+The repo targets recent jax (the explicit-sharding era:
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.shard_map(..., check_vma=...)``) but must degrade gracefully on older
+releases (0.4.x) where those names/kwargs do not exist.  Everything in the
+repo that builds a mesh or enters ``shard_map`` goes through this module so
+the compatibility decision is made exactly once.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = [
+    "AxisType",
+    "HAS_AXIS_TYPES",
+    "axis_types_kwargs",
+    "make_mesh",
+    "mesh_from_devices",
+    "shard_map",
+]
+
+try:
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_AXIS_TYPES = True
+except ImportError:  # older jax: meshes are implicitly "auto" everywhere
+
+    class AxisType:  # type: ignore[no-redef]
+        """Stand-in so ``(AxisType.Auto,) * n`` spellings keep working."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPES = False
+
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """``axis_types=(Auto,)*n`` when the installed jax understands it."""
+    if HAS_AXIS_TYPES:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+    return {}
+
+
+def make_mesh(axis_shapes, axis_names) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types when supported."""
+    try:
+        return jax.make_mesh(
+            axis_shapes, axis_names, **axis_types_kwargs(len(axis_names))
+        )
+    except TypeError:  # make_mesh predates the axis_types kwarg
+        return jax.make_mesh(axis_shapes, axis_names)
+
+
+def mesh_from_devices(devices, axis_names) -> Mesh:
+    """``Mesh(devices, names)`` from an explicit device array (elastic
+    shrink/rebuild paths), with Auto axis types when supported."""
+    try:
+        return Mesh(devices, axis_names, **axis_types_kwargs(len(axis_names)))
+    except TypeError:
+        return Mesh(devices, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions.
+
+    Replication/VMA checking is disabled in all cases: the collective engine
+    mixes host-planned ``ppermute`` routes with per-rank control values,
+    which the static checkers cannot type.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=False,
+            )
+        except TypeError:  # pre-check_vma spelling
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+            )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

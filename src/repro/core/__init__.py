@@ -1,21 +1,36 @@
 """Core library: fault-tolerant communication-avoiding TSQR (Coti 2015).
 
-The paper's contribution as a composable JAX module:
+The generic plan/route/validity machinery now lives in
+:mod:`repro.collective` (comm backends, fault model, planners, combiners,
+and the ``execute_plan`` / ``ft_allreduce`` engine); this package keeps the
+QR-combiner instantiation and the numpy ground truth:
 
   * :mod:`repro.core.tsqr`   — the four algorithm variants (tree / redundant /
-    replace / self-healing) on sim and shard_map backends;
-  * :mod:`repro.core.plan`   — host-side routing + robustness oracle;
-  * :mod:`repro.core.faults` — the fail-stop fault model and the paper's
-    tolerance accounting (2^s − 1);
-  * :mod:`repro.core.comm`   — the two communication backends;
+    replace / self-healing) on sim and shard_map backends, plus Q formation;
   * :mod:`repro.core.ref`    — numpy ground truth.
+
+``repro.core.plan`` / ``repro.core.faults`` / ``repro.core.comm`` remain as
+compatibility shims re-exporting the moved collective modules, and the names
+below are re-exported unchanged so existing imports keep working.
 """
-from .comm import ShardMapComm, SimComm
-from .faults import NEVER, FaultSpec, tolerance, total_tolerance, within_tolerance
-from .plan import Plan, Step, make_plan
+from repro.collective import (
+    NEVER,
+    FaultSpec,
+    Plan,
+    ShardMapComm,
+    SimComm,
+    Step,
+    ft_allreduce,
+    make_plan,
+    tolerance,
+    total_tolerance,
+    within_tolerance,
+)
+
 from .tsqr import (
     TSQRResult,
-    butterfly_allreduce_sum,
+    form_q,
+    tsqr_gram_shard_map,
     tsqr_shard_map,
     tsqr_sim,
 )
@@ -28,10 +43,12 @@ __all__ = [
     "ShardMapComm",
     "SimComm",
     "TSQRResult",
-    "butterfly_allreduce_sum",
+    "form_q",
+    "ft_allreduce",
     "make_plan",
     "tolerance",
     "total_tolerance",
+    "tsqr_gram_shard_map",
     "tsqr_shard_map",
     "tsqr_sim",
     "within_tolerance",

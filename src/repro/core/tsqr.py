@@ -1,9 +1,17 @@
 """Fault-tolerant, communication-avoiding TSQR (Coti 2015) in JAX.
 
+This module is now a thin instantiation of the generic collective engine
+(:mod:`repro.collective`) with the QR combiner: the plan/route/validity
+machinery, the butterfly executor, and the self-healing restore rounds all
+live in :func:`repro.collective.engine.execute_plan`; this file contributes
+only what is QR-specific — the local panel factorizations, the
+``Q = A·R⁻¹`` formation, and the entry-point plumbing.
+
 The four variants of the paper are driven by a host-computed
-:class:`~repro.core.plan.Plan` and execute identically on the
-:class:`~repro.core.comm.SimComm` (single device, leading (P,) axis) and
-:class:`~repro.core.comm.ShardMapComm` (SPMD, ``lax.ppermute``) backends:
+:class:`~repro.collective.plan.Plan` and execute identically on the
+:class:`~repro.collective.comm.SimComm` (single device, leading (P,) axis)
+and :class:`~repro.collective.comm.ShardMapComm` (SPMD, ``lax.ppermute``)
+backends:
 
   * ``tree``        — Alg. 1, the baseline reduction tree (zero redundancy);
   * ``redundant``   — Alg. 2, butterfly *exchange*: both buddies combine, so
@@ -13,38 +21,37 @@ The four variants of the paper are driven by a host-computed
   * ``selfhealing`` — Alg. 4–6, additionally respawns dead ranks from a
                       replica at every level.
 
-Validity bits ride along with every payload: a dead rank's contribution is
-zero-filled (XLA collective-permute semantics) and flagged invalid, which is
-the step-boundary analogue of ULFM's error returns.  The host plan predicts
-the same validity; tests assert the two agree bit-for-bit.
-
 The combine is ``QR([R_lo; R_hi])`` ordered by the level bit of the *block*
 index so every member of a block computes an identical R (making the
 butterfly a true all-reduce — every survivor ends with the same final R,
 which the paper's semantics require and which lets Q be formed locally as
-``A R⁻¹`` without a backward tree pass).
+``A R⁻¹`` without a backward tree pass).  The CholeskyQR reorthogonalization
+inside :func:`form_q` reduces its Gram matrices with
+:func:`~repro.collective.engine.ft_allreduce` (``gram_sum`` combiner) over
+the same butterfly.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from .comm import Comm, ShardMapComm, SimComm
-from .faults import NEVER, FaultSpec
-from .plan import Plan, make_plan
+from repro.collective.combiners import QRCombiner, posdiag as _posdiag, qr_r
+from repro.collective.comm import Comm, ShardMapComm, SimComm
+from repro.collective.engine import execute_plan, ft_allreduce
+from repro.collective.faults import FaultSpec
+from repro.collective.plan import Plan, make_plan
+from repro.compat import shard_map
 
 __all__ = [
     "TSQRResult",
     "tsqr_sim",
     "tsqr_shard_map",
-    "butterfly_allreduce_sum",
+    "tsqr_gram_shard_map",
+    "form_q",
     "local_qr_fns",
 ]
 
@@ -53,20 +60,9 @@ __all__ = [
 # Local QR building blocks
 # ---------------------------------------------------------------------------
 
-def _posdiag(r):
-    """Normalize an upper-triangular factor to a non-negative diagonal.
-
-    Makes the R factor unique, so every rank (and the numpy oracle) computes
-    bit-comparable results.
-    """
-    d = jnp.diagonal(r, axis1=-2, axis2=-1)
-    s = jnp.where(d < 0, -1.0, 1.0).astype(r.dtype)
-    return r * s[..., :, None]
-
-
 def qr_r_jnp(a):
     """Householder QR, R factor only (LAPACK on CPU, QR-decomp HLO on TPU)."""
-    return _posdiag(jnp.linalg.qr(a, mode="r"))
+    return qr_r(a)
 
 
 def qr_r_cqr2(a):
@@ -87,6 +83,10 @@ local_qr_fns: dict[str, Callable] = {
     "cqr2": qr_r_cqr2,
     "cqr2_pallas": qr_r_cqr2_pallas,
 }
+
+
+def _resolve_local_qr(local_qr: str | Callable) -> Callable:
+    return local_qr_fns[local_qr] if isinstance(local_qr, str) else local_qr
 
 
 # ---------------------------------------------------------------------------
@@ -110,55 +110,13 @@ class TSQRResult:
 
 
 # ---------------------------------------------------------------------------
-# The single-source butterfly/tree executor
+# Q formation (QR-specific; the reduction rides the generic engine)
 # ---------------------------------------------------------------------------
 
-def _execute(
-    a_blocks,
-    comm: Comm,
-    plan: Plan,
-    local_qr: Callable,
-):
-    """Run the plan. Returns (R, valid, d_eff) per rank."""
-    r = local_qr(a_blocks)
-    nan = jnp.asarray(jnp.nan, dtype=r.dtype)
-    d = comm.take(plan.death)
-    my = comm.ranks()
-    valid = d > 0
-    for step in plan.steps:
-        s = step.level
-        can = valid & (d > s)
-        # ---- exchange (possibly several unique-source rounds) -------------
-        recv_r = jnp.zeros_like(r)
-        recv_v = jnp.zeros_like(can)
-        for rnd in step.perm_rounds:
-            rr, rv = comm.exchange((r, can), rnd)
-            recv_r = recv_r + rr          # each rank receives in ≤1 round
-            recv_v = recv_v | rv
-        # ---- combine: order by this level's block bit ----------------------
-        mine_first = ((my >> s) & 1) == 0
-        lo = comm.bwhere(mine_first, r, recv_r)
-        hi = comm.bwhere(mine_first, recv_r, r)
-        stacked = jnp.concatenate([lo, hi], axis=-2)
-        new_r = _posdiag(jnp.linalg.qr(stacked, mode="r"))
-        valid = can & recv_v
-        r = comm.bwhere(valid, new_r, jnp.full_like(new_r, nan))
-        # ---- Self-Healing: respawn dead ranks from a replica ---------------
-        if step.restore_rounds:
-            for rnd in step.restore_rounds:
-                rr, rv = comm.exchange((r, valid), rnd)
-                got = rv & ~valid
-                r = comm.bwhere(got, rr, r)
-                valid = valid | got
-            respawned = comm.take(step.respawned)
-            d = jnp.where(respawned, jnp.asarray(NEVER, d.dtype), d)
-    return r, valid
-
-
-def _compute_q(a_blocks, r, comm: Comm, reorth: int):
+def form_q(a_blocks, r, comm: Comm, reorth: int = 1):
     """Q = A·R⁻¹ locally (every survivor holds the same final R), followed by
     ``reorth`` CholeskyQR-style re-orthonormalization passes whose Gram
-    reduction reuses the fault-tolerant butterfly (sum combiner).
+    reduction rides the fault-tolerant butterfly (``gram_sum`` combiner).
 
     Requires an all-valid plan (fault-free, or self-healing within
     tolerance): Q spans *all* row-blocks, so a permanently-lost block makes
@@ -176,26 +134,11 @@ def _compute_q(a_blocks, r, comm: Comm, reorth: int):
     q = solve_r(a_blocks, r)
     for _ in range(reorth):
         g = jnp.swapaxes(q, -1, -2) @ q
-        g_sum = butterfly_allreduce_sum(g, comm)
+        g_sum, _ = ft_allreduce(g, comm, op="gram_sum")
         r2 = _posdiag(jnp.swapaxes(jnp.linalg.cholesky(g_sum), -1, -2))
         q = solve_r(q, r2)
         r = _posdiag(r2 @ r)
     return q, r
-
-
-def butterfly_allreduce_sum(x, comm: Comm):
-    """Recursive-doubling all-reduce over the same butterfly as TSQR.
-
-    On the fault-free path this is exactly the redundant-TSQR communication
-    pattern with a ``+`` combiner — the building block the optimizer layer
-    (PowerSGD Gram reductions) shares with the factorization.
-    """
-    p = comm.n_ranks
-    s_max = p.bit_length() - 1
-    for s in range(s_max):
-        perm = [(i, i ^ (1 << s)) for i in range(p)]
-        x = x + comm.exchange(x, perm)
-    return x
 
 
 # ---------------------------------------------------------------------------
@@ -225,11 +168,11 @@ def tsqr_sim(
             f"{plan.final_valid}"
         )
     comm = SimComm(p)
-    fn = local_qr_fns[local_qr] if isinstance(local_qr, str) else local_qr
-    r, valid = _execute(a_blocks, comm, plan, fn)
+    combiner = QRCombiner(_resolve_local_qr(local_qr))
+    r, valid = execute_plan(a_blocks, comm, plan, combiner)
     q = None
     if compute_q:
-        q, r = _compute_q(a_blocks, r, comm, reorth)
+        q, r = form_q(a_blocks, r, comm, reorth)
     return TSQRResult(r=r, valid=valid, q=q, plan=plan)
 
 
@@ -248,12 +191,14 @@ def tsqr_gram_shard_map(
     log₂(P) Householder factorizations of 2n×n on the critical path, each
     sequential and VPU-bound on TPU.  This variant keeps the *same
     butterfly* (same exchanges, same 2^s-copy redundancy, same fault
-    semantics — the combiner is ``+``) but carries Gram matrices:
-    ``G = Σ AᵢᵀAᵢ``, one Cholesky at the end, and a CholeskyQR2 polish for
-    Householder-grade orthogonality.  Per level the combine is an n×n add
-    instead of an O(n³) QR; the local work is one MXU Gram matmul instead
-    of a Householder panel.  Wire bytes are identical (n² per exchange —
-    n(n+1)/2 with symmetric packing, left on the table).
+    semantics) but swaps the combiner to ``gram_sum``: it carries Gram
+    matrices ``G = Σ AᵢᵀAᵢ``, one Cholesky at the end, and a CholeskyQR2
+    polish for Householder-grade orthogonality.  Per level the combine is
+    an n×n add instead of an O(n³) QR; the local work is one MXU Gram
+    matmul instead of a Householder panel.  Wire bytes are n² per exchange
+    shipped square — n(n+1)/2 with symmetric packing, which
+    ``Plan.bytes_on_wire(symmetric=True)`` now prices (see
+    benchmarks/comm_volume.py).
 
     Numerics: κ(A)² enters the Gram, so the polish round is mandatory;
     certified for κ(A) ≲ 1/√ε like CQR2.
@@ -264,17 +209,16 @@ def tsqr_gram_shard_map(
     def body(a_blk):
         a32 = a_blk.astype(jnp.float32)
         g = jnp.einsum("mi,mj->ij", a32, a32)
-        g = butterfly_allreduce_sum(g, comm)
+        g, _ = ft_allreduce(g, comm, op="gram_sum")
         r = _posdiag(jnp.swapaxes(jnp.linalg.cholesky(g), -1, -2))
-        q, r = _compute_q(a_blk, r, comm, reorth)
+        q, r = compute_q(a_blk, r, comm, reorth)
         return r[None], q
 
-    shard = jax.shard_map(
+    shard = shard_map(
         body,
         mesh=mesh,
         in_specs=P(axis),
         out_specs=(P(axis), P(axis)),
-        check_vma=False,
     )
     fun = jax.jit(shard) if jit else shard
     r, q = fun(a_global)
@@ -311,26 +255,26 @@ def tsqr_shard_map(
             "self-healing within tolerance)"
         )
     comm = ShardMapComm(p, axis)
-    fn = local_qr_fns[local_qr] if isinstance(local_qr, str) else local_qr
+    combiner = QRCombiner(_resolve_local_qr(local_qr))
+    want_q = compute_q
 
     def body(a_blk):
         a = a_blk  # (m_local, n)
-        r, valid = _execute(a, comm, plan, fn)
+        r, valid = execute_plan(a, comm, plan, combiner)
         q = None
-        if compute_q:
-            q, r = _compute_q(a, r, comm, reorth)
-        out_q = q if compute_q else jnp.zeros((0, a.shape[-1]), a.dtype)
+        if want_q:
+            q, r = form_q(a, r, comm, reorth)
+        out_q = q if want_q else jnp.zeros((0, a.shape[-1]), a.dtype)
         return r[None], valid[None], out_q
 
-    shard = jax.shard_map(
+    shard = shard_map(
         body,
         mesh=mesh,
         in_specs=P(axis),
         out_specs=(P(axis), P(axis), P(axis)),
-        check_vma=False,
     )
     fun = jax.jit(shard) if jit else shard
     r, valid, q = fun(a_global)
     return TSQRResult(
-        r=r, valid=valid, q=(q if compute_q else None), plan=plan
+        r=r, valid=valid, q=(q if want_q else None), plan=plan
     )

@@ -61,15 +61,24 @@ class SyntheticCorpus:
             + np.uint64(cfg.seed) * np.uint64(0x1000003)
         )
         h = _counter_hash(idx)
-        # zipf-ish marginal + Markov structure: token t+1 reuses half the
-        # bits of token t, so a model can learn something.
+        # zipf-ish marginal + repeat structure.  (The previous mixing
+        # ``(zipf[t+1] + 7·zipf[t]) % V`` flattened the marginal to uniform,
+        # leaving nothing a model could learn in a short run.)  Fresh tokens
+        # keep the heavy-tailed Zipf marginal — a frequency bias any model
+        # picks up within a few steps — and each position repeats its
+        # predecessor with probability 1/2 (an independent hash bit), giving
+        # an attention-learnable copy signal.  Both draws are row-local
+        # functions of the counter hash, preserving determinism and shard
+        # composability.
         u = (h >> np.uint64(11)).astype(np.float64) / float(1 << 53)
         zipf = np.minimum(
             (cfg.vocab * (u ** 2.2)).astype(np.int64), cfg.vocab - 1
         )
-        mixed = zipf.copy()
-        mixed[:, 1:] = (zipf[:, 1:] + zipf[:, :-1] * 7) % cfg.vocab
-        toks = mixed.astype(np.int32)
+        repeat = ((h >> np.uint64(3)) & np.uint64(1)).astype(bool)
+        repeat[:, 0] = False                       # position 0 is always fresh
+        cols = np.arange(cfg.seq_len + 1, dtype=np.int64)[None, :]
+        last_fresh = np.maximum.accumulate(np.where(~repeat, cols, -1), axis=1)
+        toks = np.take_along_axis(zipf, last_fresh, axis=1).astype(np.int32)
         out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
         if cfg.family == "encdec":
             fh = _counter_hash(idx[:, : cfg.enc_frames] + np.uint64(0xABCDEF))

@@ -6,13 +6,15 @@ set ``XLA_FLAGS`` before the first jax call.
 
 Topology: TPU v5e pods, 16×16 = 256 chips per pod; the multi-pod mesh adds
 a leading "pod" axis over DCN.  ``make_tsqr_mesh`` flattens all devices
-into one "rows" axis — the layout the factorization's butterfly runs on
+into one "rows" axis — the layout the collective butterfly runs on
 (log2(256) = 8, log2(512) = 9 exchange levels).
+
+Construction goes through :mod:`repro.compat.make_mesh` so the ``axis_types``
+kwarg is applied only on jax versions that understand it.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_tsqr_mesh", "make_smoke_mesh"]
 
@@ -20,15 +22,13 @@ __all__ = ["make_production_mesh", "make_tsqr_mesh", "make_smoke_mesh"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_tsqr_mesh(*, multi_pod: bool = False):
     n = 512 if multi_pod else 256
-    return jax.make_mesh((n,), ("rows",), axis_types=(AxisType.Auto,))
+    return make_mesh((n,), ("rows",))
 
 
 def make_smoke_mesh(data: int = 1, model: int = 1):
-    return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+    return make_mesh((data, model), ("data", "model"))

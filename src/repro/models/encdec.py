@@ -16,7 +16,6 @@ import math
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from . import layers as L
 from .sharding import constrain

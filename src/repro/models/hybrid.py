@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from . import layers as L
 from . import ssm as S

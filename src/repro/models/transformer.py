@@ -21,7 +21,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from . import layers as L
 from . import moe as M

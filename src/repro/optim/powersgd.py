@@ -9,7 +9,10 @@ The paper's algorithm embedded in the data-parallel gradient exchange
      the left factor: r columns instead of n
   3. ``P̂, _ = FT-TSQR(P̄)`` over the **model** axis — the butterfly makes
      every model rank hold the same R (and tolerates 2^s−1 rank failures,
-     paper §III-B3); Q̂ = P̄·R⁻¹ locally
+     paper §III-B3); Q̂ = P̄·R⁻¹ locally.  Both the QR butterfly and the
+     reorthogonalization's Gram reductions ride the public collective
+     engine (``repro.collective``), so every reduction in the round
+     inherits the paper's tolerance.
   4. ``S_loc = Gᵀ @ P̂``; ``S̄ = psum_data(S_loc) / D`` — right-factor
      exchange, again r columns
   5. ``Ĝ = P̂ @ S̄ᵀ`` — rank-r approximation of the data-mean gradient,
@@ -20,21 +23,19 @@ Data-axis bytes per step: r·(m+n)·4 instead of m·n·4 — the PowerSGD win.
 The orthogonalization collective is the paper's redundant butterfly, so a
 replica loss during step 3 leaves every survivor with the factor.
 
-This module is written against :class:`repro.core.comm.Comm` so the
+This module is written against :class:`repro.collective.comm.Comm` so the
 test-suite drives it on ``SimComm`` (P-leading axes) and the example
 driver on ``ShardMapComm`` inside ``shard_map``.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import FaultSpec, make_plan
-from repro.core.comm import Comm
-from repro.core.tsqr import _compute_q, _execute, local_qr_fns
+from repro.collective import Comm, FaultSpec, QRCombiner, execute_plan, make_plan
+from repro.core.tsqr import form_q, local_qr_fns
 
 __all__ = ["PowerSGDConfig", "init_state", "compress_grad"]
 
@@ -61,10 +62,11 @@ def init_state(key, shape, cfg: PowerSGDConfig, leading=()):
 
 
 def _ft_tsqr_q(p_bar, comm: Comm, cfg: PowerSGDConfig, fault_spec):
-    """Orthonormalize the row-distributed P̄ via the paper's butterfly."""
+    """Orthonormalize the row-distributed P̄ via the paper's butterfly
+    (public engine API: plan → execute with the QR combiner → form_q)."""
     plan = make_plan(cfg.variant, comm.n_ranks, fault_spec)
-    r, valid = _execute(p_bar, comm, plan, local_qr_fns["jnp"])
-    q, _ = _compute_q(p_bar, r, comm, cfg.reorth)
+    r, valid = execute_plan(p_bar, comm, plan, QRCombiner(local_qr_fns["jnp"]))
+    q, _ = form_q(p_bar, r, comm, cfg.reorth)
     return q, valid
 
 

@@ -1,16 +1,19 @@
 """Elastic mesh management: SHRINK / REBUILD at the device level.
 
-``shrink_mesh`` halves the data axis (power-of-two widths keep the TSQR
-butterfly well-formed and the collectives balanced) and returns a mesh over
-the surviving device subset; state is re-sharded by the trainer via
-device_put.  ``rebuild_mesh`` re-creates the original topology once
+``shrink_mesh`` halves the data axis (power-of-two widths keep the
+collective butterfly well-formed and the collectives balanced) and returns a
+mesh over the surviving device subset; state is re-sharded by the trainer
+via device_put.  ``rebuild_mesh`` re-creates the original topology once
 replacement hardware is available (REBUILD semantics).
+
+Mesh construction goes through :mod:`repro.compat` so the module imports on
+jax versions without ``jax.sharding.AxisType`` (plain ``Mesh(...)`` kwargs).
 """
 from __future__ import annotations
 
-import numpy as np
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import mesh_from_devices
 
 __all__ = ["shrink_mesh", "rebuild_mesh"]
 
@@ -34,17 +37,11 @@ def shrink_mesh(mesh: Mesh, drop_replicas: int = 1) -> Mesh | None:
     take = [slice(None)] * mesh.devices.ndim
     take[ax] = slice(0, new_d)
     devs = mesh.devices[tuple(take)]
-    return Mesh(
-        devs, mesh.axis_names,
-        axis_types=(AxisType.Auto,) * len(mesh.axis_names),
-    )
+    return mesh_from_devices(devs, mesh.axis_names)
 
 
 def rebuild_mesh(template_mesh: Mesh) -> Mesh:
     """REBUILD: re-instantiate the full original topology (replacement
     devices joined).  On real fleets this waits for the scheduler; here the
     devices never physically left."""
-    return Mesh(
-        template_mesh.devices, template_mesh.axis_names,
-        axis_types=(AxisType.Auto,) * len(template_mesh.axis_names),
-    )
+    return mesh_from_devices(template_mesh.devices, template_mesh.axis_names)

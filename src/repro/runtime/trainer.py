@@ -12,7 +12,12 @@ Exposes the paper's three failure semantics at training-step granularity
     run continues at reduced width (elastic scaling).
   * ``blank``    (Redundant / BLANK): the dead replica's rows are masked
     out of the loss (weight 0) and the gradient rescales over survivors;
-    width is restored when the replica returns.
+    width is restored when the replica returns.  With >1 replicas the
+    gradient combine itself runs through the collective engine's
+    :func:`~repro.collective.engine.ft_allreduce` (redundant butterfly,
+    ``sum`` combiner) over the explicit replica axis, so the reduction
+    inherits the paper's 2^s − 1 mid-reduce tolerance instead of relying
+    on a fault-oblivious mesh all-reduce.
 
 Failures are injected via a schedule of :class:`FaultEvent` — this CPU
 container has no real failing hosts, so the runtime consumes simulated
@@ -36,13 +41,67 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.checkpoint.replicated import BuddyStore
+from repro.collective import SimComm, ft_allreduce, make_plan
 from repro.data.pipeline import DataConfig, SyntheticCorpus
 from repro.models import api
 from repro.models.partitioning import param_shardings
 from repro.models.sharding import batch_axes, mesh_context
 from repro.optim import adamw
 
-__all__ = ["TrainerConfig", "FaultEvent", "Trainer"]
+__all__ = ["TrainerConfig", "FaultEvent", "Trainer", "ft_replica_grad"]
+
+
+def ft_replica_grad(loss_fn, params, batch, n_replicas: int, fault_spec=None):
+    """BLANK-semantics gradient combine over an explicit replica axis.
+
+    ``batch`` rows are split into ``n_replicas`` contiguous slices (the
+    trainer's replica layout), per-replica gradients are taken with vmap,
+    dead replicas — identified by an all-zero ``loss_weight`` slice, i.e.
+    failed or dropped-straggler replicas masked by ``Trainer._mask_for`` —
+    are zeroed, and the survivor gradients are combined with
+    :func:`~repro.collective.engine.ft_allreduce` (redundant butterfly,
+    ``sum`` combiner) on a :class:`~repro.collective.comm.SimComm` whose
+    rank axis is the replica axis.  ``fault_spec`` injects mid-reduce rank
+    failures for robustness testing.
+
+    Returns ``(loss, grads)`` where both are means over *live* replicas.
+
+    Note the cost model: this materializes per-replica gradient trees
+    (R× the fused path's peak gradient memory) — it is the fault-tolerance
+    demonstration path; set ``TrainerConfig.ft_grad_allreduce=False`` to
+    keep the fused mesh all-reduce.
+    """
+    # Host plan first: the combined gradient must be read from a slot the
+    # planner certifies valid (slot 0 is NOT guaranteed to survive an
+    # in-tolerance fault — e.g. {2: 1} on R=4 invalidates rank 0's coset).
+    plan = make_plan("redundant", n_replicas, fault_spec)
+    if not plan.final_valid.any():
+        raise ValueError(
+            "fault_spec exceeds the butterfly's tolerance: no replica slot "
+            f"holds the combined gradient (final_valid={plan.final_valid})"
+        )
+    slot = int(np.argmax(plan.final_valid))
+
+    rep = jax.tree.map(
+        lambda x: x.reshape((n_replicas, x.shape[0] // n_replicas) + x.shape[1:]),
+        batch,
+    )
+    losses, grads = jax.vmap(
+        lambda b: jax.value_and_grad(loss_fn)(params, b)
+    )(rep)
+    live = rep["loss_weight"].reshape(n_replicas, -1).sum(-1) > 0
+    n_live = jnp.maximum(live.sum(), 1).astype(jnp.float32)
+
+    def mask(g):
+        m = live.reshape((n_replicas,) + (1,) * (g.ndim - 1))
+        return g * m.astype(g.dtype)
+
+    summed, _ = ft_allreduce(
+        jax.tree.map(mask, grads), SimComm(n_replicas), op="sum", plan=plan,
+    )
+    grads = jax.tree.map(lambda g: g[slot] / n_live, summed)
+    loss = jnp.where(live, losses, 0.0).sum() / n_live
+    return loss, grads
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +126,10 @@ class TrainerConfig:
     straggler_factor: float = 3.0
     drop_stragglers: bool = True
     buddy_levels: int = 1              # 2^levels in-memory replicas
+    # BLANK mode: combine gradients with the fault-tolerant butterfly
+    # (ft_replica_grad).  Costs R× peak gradient memory vs the fused mesh
+    # all-reduce — disable to keep the fused path.
+    ft_grad_allreduce: bool = True
     seed: int = 0
 
 
@@ -77,7 +140,12 @@ class Trainer:
         self.tcfg = tcfg
         self.mesh = mesh
         self.data_cfg = data_cfg
-        self.opt_cfg = opt_cfg or adamw.AdamWConfig(lr=tcfg.lr, total_steps=tcfg.steps)
+        # warmup must fit inside the run: smoke/short runs would otherwise
+        # never leave the ramp (default warmup 100 ≫ a 10-step run).
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig(
+            lr=tcfg.lr, total_steps=tcfg.steps,
+            warmup=min(100, max(1, tcfg.steps // 10)),
+        )
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
         self.n_replicas = self._mesh_replicas(mesh)
         self.buddies = BuddyStore(max(2, 1 << (self.n_replicas - 1).bit_length())) \
@@ -130,24 +198,48 @@ class Trainer:
                 self.batch_sharding["positions"] = NamedSharding(mesh, P(None, ba))
 
         tcfg, opt_cfg = self.tcfg, self.opt_cfg
+        n_rep = self.n_replicas
+        # BLANK semantics with an explicit replica axis: the gradient combine
+        # routes through the fault-tolerant butterfly.  (vlm batches carry a
+        # non-leading batch axis and stay on the fused path.)
+        use_ft = (
+            tcfg.ft_grad_allreduce
+            and tcfg.on_failure == "blank"
+            and n_rep > 1
+            and (n_rep & (n_rep - 1)) == 0
+            and cfg.family != "vlm"
+            # per-replica slices are microbatched by loss_over_micro; only
+            # the trivial split is guaranteed divisible for any batch shape
+            and tcfg.microbatches == 1
+        )
+        self.ft_grad_allreduce = use_ft
+        if use_ft:
+            self.events_log.append(
+                f"gradient all-reduce: ft_allreduce over {n_rep} replicas"
+            )
+
+        def loss_over_micro(p, b):
+            if tcfg.microbatches == 1:
+                return api.loss_fn(p, b, cfg)
+            splits = jax.tree.map(
+                lambda x: x.reshape((tcfg.microbatches,
+                                     x.shape[0] // tcfg.microbatches) + x.shape[1:]),
+                b,
+            )
+
+            def micro(acc, mb):
+                return acc + api.loss_fn(p, mb, cfg) / tcfg.microbatches, None
+
+            total, _ = jax.lax.scan(micro, 0.0, splits)
+            return total
 
         def step_fn(params, opt_state, batch):
-            def loss_over_micro(p):
-                if tcfg.microbatches == 1:
-                    return api.loss_fn(p, batch, cfg)
-                splits = jax.tree.map(
-                    lambda x: x.reshape((tcfg.microbatches,
-                                         x.shape[0] // tcfg.microbatches) + x.shape[1:]),
-                    batch,
+            if use_ft:
+                loss, grads = ft_replica_grad(
+                    loss_over_micro, params, batch, n_rep
                 )
-
-                def micro(acc, mb):
-                    return acc + api.loss_fn(p, mb, cfg) / tcfg.microbatches, None
-
-                total, _ = jax.lax.scan(micro, 0.0, splits)
-                return total
-
-            loss, grads = jax.value_and_grad(loss_over_micro)(params)
+            else:
+                loss, grads = jax.value_and_grad(loss_over_micro)(params, batch)
             new_params, new_opt, om = adamw.update(opt_cfg, params, grads, opt_state)
             return new_params, new_opt, {"loss": loss, **om}
 
@@ -286,8 +378,12 @@ class Trainer:
                     )
                 except KeyError:
                     pass
-            if restored is None and self.ckpt.latest_step() is not None:
+            # Drain the async save thread BEFORE probing for a checkpoint: a
+            # failure arriving a step or two after a non-blocking save must
+            # not race the manifest write and silently skip the rollback.
+            if restored is None:
                 self.ckpt.wait()
+            if restored is None and self.ckpt.latest_step() is not None:
                 tpl = jax.tree.map(np.asarray, jax.device_get(
                     {"params": params, "opt": opt_state}))
                 state, meta = self.ckpt.restore(tpl)

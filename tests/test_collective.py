@@ -1,0 +1,255 @@
+"""The extracted collective engine: pluggable combiners over the four plan
+variants, on the SimComm backend (ShardMapComm coverage lives in
+tests/test_spmd.py).  Mirrors the plan/validity agreement assertions of the
+TSQR suite, parametrized over combiners, and covers the engine's consumers:
+ft_allreduce fault tolerance, pytree payloads, the trainer's BLANK-mode
+gradient combine, plan-derived buddy placement, and the wire accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.collective import (
+    FaultSpec,
+    QRCombiner,
+    SimComm,
+    execute_plan,
+    ft_allreduce,
+    get_combiner,
+    make_plan,
+    payload_numel,
+    within_tolerance,
+)
+from repro.core import ref
+
+OPS = ["sum", "mean", "max", "gram_sum"]
+VARIANTS = ["tree", "redundant", "replace", "selfhealing"]
+
+# (variant, spec) pairs with spec within the variant's guaranteed-survival
+# bound on P=8 (tree tolerates nothing; the others' bounds per faults.py).
+TOLERABLE = [
+    ("tree", FaultSpec.none()),
+    ("redundant", FaultSpec.of({5: 1, 2: 2})),          # measure 0.75 < 1
+    ("replace", FaultSpec.of({5: 1, 2: 2, 3: 2})),      # cumulative ≤ 2^s−1
+    ("selfhealing", FaultSpec.of({3: 1, 6: 2, 1: 2})),  # per-step ≤ 2^s−1
+]
+
+# Arbitrary fault sets (in and out of tolerance) for validity-agreement runs.
+ANY_SPECS = [
+    FaultSpec.none(),
+    FaultSpec.of({0: 0}),
+    FaultSpec.of({2: 1}),
+    FaultSpec.of({5: 1, 2: 2}),
+    FaultSpec.of({1: 0, 4: 1, 6: 2}),
+]
+
+
+def _dense(x, op):
+    x = np.asarray(x)
+    if op == "max":
+        return x.max(0)
+    if op == "mean":
+        return x.mean(0)
+    return x.sum(0)  # sum, gram_sum
+
+
+@pytest.fixture
+def blocks(rng):
+    return jnp.asarray(rng.normal(size=(8, 4, 5)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# ft_allreduce: fault-free agreement + survival within tolerance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_ft_allreduce_matches_dense_fault_free(blocks, op, variant):
+    val, valid = ft_allreduce(blocks, SimComm(8), op=op, variant=variant)
+    expect = (np.arange(8) == 0) if variant == "tree" else np.ones(8, bool)
+    assert (np.asarray(valid) == expect).all()
+    dense = _dense(blocks, op)
+    for r in np.nonzero(expect)[0]:
+        np.testing.assert_allclose(
+            np.asarray(val)[r], dense, rtol=2e-5, atol=2e-5
+        )
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("variant,spec", TOLERABLE)
+def test_ft_allreduce_survives_within_tolerance(blocks, op, variant, spec):
+    """The acceptance bound: within 2^s − 1 (per faults.within_tolerance),
+    every variant leaves survivors holding the full reduction for every
+    combiner — the paper's guarantee, beyond the QR case."""
+    assert within_tolerance(variant, spec, 3)
+    plan = make_plan(variant, 8, spec)
+    val, valid = ft_allreduce(blocks, SimComm(8), op=op, plan=plan)
+    assert (np.asarray(valid) == plan.final_valid).all()
+    assert plan.final_valid.any()
+    if variant == "selfhealing":
+        assert plan.final_valid.all()
+    dense = _dense(blocks, op)
+    for r in np.nonzero(plan.final_valid)[0]:
+        np.testing.assert_allclose(
+            np.asarray(val)[r], dense, rtol=2e-5, atol=2e-5
+        )
+    # invalid slots are poisoned, not silently wrong
+    for r in np.nonzero(~plan.final_valid)[0]:
+        assert np.isnan(np.asarray(val)[r]).all()
+
+
+# ---------------------------------------------------------------------------
+# dynamic validity == host plan, for every combiner (the TSQR agreement
+# property, generalized)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("combiner", ["sum", "max", "qr"])
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("spec", ANY_SPECS)
+def test_dynamic_validity_matches_plan_across_combiners(
+    rng, combiner, variant, spec
+):
+    blocks = jnp.asarray(
+        ref.random_tall_skinny(rng, 8, 12, 4).astype(np.float32)
+    )
+    plan = make_plan(variant, 8, spec)
+    _, valid = execute_plan(blocks, SimComm(8), plan, combiner)
+    assert (np.asarray(valid) == plan.final_valid).all(), (combiner, variant)
+
+
+def test_qr_combiner_matches_oracle(rng):
+    blocks = ref.random_tall_skinny(rng, 8, 16, 4)
+    plan = make_plan("redundant", 8)
+    r, valid = execute_plan(
+        jnp.asarray(blocks), SimComm(8), plan, QRCombiner()
+    )
+    truth = ref.qr_r(blocks.reshape(-1, 4).astype(np.float64)).astype(
+        np.float32
+    )
+    assert np.asarray(valid).all()
+    for i in range(8):
+        np.testing.assert_allclose(
+            np.asarray(r)[i], truth, rtol=5e-4, atol=5e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# pytree payloads (the trainer's gradient-tree path)
+# ---------------------------------------------------------------------------
+
+def test_ft_allreduce_pytree_payload(rng):
+    tree = {
+        "w": jnp.asarray(rng.normal(size=(4, 3, 2)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(4, 5)).astype(np.float32)),
+    }
+    val, valid = ft_allreduce(tree, SimComm(4), op="mean")
+    assert np.asarray(valid).all()
+    for k in tree:
+        for r in range(4):
+            np.testing.assert_allclose(
+                np.asarray(val[k])[r], np.asarray(tree[k]).mean(0),
+                rtol=2e-5, atol=2e-5,
+            )
+
+
+def test_ft_replica_grad_blank_semantics():
+    """Dead replicas (all-zero loss_weight) are excluded; the survivor-mean
+    gradient comes out of slot 0, finite, even with a mid-reduce fault
+    within tolerance."""
+    from repro.runtime.trainer import ft_replica_grad
+
+    R, k, d = 4, 2, 3
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(R * k, d)).astype(np.float32)
+    w = np.ones(R * k, np.float32)
+    w[2 * k : 3 * k] = 0.0                      # replica 2 dead (BLANK)
+    params = {"p": jnp.asarray(rng.normal(size=(d,)).astype(np.float32))}
+    batch = {"x": jnp.asarray(x), "loss_weight": jnp.asarray(w)}
+
+    def loss_fn(p, b):
+        return (b["loss_weight"][:, None] * (p["p"] - b["x"]) ** 2).mean()
+
+    loss, grads = ft_replica_grad(loss_fn, params, batch, R)
+    # expected: mean over live replicas of per-replica grads
+    per = [
+        np.asarray(
+            jax.grad(loss_fn)(
+                params,
+                {"x": jnp.asarray(x[r * k : (r + 1) * k]),
+                 "loss_weight": jnp.asarray(w[r * k : (r + 1) * k])},
+            )["p"]
+        )
+        for r in range(R)
+    ]
+    expect = (per[0] + per[1] + per[3]) / 3
+    np.testing.assert_allclose(np.asarray(grads["p"]), expect, rtol=1e-5,
+                               atol=1e-6)
+    assert np.isfinite(float(loss))
+    # mid-reduce rank failures within tolerance: the gradient is read from
+    # a plan-certified slot — including {2: 1}, which invalidates slot 0's
+    # whole coset (slot 0 is NOT blindly trusted)
+    for fs in (FaultSpec.of({1: 1}), FaultSpec.of({2: 1})):
+        _, grads_f = ft_replica_grad(
+            loss_fn, params, batch, R, fault_spec=fs
+        )
+        assert np.isfinite(np.asarray(grads_f["p"])).all(), fs
+        np.testing.assert_allclose(np.asarray(grads_f["p"]), expect,
+                                   rtol=1e-5, atol=1e-6)
+    # beyond tolerance: loud failure, not silent NaN gradients
+    with pytest.raises(ValueError):
+        ft_replica_grad(loss_fn, params, batch, R,
+                        fault_spec=FaultSpec.of({0: 0, 1: 0}))
+
+
+# ---------------------------------------------------------------------------
+# buddy placement derives from the shared plan
+# ---------------------------------------------------------------------------
+
+def test_buddy_placement_matches_plan_routing():
+    from repro.checkpoint.replicated import BuddyStore
+
+    bs = BuddyStore(8)
+    bs.checkpoint(1, {r: {"v": r} for r in range(8)}, levels=2)
+    # after s levels of the redundant plan, each shard lives exactly on its
+    # 2^s-wide XOR block — the butterfly's replica set
+    for r in range(8):
+        block = sorted((r & ~3) + i for i in range(4))
+        assert sorted(bs.replicas_of(r)) == block
+
+
+# ---------------------------------------------------------------------------
+# accounting + registry + compat
+# ---------------------------------------------------------------------------
+
+def test_wire_accounting_symmetric_packing():
+    plan = make_plan("redundant", 16)
+    n = 32
+    assert payload_numel(n) == n * n
+    assert payload_numel(n, symmetric=True) == n * (n + 1) // 2
+    sq = plan.bytes_on_wire(n)
+    packed = plan.bytes_on_wire(n, symmetric=True)
+    assert packed * 2 * n == sq * (n + 1)
+    assert get_combiner("gram_sum").wire_symmetric
+    assert not get_combiner("sum").wire_symmetric
+
+
+def test_get_combiner_rejects_unknown():
+    with pytest.raises(ValueError):
+        get_combiner("median")
+    comb = get_combiner("qr_combine")
+    assert get_combiner(comb) is comb
+
+
+def test_compat_mesh_and_shard_map_roundtrip():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import make_mesh, shard_map
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    assert mesh.axis_names == ("data", "model")
+
+    f = shard_map(
+        lambda x: x * 2, mesh=mesh, in_specs=P("data"), out_specs=P("data")
+    )
+    out = jax.jit(f)(jnp.arange(4.0))
+    np.testing.assert_allclose(np.asarray(out), 2 * np.arange(4.0))

@@ -1,6 +1,5 @@
 """Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes
 (interpret=True executes the Pallas kernel body on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -12,8 +12,14 @@ claims verified over randomized fault sets:
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based sweeps need the hypothesis extra "
+    "(pip install -r requirements-dev.txt)"
+)
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import FaultSpec, make_plan, tsqr_sim, within_tolerance
 from repro.core import ref

@@ -29,11 +29,11 @@ def _run(code: str, timeout=900):
 def test_shard_map_tsqr_variants_and_faults():
     _run("""
     import jax, numpy as np, jax.numpy as jnp
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
     from repro.core import tsqr_shard_map, FaultSpec, make_plan
     from repro.core import ref
 
-    mesh = jax.make_mesh((8,), ("rows",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((8,), ("rows",))
     rng = np.random.default_rng(1)
     blocks = ref.random_tall_skinny(rng, 8, 16, 4)
     a = jnp.asarray(blocks.reshape(128, 4))
@@ -71,12 +71,13 @@ def test_powersgd_under_shard_map():
     _run("""
     import jax, numpy as np, jax.numpy as jnp
     from jax import lax
-    from jax.sharding import AxisType, PartitionSpec as P
-    from repro.core.comm import ShardMapComm
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
+    from repro.collective import ShardMapComm
     from repro.optim import powersgd
 
     D, M, m_loc, n, r = 2, 4, 8, 12, 3
-    mesh = jax.make_mesh((D, M), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+    mesh = make_mesh((D, M), ("data", "model"))
     key = jax.random.key(0)
     # distinct rank-r gradient per data replica, rows sharded over model
     u = jax.random.normal(key, (D, M * m_loc, r))
@@ -97,7 +98,7 @@ def test_powersgd_under_shard_map():
             n_data=D)
         return ghat[None]
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         body, mesh=mesh,
         in_specs=(P("data", "model", None), P()),
         out_specs=P("data", "model", None)))
@@ -113,14 +114,14 @@ def test_powersgd_under_shard_map():
 def test_trainer_multidevice_and_shrink():
     _run("""
     import jax, numpy as np
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
     from repro.configs.base import get_config
     from repro.data.pipeline import DataConfig
     from repro.runtime.trainer import Trainer, TrainerConfig, FaultEvent
     from repro.runtime.elastic import shrink_mesh
 
     cfg = get_config("qwen3-0.6b").smoke(n_layers=2)
-    mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     tc = TrainerConfig(steps=8, log_every=100, ckpt_every=0, on_failure="shrink",
                        ckpt_dir="/tmp/ck_spmd")
     dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
@@ -145,7 +146,6 @@ def test_blank_rescaling_unbiased():
     loss value as training on the survivors alone."""
     _run("""
     import jax, numpy as np
-    from jax.sharding import AxisType
     from repro.configs.base import get_config
     from repro.models import api
     import jax.numpy as jnp
@@ -162,4 +162,83 @@ def test_blank_rescaling_unbiased():
     l_surv = float(api.loss_fn(params, survivors, cfg))
     np.testing.assert_allclose(l_masked, l_surv, rtol=1e-5)
     print("blank unbiased OK")
+    """)
+
+
+@pytest.mark.slow
+def test_ft_allreduce_under_shard_map():
+    """ft_allreduce on the SPMD backend: every combiner agrees with the
+    dense reduction fault-free, and faulted plans within tolerance leave
+    survivors holding the full reduction — same assertions the SimComm
+    suite makes, under real ppermute collectives."""
+    _run("""
+    import jax, numpy as np, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
+    from repro.collective import (ShardMapComm, FaultSpec, ft_allreduce,
+                                  make_plan, within_tolerance)
+
+    p = 8
+    mesh = make_mesh((p,), ("rows",))
+    comm = ShardMapComm(p, "rows")
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(p, 4, 5)).astype(np.float32))
+    dense = {"sum": np.asarray(x).sum(0), "mean": np.asarray(x).mean(0),
+             "max": np.asarray(x).max(0), "gram_sum": np.asarray(x).sum(0)}
+
+    def run(op, fs, variant):
+        plan = make_plan(variant, p, fs)
+        def body(blk):
+            v, ok = ft_allreduce(blk[0], comm, op=op, variant=variant,
+                                 fault_spec=fs)
+            return v[None], ok[None]
+        f = jax.jit(shard_map(body, mesh=mesh, in_specs=P("rows"),
+                              out_specs=(P("rows"), P("rows"))))
+        v, ok = f(x)
+        assert (np.asarray(ok) == plan.final_valid).all(), (op, variant, fs)
+        for r in np.nonzero(plan.final_valid)[0]:
+            np.testing.assert_allclose(np.asarray(v)[r], dense[op],
+                                       rtol=1e-5, atol=1e-5)
+
+    for op in ("sum", "mean", "max", "gram_sum"):
+        for variant in ("tree", "redundant", "replace", "selfhealing"):
+            run(op, None, variant)
+    fs = FaultSpec.of({5: 1, 2: 2})
+    for variant in ("redundant", "replace", "selfhealing"):
+        assert within_tolerance(variant, fs, 3)
+        for op in ("sum", "mean", "max", "gram_sum"):
+            run(op, fs, variant)
+    print("SPMD ft_allreduce OK")
+    """)
+
+
+@pytest.mark.slow
+def test_trainer_blank_ft_gradient_allreduce():
+    """BLANK mode with >1 replicas routes the gradient combine through
+    ft_allreduce over the explicit replica axis; training stays finite
+    through a replica failure + recovery."""
+    _run("""
+    import numpy as np
+    from repro.compat import make_mesh
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.runtime.trainer import Trainer, TrainerConfig, FaultEvent
+
+    cfg = get_config("qwen3-0.6b").smoke(n_layers=2)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    tc = TrainerConfig(steps=8, log_every=100, ckpt_every=0,
+                       on_failure="blank", ckpt_dir="/tmp/ck_blank_ft")
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    tr = Trainer(cfg, tc, mesh, dc)
+    assert tr.ft_grad_allreduce
+    p, o = tr.init_state()
+    p, o = tr.run(p, o, fault_schedule=(
+        FaultEvent(step=3, kind="fail", replica=1),
+        FaultEvent(step=6, kind="recover", replica=1),
+    ))
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert np.isfinite(losses).all(), losses
+    assert losses[-1] < losses[0] + 0.5
+    assert any("ft_allreduce" in e for e in tr.events_log)
+    print("blank ft-gradient trainer OK")
     """)

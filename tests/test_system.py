@@ -1,16 +1,13 @@
 """End-to-end behaviour of the paper's system: the full stack wired
 together — fault-tolerant TSQR inside an optimizer inside a training loop
 with checkpointing — plus the dry-run cell-plan machinery at smoke scale."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
-from jax.sharding import AxisType
 
-from repro.configs.base import SHAPES, ShapeSpec, get_config, list_archs, shapes_for
-from repro.models import api
+from repro.compat import make_mesh
+from repro.configs.base import ShapeSpec, get_config, list_archs, shapes_for
 
 
 def test_cell_matrix_is_complete():
@@ -32,7 +29,7 @@ def test_cell_plan_lowers_on_tiny_mesh(kind):
 
     cfg = get_config("qwen3-0.6b").smoke()
     shape = ShapeSpec(f"tiny_{kind}", kind, seq_len=32, global_batch=4)
-    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     plan = CellPlan(cfg, shape, mesh)
     fn, args, ins, outs = plan.lowerable()
     with mesh_context(mesh):
@@ -93,7 +90,7 @@ def test_sanitize_specs_drops_nondivisible():
 
     from repro.launch.shardings import sanitize_specs
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     spec = {"a": P("model", None), "b": P(None, "model")}
     struct = {
         "a": jax.ShapeDtypeStruct((7, 8), jnp.float32),
@@ -114,7 +111,7 @@ def test_end_to_end_fault_tolerant_training(tmp_path):
     from repro.runtime.trainer import FaultEvent, Trainer, TrainerConfig
 
     cfg = get_config("olmo-1b").smoke(n_layers=2)
-    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     tc = TrainerConfig(steps=10, log_every=100, ckpt_every=4,
                        ckpt_dir=str(tmp_path), on_failure="rebuild")
     dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)

@@ -3,8 +3,8 @@ and the three failure semantics (blank / rebuild / shrink) behave."""
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AxisType
 
+from repro.compat import make_mesh
 from repro.configs.base import get_config
 from repro.data.pipeline import DataConfig
 from repro.runtime.elastic import shrink_mesh
@@ -13,7 +13,7 @@ from repro.runtime.trainer import FaultEvent, Trainer, TrainerConfig
 
 def _mk(tmp_path, **kw):
     cfg = get_config("olmo-1b").smoke(n_layers=2)
-    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     defaults = dict(steps=6, log_every=100, ckpt_every=3,
                     ckpt_dir=str(tmp_path / "ck"), microbatches=1)
     defaults.update(kw)
@@ -79,8 +79,7 @@ def test_straggler_detection_and_masking(tmp_path):
 
 
 def test_shrink_mesh_topology():
-    import jax as j
-    mesh = j.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     assert shrink_mesh(mesh) is None          # cannot shrink below 1
     # with 1 device we cannot build wider meshes; the multi-device shrink
     # path is covered by tests/test_spmd.py in a subprocess.
