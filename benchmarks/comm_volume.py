@@ -1,80 +1,7 @@
-"""Paper §III — communication accounting: baseline TSQR vs the redundant
-variants, now reported per combiner.  The paper's core claim quantified:
-the butterfly doubles message *count* but (a) the exchanges are full-duplex
-pairs (same serial rounds = same latency on full-duplex ICI) and (b) buys
-2^s-copy redundancy.  Also reports the failure-time overhead of Replace
-(extra serial rounds when replicas multicast) and Self-Healing (restore
-transfers).
-
-Wire volume depends on the combiner's payload: ``qr_combine`` ships square
-(n, n) R factors; ``gram_sum`` payloads are symmetric, so the packed
-n(n+1)/2 encoding applies — both numbers are reported (``bytes`` square,
-``bytes_packed`` symmetric), quantifying the saving the Gram butterfly
-leaves on the table when shipping square."""
-from __future__ import annotations
-
-import numpy as np
-
-from repro.collective import COMBINERS, FaultSpec, get_combiner, make_plan
-
-# Combiners whose wire volume we report (ft_allreduce ops + the TSQR combine).
-_OPS = ("qr_combine", "sum", "mean", "max", "gram_sum")
-
-
-def _row(p, variant, failures, plan, op, n_cols, itemsize):
-    comb = get_combiner(op)
-    sq = plan.bytes_on_wire(n_cols, itemsize)
-    packed = plan.bytes_on_wire(n_cols, itemsize, symmetric=True)
-    return {
-        "P": p, "variant": variant, "failures": failures, "combiner": comb.name,
-        "messages": plan.message_count(),
-        "rounds": plan.round_count(),
-        "bytes": sq,
-        # symmetric payloads (gram_sum) can ship packed; square ones cannot
-        "bytes_packed": packed if comb.wire_symmetric else sq,
-    }
-
-
-def run(n_cols: int = 32, itemsize: int = 4, ops=_OPS):
-    rows = []
-    for p in (4, 16, 64, 256, 512):
-        for variant in ("tree", "redundant", "replace", "selfhealing"):
-            plan = make_plan(variant, p)
-            for op in ops:
-                rows.append(_row(p, variant, 0, plan, op, n_cols, itemsize))
-    # failure-time behavior at P=16: kill 3 ranks within tolerance
-    spec = FaultSpec.of({3: 1, 9: 2, 12: 2})
-    for variant in ("redundant", "replace", "selfhealing"):
-        plan = make_plan(variant, 16, spec)
-        for op in ops:
-            rows.append(_row(16, variant, 3, plan, op, n_cols, itemsize))
-    return rows
-
-
-def main():
-    print("# comm volume per combiner: messages / serial rounds / bytes "
-          "(n=32, f32; bytes_packed = symmetric n(n+1)/2 encoding)")
-    print("P,variant,failures,combiner,messages,rounds,bytes,bytes_packed")
-    for r in run():
-        print(f"{r['P']},{r['variant']},{r['failures']},{r['combiner']},"
-              f"{r['messages']},{r['rounds']},{r['bytes']},{r['bytes_packed']}")
-    # structural claims from the paper, asserted
-    for p in (16, 256):
-        tree = make_plan("tree", p)
-        red = make_plan("redundant", p)
-        assert red.message_count() == p * int(np.log2(p))
-        assert tree.message_count() == p - 1
-        assert red.round_count() == tree.round_count()   # wire-latency-neutral
-    # packed-symmetric accounting: n(n+1)/2 vs n² for the Gram butterfly
-    n = 32
-    plan = make_plan("redundant", 16)
-    assert plan.bytes_on_wire(n, symmetric=True) * (2 * n) \
-        == plan.bytes_on_wire(n) * (n + 1)
-    assert get_combiner("gram_sum").wire_symmetric
-    assert not get_combiner("qr_combine").wire_symmetric
-    assert set(_OPS) <= set(COMBINERS)
-    return run()
-
+"""Thin shim — logic migrated to :mod:`repro.bench.cases.comm_volume` and
+registered as the ``comm_volume`` bench case (``python -m repro.bench run``).
+Run with ``PYTHONPATH=src`` for the standalone CSV table."""
+from repro.bench.cases.comm_volume import case, main, run  # noqa: F401
 
 if __name__ == "__main__":
     main()

@@ -1,72 +1,7 @@
-"""PowerSGD-TSQR gradient compression: bytes over the data axis vs dense
-all-reduce, and reconstruction quality vs rank (the paper-integration
-benchmark, DESIGN.md §3.1)."""
-from __future__ import annotations
-
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.comm import SimComm
-from repro.optim import powersgd
-
-
-def _psum_id(x):
-    return x
-
-
-def _psum_model(x):
-    return jnp.broadcast_to(x.sum(0, keepdims=True), x.shape)
-
-
-def run():
-    key = jax.random.key(0)
-    p_model, m_loc, n = 8, 256, 1024          # a (2048 x 1024) sharded grad
-    rows = []
-    # synthetic gradient with decaying spectrum (realistic for LM grads)
-    u, _ = np.linalg.qr(np.random.default_rng(0).standard_normal((p_model * m_loc, 256)))
-    v, _ = np.linalg.qr(np.random.default_rng(1).standard_normal((n, 256)))
-    sv = np.logspace(0, -3, 256)
-    g = jnp.asarray((u * sv) @ v.T, jnp.float32).reshape(p_model, m_loc, n)
-    g_norm = float(jnp.linalg.norm(g))
-    comm = SimComm(p_model)
-    for rank in (2, 8, 32, 128):
-        cfg = powersgd.PowerSGDConfig(rank=rank, error_feedback=False)
-        state = powersgd.init_state(key, (m_loc, n), cfg, leading=(p_model,))
-        fn = jax.jit(lambda gg, st: powersgd.compress_grad(
-            gg, st, comm, cfg=cfg, psum_data=_psum_id,
-            psum_model=_psum_model, n_data=1)[:2])
-        (g_hat, state) = fn(g, state)
-        # one power-iteration refinement (warm basis), as in training
-        (g_hat, state) = fn(g, state)
-        jax.block_until_ready(g_hat)
-        t0 = time.perf_counter()
-        for _ in range(3):
-            out = fn(g, state)
-            jax.block_until_ready(out)
-        us = (time.perf_counter() - t0) / 3 * 1e6
-        err = float(jnp.linalg.norm(g - g_hat)) / g_norm
-        dense = 4 * p_model * m_loc * n
-        comp = 4 * rank * (p_model * m_loc + n)
-        rows.append({
-            "rank": rank, "rel_error": err,
-            "bytes_dense": dense, "bytes_compressed": comp,
-            "compression_x": dense / comp, "us_per_call": us,
-        })
-    return rows
-
-
-def main():
-    print("# powersgd-tsqr: data-axis bytes + reconstruction vs rank")
-    print("rank,rel_error,bytes_dense,bytes_compressed,compression_x,us_per_call")
-    for r in run():
-        print(f"{r['rank']},{r['rel_error']:.4f},{r['bytes_dense']},"
-              f"{r['bytes_compressed']},{r['compression_x']:.1f},"
-              f"{r['us_per_call']:.0f}")
-    return run
-
+"""Thin shim — logic migrated to :mod:`repro.bench.cases.powersgd` and
+registered as the ``powersgd`` bench case (``python -m repro.bench run``).
+Run with ``PYTHONPATH=src`` for the standalone CSV table."""
+from repro.bench.cases.powersgd import case, main, run  # noqa: F401
 
 if __name__ == "__main__":
     main()

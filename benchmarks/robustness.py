@@ -1,71 +1,7 @@
-"""Paper §III-B3/C3/D3 — survival probability vs failure count per variant.
-
-For each variant and each number of injected failures f, run Monte-Carlo
-fault placements (uniform over ranks × steps) and report the survival
-fraction plus the guarantee boundary (2^s − 1).  Survival =
-  tree:        rank 0 valid;
-  redundant:   ≥1 rank holds the final R;
-  replace:     every live rank holds the final R;
-  selfhealing: every rank (incl. respawned) holds the final R.
-"""
-from __future__ import annotations
-
-import numpy as np
-
-from repro.core import FaultSpec, make_plan, within_tolerance
-
-
-def survival(variant: str, plan, death) -> bool:
-    if variant == "tree":
-        return bool(plan.final_valid[0])
-    if variant == "redundant":
-        return bool(plan.final_valid.any())
-    if variant == "replace":
-        alive = death >= (1 << 30)
-        return bool((plan.final_valid | ~alive).all() and plan.final_valid.any())
-    return bool(plan.final_valid.all())
-
-
-def run(p: int = 16, trials: int = 400, seed: int = 0):
-    rng = np.random.default_rng(seed)
-    log_p = int(np.log2(p))
-    rows = []
-    for variant in ("tree", "redundant", "replace", "selfhealing"):
-        for f in range(0, p):
-            ok = 0
-            ok_in_tol = tot_in_tol = 0
-            for _ in range(trials):
-                ranks = rng.choice(p, size=f, replace=False)
-                steps = rng.integers(0, log_p, size=f)
-                spec = FaultSpec.of({int(r): int(s) for r, s in zip(ranks, steps)})
-                plan = make_plan(variant, p, spec)
-                s = survival(variant, plan, spec.death_vector(p))
-                ok += s
-                if within_tolerance(variant, spec, log_p):
-                    tot_in_tol += 1
-                    ok_in_tol += s
-            rows.append({
-                "variant": variant, "failures": f,
-                "survival_rate": ok / trials,
-                "in_tolerance_rate": (ok_in_tol / tot_in_tol) if tot_in_tol else None,
-            })
-            if ok == 0 and f > p // 2:
-                break
-    return rows
-
-
-def main(csv: bool = True):
-    rows = run()
-    print("# robustness: survival vs injected failures (P=16, MC=400)")
-    print("variant,failures,survival_rate,within_tolerance_survival")
-    for r in rows:
-        it = "" if r["in_tolerance_rate"] is None else f"{r['in_tolerance_rate']:.3f}"
-        print(f"{r['variant']},{r['failures']},{r['survival_rate']:.3f},{it}")
-    # the paper's guarantee: within tolerance, survival is ALWAYS 1.0
-    bad = [r for r in rows if r["in_tolerance_rate"] not in (None, 1.0)]
-    assert not bad, bad
-    return rows
-
+"""Thin shim — logic migrated to :mod:`repro.bench.cases.robustness` and
+registered as the ``robustness`` bench case (``python -m repro.bench run``).
+Run with ``PYTHONPATH=src`` for the standalone CSV table."""
+from repro.bench.cases.robustness import case, main, run, survival  # noqa: F401
 
 if __name__ == "__main__":
     main()

@@ -1,209 +1,17 @@
-"""Roofline analysis — reads the dry-run JSONs and derives the three terms
-per (arch × shape) cell on the single-pod mesh (EXPERIMENTS.md §Roofline).
-
-  compute    = HLO_FLOPs/device        / 197e12  (bf16 peak, TPU v5e)
-  memory     = HLO_bytes/device        / 819e9   (HBM bw)
-  collective = collective_bytes/device / 50e9    (per-link ICI, conservative
-               single-link figure; result-shape bytes of every collective in
-               the partitioned HLO, async pairs deduped)
-
-HLO FLOP/byte totals come from the unrolled accounting extrapolation
-(``accounting.extrapolated``) because XLA's HloCostAnalysis counts scan
-bodies once (see launch/dryrun.py).  MODEL_FLOPS = 6·N·D (train) or 2·N·D
-(prefill/decode), N = non-embedding (dense) / active (MoE) params — the
-MODEL/HLO ratio exposes remat recompute, causal-masking waste, capacity
-overprovisioning and padding.
-"""
-from __future__ import annotations
-
-import glob
-import json
-import os
-
-import numpy as np
-
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
-
-
-def active_params(cfg) -> tuple[int, int]:
-    """(total_non_embedding, active_non_embedding) parameter counts."""
-    import jax
-
-    from repro.models import api
-
-    specs = api.param_specs(cfg)
-    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
-    total = active = 0
-    for path, leaf in flat:
-        name = str(path[-1])
-        size = int(np.prod(leaf.shape))
-        if "embed" in str(path):
-            continue
-        total += size
-        if "we_" in name:                # routed experts
-            active += int(size * cfg.top_k / max(cfg.n_experts, 1))
-        else:
-            active += size
-    return total, active
-
-
-def model_flops(cfg, kind: str, global_batch: int, seq: int) -> float:
-    _, n_active = active_params(cfg)
-    if kind == "train":
-        return 6.0 * n_active * global_batch * seq
-    if kind == "prefill":
-        return 2.0 * n_active * global_batch * seq
-    return 2.0 * n_active * global_batch        # decode: 1 token/row
-
-
-def structural_memory_bytes(cfg, rec) -> float:
-    """Per-device HBM traffic model for one step.
-
-    XLA's ``bytes accessed`` counts logical operand bytes per op with no
-    fusion awareness (~100× HBM on CPU-lowered modules), so the memory
-    term uses a structural model instead:
-
-      train:   3× params (fwd read, bwd read, update write) + 4× Adam
-               moments (m,v read+write, f32) + 2× activation carries
-               (save + consume), all per device;
-      prefill: 1× params + activations + KV-cache write;
-      decode:  1× params + full cache read + state/cache write.
-
-    The HLO figure is still recorded as ``hlo_bytes_dev`` for reference.
-    """
-    import numpy as np
-
-    from repro.launch.shardings import param_bytes as pb
-
-    n_model = 16
-    n_data = rec["n_devices"] // n_model
-    kind = rec["kind"]
-    params_total = pb(cfg)
-    gather = rec.get("gather_axis")
-    params_dev = params_total / (n_model * (n_data if gather else 1))
-    b_loc = max(rec["global_batch"] // n_data, 1)
-    s = rec["seq_len"]
-    act_carry = (
-        cfg.n_layers * b_loc * s * cfg.d_model * 2
-        / (n_model if rec.get("seq_parallel") else 1)
-        / max(rec.get("microbatches", 1), 1)
-    )
-    if kind == "train":
-        # FSDP still reads the whole model per device per step (gathered
-        # slices stream through); moments stay sharded
-        params_traffic = 3 * (params_total / n_model)
-        opt_traffic = 4 * params_total * 4 / rec["n_devices"]
-        return params_traffic + opt_traffic + 2 * act_carry * rec.get("microbatches", 1)
-    if kind == "prefill":
-        kv = 2 * cfg.n_layers * b_loc * min(s, 10**9) * cfg.n_kv_heads * cfg.d_head * 2
-        kv /= n_model
-        return params_total / n_model + act_carry + kv
-    # decode: one token per row
-    cache_bytes = 0.0
-    try:
-        from repro.models import api
-
-        specs = api.decode_cache_specs(cfg, rec["global_batch"], s)
-        cache_bytes = sum(
-            int(np.prod(l.shape)) * l.dtype.itemsize
-            for l in __import__("jax").tree.leaves(specs)
-        ) / rec["n_devices"]
-    except Exception:
-        pass
-    return params_total / n_model + 2 * cache_bytes
-
-
-def analyze_record(rec: dict) -> dict | None:
-    from repro.configs.base import get_config
-
-    if rec.get("kind") == "tsqr" or rec.get("mesh") != "16x16":
-        return None
-    cfg = get_config(rec["arch"])
-    n_dev = rec["n_devices"]
-    ext = rec.get("accounting", {}).get("extrapolated", {})
-    flops_dev = ext.get("cost.flops", rec["cost"].get("flops", 0.0))
-    bytes_dev = structural_memory_bytes(cfg, rec)
-    hlo_bytes_dev = ext.get(
-        "cost.bytes accessed", rec["cost"].get("bytes accessed", 0.0)
-    )
-    coll_dev = ext.get("coll.total_bytes", rec["collectives"]["total_bytes"])
-    t_compute = flops_dev / PEAK_FLOPS
-    t_memory = bytes_dev / HBM_BW
-    t_coll = coll_dev / ICI_BW
-    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
-    dominant = max(terms, key=terms.get)
-    mf = model_flops(cfg, rec["kind"], rec["global_batch"], rec["seq_len"])
-    ratio = mf / (flops_dev * n_dev) if flops_dev else 0.0
-    bound = max(terms.values())
-    frac = (mf / n_dev / PEAK_FLOPS) / bound if bound else 0.0
-    return {
-        "arch": rec["arch"], "shape": rec["shape"], "kind": rec["kind"],
-        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
-        "dominant": dominant,
-        "model_flops": mf,
-        "hlo_flops_global": flops_dev * n_dev,
-        "hlo_bytes_dev": hlo_bytes_dev,
-        "useful_ratio": ratio,
-        "roofline_frac": frac,
-        "hbm_gb": rec["memory"].get("total_hbm_bytes", 0) / 1e9,
-        "microbatches": rec.get("microbatches", 1),
-        "seq_parallel": rec.get("seq_parallel", False),
-        "gather_axis": rec.get("gather_axis"),
-    }
-
-
-def load_all(dirpath: str = "results/dryrun") -> list[dict]:
-    out = []
-    for path in sorted(glob.glob(os.path.join(dirpath, "*_single.json"))):
-        with open(path) as f:
-            rec = json.load(f)
-        row = analyze_record(rec)
-        if row:
-            out.append(row)
-    return out
-
-
-def advice(row: dict) -> str:
-    d = row["dominant"]
-    if d == "compute" and row["useful_ratio"] < 0.5:
-        return "compute-bound but <50% useful: cut remat recompute / causal-dense waste"
-    if d == "compute":
-        return "compute-bound: good; push MXU utilization via layout/fusion"
-    if d == "memory":
-        return "HBM-bound: fuse elementwise chains, widen arithmetic intensity"
-    return "collective-bound: reshard (EP/SP), overlap collectives with compute"
-
-
-def markdown_table(rows: list[dict]) -> str:
-    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
-           "MODEL/HLO | roofline frac | HBM GB/dev | notes |\n"
-           "|---|---|---|---|---|---|---|---|---|---|\n")
-    body = ""
-    for r in rows:
-        body += (f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
-                 f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
-                 f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
-                 f"{r['roofline_frac']:.2f} | {r['hbm_gb']:.1f} | "
-                 f"{advice(r)} |\n")
-    return hdr + body
-
-
-def main():
-    rows = load_all()
-    print("# roofline terms per (arch x shape), single-pod 16x16")
-    print("arch,shape,kind,compute_s,memory_s,collective_s,dominant,"
-          "useful_ratio,roofline_frac,hbm_gb_dev")
-    for r in rows:
-        print(f"{r['arch']},{r['shape']},{r['kind']},{r['compute_s']:.4e},"
-              f"{r['memory_s']:.4e},{r['collective_s']:.4e},{r['dominant']},"
-              f"{r['useful_ratio']:.3f},{r['roofline_frac']:.3f},{r['hbm_gb']:.1f}")
-    os.makedirs("results", exist_ok=True)
-    with open("results/roofline.md", "w") as f:
-        f.write(markdown_table(rows))
-    return rows
-
+"""Thin shim — logic migrated to :mod:`repro.bench.cases.roofline` and
+registered as the ``roofline`` bench case (``python -m repro.bench run``;
+skips cleanly when no dry-run artifacts exist).  Run with
+``PYTHONPATH=src`` for the standalone CSV + markdown table."""
+from repro.bench.cases.roofline import (  # noqa: F401
+    advice,
+    analyze_record,
+    case,
+    load_all,
+    main,
+    markdown_table,
+    model_flops,
+    structural_memory_bytes,
+)
 
 if __name__ == "__main__":
     main()

@@ -1,77 +1,18 @@
-"""Benchmark harness — one module per paper table/figure.
+"""CLI shim over ``python -m repro.bench`` — the benchmark harness proper
+lives in :mod:`repro.bench` (registry + runner + JSON schema + baseline
+comparator; see DESIGN.md §5).
 
-  robustness     — §III-B3/C3/D3 tolerance claims (Monte-Carlo + guarantee)
-  comm_volume    — §III message/round/byte accounting, tree vs butterfly
-  semantics      — Figs. 3-5 who-holds-R matrices
-  tsqr_scaling   — wall-clock of the factorization (SimComm, CPU)
-  powersgd_bench — the paper-technique-in-training compression table
-  roofline       — §Roofline terms from the dry-run artifacts (if present)
-
-Prints ``name,us_per_call,derived`` CSV summary lines at the end, with the
-full per-table CSVs above.
+``python benchmarks/run.py`` ≡ ``python -m repro.bench run`` and accepts
+the same flags (``--tier``, ``--only``, ``--out``, ...).  The old ad-hoc
+CSV summary — including the bug where the computed worst-case
+tolerated-failure count was dropped in favor of a hardcoded
+``guarantee_holds=1`` string — is gone: robustness numbers are now gated
+metrics in the emitted ``BENCH_*.json``, and a guarantee violation fails
+the run (see ``repro.bench.cases.robustness``).
 """
-from __future__ import annotations
+import sys
 
-import time
-
-
-def _timed(name, fn):
-    t0 = time.perf_counter()
-    out = fn()
-    us = (time.perf_counter() - t0) * 1e6
-    return name, us, out
-
-
-def main() -> None:
-    from benchmarks import (
-        comm_volume,
-        powersgd_bench,
-        robustness,
-        semantics,
-        tsqr_scaling,
-    )
-
-    summary = []
-
-    name, us, rows = _timed("robustness", robustness.main)
-    worst = min(
-        (r["failures"] for r in rows
-         if r["variant"] == "selfhealing" and r["survival_rate"] == 1.0),
-        default=0,
-    )
-    summary.append((name, us, f"guarantee_holds=1"))
-    print()
-
-    name, us, rows = _timed("comm_volume", comm_volume.main)
-    red512 = next(r for r in rows if r["P"] == 512 and r["variant"] == "redundant")
-    summary.append((name, us, f"redundant_msgs_P512={red512['messages']}"))
-    print()
-
-    name, us, rows = _timed("semantics", semantics.main)
-    summary.append((name, us, f"scenarios={len(rows)//4}"))
-    print()
-
-    name, us, rows = _timed("tsqr_scaling", tsqr_scaling.main)
-    summary.append((name, us, f"configs={len(rows)}"))
-    print()
-
-    name, us, rows = _timed("powersgd_bench", powersgd_bench.main)
-    summary.append((name, us, "ranks=2..128"))
-    print()
-
-    try:
-        from benchmarks import roofline
-
-        name, us, rows = _timed("roofline", roofline.main)
-        summary.append((name, us, f"cells={len(rows)}"))
-    except Exception as e:  # dry-run artifacts absent
-        print(f"# roofline skipped: {e}")
-    print()
-
-    print("name,us_per_call,derived")
-    for name, us, derived in summary:
-        print(f"{name},{us:.0f},{derived}")
-
+from repro.bench.__main__ import main
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main(["run", *sys.argv[1:]]))

@@ -1,48 +1,7 @@
-"""Paper Figs. 3-5 as a table: who holds the final R under each variant ×
-failure scenario (the three semantics made concrete), P=4 exactly as in
-the paper's walkthrough plus richer P=8 scenarios."""
-from __future__ import annotations
-
-from repro.core import FaultSpec, make_plan
-
-
-SCENARIOS = [
-    ("fault_free", 4, {}),
-    ("fig3-5: P2 dies end of step 1", 4, {2: 1}),
-    ("two deaths in tolerance", 8, {5: 1, 2: 2}),
-    ("block wipe (beyond tolerance)", 8, {2: 1, 3: 1}),
-    ("early death (step 0)", 8, {3: 0}),
-]
-
-
-def run():
-    rows = []
-    for name, p, deaths in SCENARIOS:
-        spec = FaultSpec.of(deaths)
-        for variant in ("tree", "redundant", "replace", "selfhealing"):
-            plan = make_plan(variant, p, spec)
-            holders = "".join("1" if v else "0" for v in plan.final_valid)
-            rows.append({
-                "scenario": name, "P": p, "variant": variant,
-                "holders": holders,
-                "n_holders": int(plan.final_valid.sum()),
-            })
-    return rows
-
-
-def main():
-    print("# failure semantics: per-rank holders of the final R (1=holds)")
-    print("scenario,P,variant,holders,n_holders")
-    for r in run():
-        print(f"\"{r['scenario']}\",{r['P']},{r['variant']},{r['holders']},"
-              f"{r['n_holders']}")
-    # paper's worked example, asserted:
-    spec = FaultSpec.of({2: 1})
-    assert list(make_plan("redundant", 4, spec).final_valid) == [False, True, False, True]
-    assert list(make_plan("replace", 4, spec).final_valid) == [True, True, False, True]
-    assert make_plan("selfhealing", 4, spec).final_valid.all()
-    return run()
-
+"""Thin shim — logic migrated to :mod:`repro.bench.cases.semantics` and
+registered as the ``semantics`` bench case (``python -m repro.bench run``).
+Run with ``PYTHONPATH=src`` for the standalone CSV table."""
+from repro.bench.cases.semantics import SCENARIOS, case, main, run  # noqa: F401
 
 if __name__ == "__main__":
     main()

@@ -1,46 +1,13 @@
-"""TSQR wall-clock microbenchmark (CPU, SimComm backend): variant × P ×
-local-QR implementation.  The absolute numbers are CPU-simulation times;
-the *relative* cost of redundancy (redundant ≈ tree despite 2× messages —
-extra QRs land on otherwise-idle ranks) is the paper's Fig. 1/2 story."""
-from __future__ import annotations
-
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import tsqr_sim
-from repro.core import ref
-
-
-def bench_one(variant: str, p: int, m_loc: int, n: int, local_qr: str,
-              iters: int = 5) -> float:
-    rng = np.random.default_rng(0)
-    blocks = jnp.asarray(ref.random_tall_skinny(rng, p, m_loc, n))
-    fn = jax.jit(lambda a: tsqr_sim(a, variant=variant, local_qr=local_qr).r)
-    fn(blocks).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        fn(blocks).block_until_ready()
-    return (time.perf_counter() - t0) / iters * 1e6
-
-
-def main():
-    print("# tsqr scaling (SimComm on CPU): us_per_call")
-    print("variant,P,m_local,n,local_qr,us_per_call")
-    rows = []
-    for p in (4, 16, 64):
-        for variant in ("tree", "redundant"):
-            us = bench_one(variant, p, 256, 32, "jnp")
-            rows.append((variant, p, 256, 32, "jnp", us))
-            print(f"{variant},{p},256,32,jnp,{us:.0f}")
-    for lq in ("jnp", "cqr2", "cqr2_pallas"):
-        us = bench_one("redundant", 16, 512, 64, lq)
-        rows.append(("redundant", 16, 512, 64, lq, us))
-        print(f"redundant,16,512,64,{lq},{us:.0f}")
-    return rows
-
+"""Thin shim — logic migrated to :mod:`repro.bench.cases.tsqr_scaling` and
+registered as the ``tsqr_scaling`` + ``tsqr_local_qr`` bench cases
+(``python -m repro.bench run``).  Run with ``PYTHONPATH=src`` for the
+standalone CSV table."""
+from repro.bench.cases.tsqr_scaling import (  # noqa: F401
+    bench_one,
+    case_local_qr,
+    case_scaling,
+    main,
+)
 
 if __name__ == "__main__":
     main()

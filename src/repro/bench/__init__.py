@@ -1,0 +1,40 @@
+"""Machine-readable benchmark + fault-scenario subsystem (``repro.bench``).
+
+The paper's claims are quantitative — how many failures each semantics
+tolerates and at what communication cost — so benchmarks and
+fault-injection sweeps are first-class, reproducible artifacts here:
+
+  * :mod:`~repro.bench.registry`  — decorator-registered cases with tiers,
+    tags and per-tier parameters;
+  * :mod:`~repro.bench.runner`    — warmup/repeat/percentile timing,
+    writes versioned ``BENCH_<timestamp>.json`` documents;
+  * :mod:`~repro.bench.schema`    — the document schema + gate metadata
+    (``hard`` robustness/comm metrics vs ``warn`` timings);
+  * :mod:`~repro.bench.compare`   — baseline comparator; exits non-zero on
+    hard-metric regression (the CI gate);
+  * :mod:`~repro.bench.scenarios` — declarative fault schedules driving
+    ``ft_allreduce``/``execute_plan`` and the trainer's
+    SHRINK/REBUILD/BLANK paths;
+  * :mod:`~repro.bench.cases`     — the migrated ``benchmarks/*`` cases.
+
+CLI: ``python -m repro.bench run --tier smoke``, ``... compare old new``,
+``... list``.  See DESIGN.md §5 and README.md.
+
+This module intentionally imports neither jax nor the case modules —
+``compare`` must work in a bare environment and ``run`` must be able to
+set ``XLA_FLAGS`` before jax loads.
+"""
+from .registry import REGISTRY, BenchFailure, SkipCase, bench_case, cases_for
+from .schema import SCHEMA_VERSION, Metric, SchemaError, validate
+
+__all__ = [
+    "REGISTRY",
+    "BenchFailure",
+    "Metric",
+    "SCHEMA_VERSION",
+    "SchemaError",
+    "SkipCase",
+    "bench_case",
+    "cases_for",
+    "validate",
+]

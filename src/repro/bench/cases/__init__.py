@@ -1,0 +1,16 @@
+"""Registered benchmark cases — the migrated ``benchmarks/*`` modules.
+
+Importing this package registers every case (including the fault-scenario
+sweep) in :data:`repro.bench.registry.REGISTRY`; the CLI does so lazily
+after pinning the host device count.  The old ``benchmarks/*.py`` entry
+points remain as thin shims over these modules.
+"""
+from .. import scenarios  # noqa: F401  — registers fault_scenarios
+from . import (  # noqa: F401
+    comm_volume,
+    powersgd,
+    robustness,
+    roofline,
+    semantics,
+    tsqr_scaling,
+)

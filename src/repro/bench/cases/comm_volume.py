@@ -1,0 +1,159 @@
+"""Paper §III — communication accounting: baseline TSQR vs the redundant
+variants, now reported per combiner.  The paper's core claim quantified:
+the butterfly doubles message *count* but (a) the exchanges are full-duplex
+pairs (same serial rounds = same latency on full-duplex ICI) and (b) buys
+2^s-copy redundancy.  Also reports the failure-time overhead of Replace
+(extra serial rounds when replicas multicast) and Self-Healing (restore
+transfers).
+
+Wire volume depends on the combiner's payload: ``qr_combine`` ships square
+(n, n) R factors; ``gram_sum`` payloads are symmetric, so the packed
+n(n+1)/2 encoding applies — both numbers are reported (``bytes`` square,
+``bytes_packed`` symmetric).
+
+The registered case additionally *executes* the plans through
+:class:`~repro.collective.instrument.InstrumentedComm` and gates on the
+observed-vs-planned agreement, so a planner change that silently alters
+real wire traffic (not just the accounting) trips CI.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.bench.registry import bench_case
+from repro.bench.schema import Metric
+from repro.collective import COMBINERS, FaultSpec, get_combiner, make_plan
+
+# Combiners whose wire volume we report (ft_allreduce ops + the TSQR combine).
+_OPS = ("qr_combine", "sum", "mean", "max", "gram_sum")
+
+__all__ = ["case", "main", "run"]
+
+
+def _row(p, variant, failures, plan, op, n_cols, itemsize):
+    comb = get_combiner(op)
+    sq = plan.bytes_on_wire(n_cols, itemsize)
+    packed = plan.bytes_on_wire(n_cols, itemsize, symmetric=True)
+    return {
+        "P": p, "variant": variant, "failures": failures, "combiner": comb.name,
+        "messages": plan.message_count(),
+        "rounds": plan.round_count(),
+        "bytes": sq,
+        # symmetric payloads (gram_sum) can ship packed; square ones cannot
+        "bytes_packed": packed if comb.wire_symmetric else sq,
+    }
+
+
+def run(n_cols: int = 32, itemsize: int = 4, ops=_OPS):
+    rows = []
+    for p in (4, 16, 64, 256, 512):
+        for variant in ("tree", "redundant", "replace", "selfhealing"):
+            plan = make_plan(variant, p)
+            for op in ops:
+                rows.append(_row(p, variant, 0, plan, op, n_cols, itemsize))
+    # failure-time behavior at P=16: kill 3 ranks within tolerance
+    spec = FaultSpec.of({3: 1, 9: 2, 12: 2})
+    for variant in ("redundant", "replace", "selfhealing"):
+        plan = make_plan(variant, 16, spec)
+        for op in ops:
+            rows.append(_row(16, variant, 3, plan, op, n_cols, itemsize))
+    return rows
+
+
+def _observed_matches_plan(p: int, n_cols: int) -> bool:
+    """Execute each fault-free plan with counting comms; compare to the
+    planner's accounting (payload + 1 validity byte per message)."""
+    import jax.numpy as jnp
+
+    from repro.collective import InstrumentedComm, SimComm, execute_plan
+
+    x = jnp.asarray(
+        np.random.default_rng(0).normal(size=(p, n_cols, n_cols)).astype(np.float32)
+    )
+    for variant in ("tree", "redundant", "replace", "selfhealing"):
+        plan = make_plan(variant, p)
+        ic = InstrumentedComm(SimComm(p))
+        execute_plan(x, ic, plan, "sum")
+        if ic.stats.messages != plan.message_count():
+            return False
+        if ic.stats.rounds != plan.round_count():
+            return False
+        expect = plan.bytes_on_wire(n_cols, 4) + plan.message_count()
+        if ic.stats.payload_bytes != expect:
+            return False
+    return True
+
+
+def case(n_cols: int = 32, itemsize: int = 4, observe_p: int = 16):
+    rows = run(n_cols=n_cols, itemsize=itemsize)
+    by = {(r["P"], r["variant"], r["failures"], r["combiner"]): r for r in rows}
+    hard = dict(gate="hard", direction="exact")
+    metrics = {}
+    for p in (16, 512):
+        tree = by[(p, "tree", 0, "qr_combine")]
+        red = by[(p, "redundant", 0, "qr_combine")]
+        metrics[f"tree_messages_P{p}"] = Metric(tree["messages"], **hard)
+        metrics[f"redundant_messages_P{p}"] = Metric(red["messages"], **hard)
+        # the paper's latency story: redundancy is round-neutral on the wire
+        metrics[f"latency_parity_P{p}"] = Metric(
+            red["rounds"] == tree["rounds"], **hard
+        )
+    metrics["redundant_bytes_P16"] = Metric(
+        by[(16, "redundant", 0, "qr_combine")]["bytes"], **hard, unit="B"
+    )
+    metrics["gram_packed_bytes_P16"] = Metric(
+        by[(16, "redundant", 0, "gram_sum")]["bytes_packed"], **hard, unit="B"
+    )
+    # failure-time overhead at P=16, f=3 (within tolerance)
+    for variant in ("replace", "selfhealing"):
+        base = by[(16, variant, 0, "sum")]
+        f3 = by[(16, variant, 3, "sum")]
+        metrics[f"{variant}_extra_rounds_f3"] = Metric(
+            f3["rounds"] - base["rounds"], gate="hard", direction="lower"
+        )
+        metrics[f"{variant}_extra_messages_f3"] = Metric(
+            f3["messages"] - base["messages"], gate="hard", direction="lower"
+        )
+    metrics["observed_matches_plan"] = Metric(
+        _observed_matches_plan(observe_p, n_cols), **hard
+    )
+    return metrics
+
+
+bench_case(
+    "comm_volume",
+    tags=("comm", "accounting"),
+    params={
+        "smoke": {"n_cols": 32, "itemsize": 4, "observe_p": 16},
+        "full": {"n_cols": 32, "itemsize": 4, "observe_p": 64},
+    },
+)(case)
+
+
+def main():
+    print("# comm volume per combiner: messages / serial rounds / bytes "
+          "(n=32, f32; bytes_packed = symmetric n(n+1)/2 encoding)")
+    print("P,variant,failures,combiner,messages,rounds,bytes,bytes_packed")
+    for r in run():
+        print(f"{r['P']},{r['variant']},{r['failures']},{r['combiner']},"
+              f"{r['messages']},{r['rounds']},{r['bytes']},{r['bytes_packed']}")
+    # structural claims from the paper, asserted
+    for p in (16, 256):
+        tree = make_plan("tree", p)
+        red = make_plan("redundant", p)
+        assert red.message_count() == p * int(np.log2(p))
+        assert tree.message_count() == p - 1
+        assert red.round_count() == tree.round_count()   # wire-latency-neutral
+    # packed-symmetric accounting: n(n+1)/2 vs n² for the Gram butterfly
+    n = 32
+    plan = make_plan("redundant", 16)
+    assert plan.bytes_on_wire(n, symmetric=True) * (2 * n) \
+        == plan.bytes_on_wire(n) * (n + 1)
+    assert get_combiner("gram_sum").wire_symmetric
+    assert not get_combiner("qr_combine").wire_symmetric
+    assert set(_OPS) <= set(COMBINERS)
+    return run()
+
+
+if __name__ == "__main__":
+    main()

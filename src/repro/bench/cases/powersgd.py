@@ -1,0 +1,112 @@
+"""PowerSGD-TSQR gradient compression: bytes over the data axis vs dense
+all-reduce, and reconstruction quality vs rank (the paper-integration
+benchmark, DESIGN.md §3.1).  Reconstruction error and compression ratio
+are hard-gated (deterministic seeds; a quality regression in the
+compressor is a real bug), per-call wall-clock is warn-gated.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench.registry import bench_case
+from repro.bench.schema import Metric
+from repro.collective import SimComm
+from repro.optim import powersgd
+
+__all__ = ["case", "main", "run"]
+
+
+def _psum_id(x):
+    return x
+
+
+def _psum_model(x):
+    return jnp.broadcast_to(x.sum(0, keepdims=True), x.shape)
+
+
+def run(ranks=(2, 8, 32, 128), p_model: int = 8, m_loc: int = 256,
+        n: int = 1024, spectrum: int = 256, iters: int = 3):
+    key = jax.random.key(0)
+    rows = []
+    # synthetic gradient with decaying spectrum (realistic for LM grads)
+    spectrum = min(spectrum, p_model * m_loc, n)
+    u, _ = np.linalg.qr(
+        np.random.default_rng(0).standard_normal((p_model * m_loc, spectrum))
+    )
+    v, _ = np.linalg.qr(np.random.default_rng(1).standard_normal((n, spectrum)))
+    sv = np.logspace(0, -3, spectrum)
+    g = jnp.asarray((u * sv) @ v.T, jnp.float32).reshape(p_model, m_loc, n)
+    g_norm = float(jnp.linalg.norm(g))
+    comm = SimComm(p_model)
+    for rank in ranks:
+        cfg = powersgd.PowerSGDConfig(rank=rank, error_feedback=False)
+        state = powersgd.init_state(key, (m_loc, n), cfg, leading=(p_model,))
+        fn = jax.jit(lambda gg, st: powersgd.compress_grad(
+            gg, st, comm, cfg=cfg, psum_data=_psum_id,
+            psum_model=_psum_model, n_data=1)[:2])
+        (g_hat, state) = fn(g, state)
+        # one power-iteration refinement (warm basis), as in training
+        (g_hat, state) = fn(g, state)
+        jax.block_until_ready(g_hat)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(g, state)
+            jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        err = float(jnp.linalg.norm(g - g_hat)) / g_norm
+        dense = 4 * p_model * m_loc * n
+        comp = 4 * rank * (p_model * m_loc + n)
+        rows.append({
+            "rank": rank, "rel_error": err,
+            "bytes_dense": dense, "bytes_compressed": comp,
+            "compression_x": dense / comp, "us_per_call": us,
+        })
+    return rows
+
+
+def case(**kw):
+    rows = run(**kw)
+    metrics = {}
+    for r in rows:
+        k = r["rank"]
+        metrics[f"rel_error_r{k}"] = Metric(
+            r["rel_error"], gate="hard", direction="lower", tolerance=0.10
+        )
+        metrics[f"compression_x_r{k}"] = Metric(
+            r["compression_x"], gate="hard", direction="higher", tolerance=0.01
+        )
+        metrics[f"us_per_call_r{k}"] = Metric(
+            r["us_per_call"], gate="warn", direction="lower", unit="us"
+        )
+    return metrics
+
+
+bench_case(
+    "powersgd",
+    tags=("timing", "compression", "powersgd"),
+    params={
+        "smoke": {"ranks": (2, 8, 32), "p_model": 4, "m_loc": 128,
+                  "n": 512, "spectrum": 128, "iters": 2},
+        "full": {"ranks": (2, 8, 32, 128), "p_model": 8, "m_loc": 256,
+                 "n": 1024, "spectrum": 256, "iters": 3},
+    },
+)(case)
+
+
+def main():
+    print("# powersgd-tsqr: data-axis bytes + reconstruction vs rank")
+    print("rank,rel_error,bytes_dense,bytes_compressed,compression_x,us_per_call")
+    rows = run()
+    for r in rows:
+        print(f"{r['rank']},{r['rel_error']:.4f},{r['bytes_dense']},"
+              f"{r['bytes_compressed']},{r['compression_x']:.1f},"
+              f"{r['us_per_call']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""TSQR wall-clock microbenchmark (CPU, SimComm backend): variant × P ×
+local-QR implementation.  The absolute numbers are CPU-simulation times;
+the *relative* cost of redundancy (redundant ≈ tree despite 2× messages —
+extra QRs land on otherwise-idle ranks) is the paper's Fig. 1/2 story.
+
+Two registered cases: ``tsqr_scaling`` sweeps variant × P, and
+``tsqr_local_qr`` sweeps the local-QR implementations (jnp / CholeskyQR2 /
+the Pallas kernel).  All timing metrics are warn-gated — shared CI runners
+are too noisy to gate wall-clock hard.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench.registry import bench_case
+from repro.bench.schema import Metric
+from repro.core import ref, tsqr_sim
+
+__all__ = ["bench_one", "case_local_qr", "case_scaling", "main"]
+
+
+def bench_one(variant: str, p: int, m_loc: int, n: int, local_qr: str,
+              iters: int = 5) -> float:
+    rng = np.random.default_rng(0)
+    blocks = jnp.asarray(ref.random_tall_skinny(rng, p, m_loc, n))
+    fn = jax.jit(lambda a: tsqr_sim(a, variant=variant, local_qr=local_qr).r)
+    fn(blocks).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(blocks).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def case_scaling(ps=(4, 16, 64), m_loc: int = 256, n: int = 32, iters: int = 5):
+    metrics = {}
+    for p in ps:
+        us = {}
+        for variant in ("tree", "redundant"):
+            us[variant] = bench_one(variant, p, m_loc, n, "jnp", iters=iters)
+            metrics[f"us_{variant}_P{p}"] = Metric(
+                us[variant], gate="warn", direction="lower", unit="us"
+            )
+        # the paper's story: redundancy ≈ free (ratio near 1 on idle ranks)
+        metrics[f"redundant_overhead_P{p}"] = Metric(
+            us["redundant"] / us["tree"], gate="warn", direction="lower"
+        )
+    return metrics
+
+
+def case_local_qr(p: int = 16, m_loc: int = 512, n: int = 64, iters: int = 5,
+                  impls=("jnp", "cqr2", "cqr2_pallas")):
+    metrics = {}
+    for lq in impls:
+        us = bench_one("redundant", p, m_loc, n, lq, iters=iters)
+        metrics[f"us_{lq}"] = Metric(us, gate="warn", direction="lower", unit="us")
+    return metrics
+
+
+bench_case(
+    "tsqr_scaling",
+    tags=("timing", "tsqr"),
+    params={
+        "smoke": {"ps": (4, 16), "m_loc": 128, "n": 16, "iters": 2},
+        "full": {"ps": (4, 16, 64), "m_loc": 256, "n": 32, "iters": 5},
+    },
+)(case_scaling)
+
+bench_case(
+    "tsqr_local_qr",
+    tags=("timing", "tsqr", "kernels"),
+    params={
+        "smoke": {"p": 16, "m_loc": 256, "n": 32, "iters": 2},
+        "full": {"p": 16, "m_loc": 512, "n": 64, "iters": 5},
+    },
+)(case_local_qr)
+
+
+def main():
+    print("# tsqr scaling (SimComm on CPU): us_per_call")
+    print("variant,P,m_local,n,local_qr,us_per_call")
+    rows = []
+    for p in (4, 16, 64):
+        for variant in ("tree", "redundant"):
+            us = bench_one(variant, p, 256, 32, "jnp")
+            rows.append((variant, p, 256, 32, "jnp", us))
+            print(f"{variant},{p},256,32,jnp,{us:.0f}")
+    for lq in ("jnp", "cqr2", "cqr2_pallas"):
+        us = bench_one("redundant", 16, 512, 64, lq)
+        rows.append(("redundant", 16, 512, 64, lq, us))
+        print(f"redundant,16,512,64,{lq},{us:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

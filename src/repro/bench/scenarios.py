@@ -1,0 +1,341 @@
+"""Declarative fault-scenario engine (DESIGN.md §5).
+
+Scenario diversity beyond single-round Monte-Carlo: a scenario is a small
+declarative schedule — which rank/replica fails at which butterfly step or
+training step — executed deterministically and distilled into hard-gated
+metrics.  Two scenario kinds:
+
+* :class:`CollectiveScenario` — a sequence of :class:`ReduceRound`\\ s,
+  each one ``ft_allreduce`` invocation over a
+  :class:`~repro.collective.comm.SimComm` with (a) *masked* replicas
+  (BLANK semantics: the rank participates but its contribution is zeroed)
+  and (b) mid-reduce *deaths* (``{rank: butterfly_step}``, the paper's
+  fail-stop model).  Survivor values are checked against the dense
+  reduction of the masked inputs, and comm volume is measured through
+  :class:`~repro.collective.instrument.InstrumentedComm`.
+
+* :class:`TrainerScenario` — a :class:`~repro.runtime.trainer.FaultEvent`
+  schedule driven through a real (tiny) :class:`Trainer` on a
+  ``(data, model)`` mesh, exercising the SHRINK / REBUILD / BLANK
+  semantics end to end; assertions read the trainer's structured
+  ``fault_stats`` counters.  Needs enough (simulated) devices — the bench
+  CLI forces 8 host devices; under-provisioned environments skip.
+
+The stock :data:`SCENARIOS` sweep covers the four scenario families the
+single-round Monte-Carlo misses: **correlated** block wipes, **cascading**
+step-after-step failures, **fail-during-rebuild** (a second failure while
+the first rollback is still replaying), and **BLANK-under-repeat**
+(masking + mid-reduce faults across repeated reductions).
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+from collections.abc import Mapping
+
+import numpy as np
+
+from repro.bench.registry import BenchFailure, SkipCase, bench_case
+from repro.bench.schema import Metric
+
+__all__ = [
+    "CollectiveScenario",
+    "ReduceRound",
+    "TrainerScenario",
+    "case",
+    "get_scenarios",
+    "run_collective_scenario",
+    "run_scenario",
+    "run_trainer_scenario",
+]
+
+
+# ---------------------------------------------------------------------------
+# Scenario formats
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReduceRound:
+    """One ft_allreduce invocation inside a repeated-reduction scenario."""
+
+    deaths: tuple[tuple[int, int], ...] = ()   # (rank, butterfly step)
+    masked: tuple[int, ...] = ()               # BLANK-masked replicas
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveScenario:
+    name: str
+    p: int
+    variant: str
+    rounds: tuple[ReduceRound, ...] = (ReduceRound(),)
+    op: str = "sum"
+    description: str = ""
+
+    kind = "collective"
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerScenario:
+    name: str
+    on_failure: str                      # blank | shrink | rebuild
+    events: tuple = ()                   # FaultEvent schedule
+    data_width: int = 4
+    model_width: int = 1
+    steps: int = 8
+    ckpt_every: int = 3
+    buddy_levels: int = 1
+    expect: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    description: str = ""
+
+    kind = "trainer"
+
+
+# ---------------------------------------------------------------------------
+# Executors
+# ---------------------------------------------------------------------------
+
+def run_collective_scenario(sc: CollectiveScenario, seed: int = 0) -> dict:
+    """Execute every round; return metric dict (unprefixed names)."""
+    import jax.numpy as jnp
+
+    from repro.collective import (
+        FaultSpec,
+        InstrumentedComm,
+        SimComm,
+        ft_allreduce,
+        ilog2,
+        make_plan,
+        within_tolerance,
+    )
+
+    rng = np.random.default_rng(seed)
+    comm = InstrumentedComm(SimComm(sc.p))
+    n_steps = ilog2(sc.p)
+    metrics: dict[str, Metric] = {}
+    all_match = True
+    all_survived = True
+    for i, rnd in enumerate(sc.rounds):
+        spec = FaultSpec.of(dict(rnd.deaths))
+        plan = make_plan(sc.variant, sc.p, spec)
+        x = rng.normal(size=(sc.p, 4, 4)).astype(np.float32)
+        x[list(rnd.masked)] = 0.0                      # BLANK: zero contribution
+        val, valid = ft_allreduce(jnp.asarray(x), comm, op=sc.op, plan=plan)
+        valid = np.asarray(valid)
+        expect = x.sum(0)                              # full reduction over P
+        holders = np.nonzero(valid)[0]
+        match = bool(holders.size) and all(
+            np.allclose(np.asarray(val)[r], expect, rtol=1e-5, atol=1e-5)
+            for r in holders
+        )
+        in_tol = within_tolerance(sc.variant, spec, n_steps)
+        metrics[f"round{i}_survivors"] = Metric(
+            int(valid.sum()), gate="hard", direction="exact"
+        )
+        if in_tol:                                     # guarantee applies
+            all_match &= match
+            all_survived &= bool(valid.any())
+        metrics[f"round{i}_within_tolerance"] = Metric(
+            in_tol, gate="hard", direction="exact"
+        )
+    metrics["values_match"] = Metric(all_match, gate="hard", direction="exact")
+    metrics["survived"] = Metric(all_survived, gate="hard", direction="exact")
+    metrics["messages"] = Metric(
+        comm.stats.messages, gate="hard", direction="exact"
+    )
+    metrics["comm_rounds"] = Metric(
+        comm.stats.rounds, gate="hard", direction="exact"
+    )
+    metrics["payload_bytes"] = Metric(
+        comm.stats.payload_bytes, gate="hard", direction="exact", unit="B"
+    )
+    return metrics
+
+
+def run_trainer_scenario(sc: TrainerScenario, ckpt_dir: str | None = None) -> dict:
+    """Drive a tiny Trainer through the event schedule; metric dict.
+
+    Raises :class:`~repro.bench.registry.SkipCase` when the host has too
+    few devices — anything else (I/O errors included) propagates and fails
+    the run loudly.
+    """
+    import jax
+
+    n_needed = sc.data_width * sc.model_width
+    if jax.device_count() < n_needed:
+        raise SkipCase(
+            f"needs {n_needed} devices, have {jax.device_count()} "
+            "(run via `python -m repro.bench run`, which forces 8)"
+        )
+    from repro.compat import make_mesh
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = get_config("olmo-1b").smoke(n_layers=2)
+    mesh = make_mesh((sc.data_width, sc.model_width), ("data", "model"))
+    own_dir = ckpt_dir is None
+    ckpt_dir = ckpt_dir or tempfile.mkdtemp(prefix=f"bench_{sc.name}_")
+    tcfg = TrainerConfig(
+        steps=sc.steps, log_every=10**9, ckpt_every=sc.ckpt_every,
+        ckpt_dir=ckpt_dir,
+        on_failure=sc.on_failure, buddy_levels=sc.buddy_levels, seed=0,
+    )
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2 * sc.data_width)
+    tr = Trainer(cfg, tcfg, mesh, dc)
+    p, o = tr.init_state()
+    try:
+        tr.run(p, o, fault_schedule=tuple(sc.events))
+    finally:
+        if own_dir:
+            import shutil
+
+            shutil.rmtree(ckpt_dir, ignore_errors=True)
+    losses = [m["loss"] for m in tr.metrics_log]
+    metrics: dict[str, Metric] = {
+        "completed_final_step": Metric(
+            int(tr.metrics_log[-1]["step"]), gate="hard", direction="exact"
+        ),
+        "loss_finite": Metric(
+            bool(np.isfinite(losses).all()), gate="hard", direction="exact"
+        ),
+        "final_replicas": Metric(
+            int(tr.n_replicas), gate="hard", direction="exact"
+        ),
+    }
+    for key, want in sc.expect.items():
+        got = int(tr.fault_stats[key])
+        metrics[f"stat_{key}"] = Metric(got, gate="hard", direction="exact")
+        if got != want:
+            raise BenchFailure(
+                f"scenario {sc.name}: fault_stats[{key!r}] = {got}, "
+                f"schedule expects {want} (events: "
+                + "; ".join(tr.events_log[-6:]) + ")"
+            )
+    return metrics
+
+
+def run_scenario(sc, **kw) -> dict:
+    if sc.kind == "collective":
+        return run_collective_scenario(sc, **kw)
+    return run_trainer_scenario(sc, **kw)
+
+
+# ---------------------------------------------------------------------------
+# The stock sweep
+# ---------------------------------------------------------------------------
+
+def _stock_scenarios() -> tuple:
+    from repro.runtime.trainer import FaultEvent
+
+    return (
+        # Correlated: one 4-rank failure domain (a host) dies at once.  At
+        # entry of exchange 3 there are 2^3 copies of every intermediate, so
+        # Replace reroutes around the wiped block within tolerance.
+        CollectiveScenario(
+            name="correlated_block_wipe", p=16, variant="replace",
+            rounds=(ReduceRound(deaths=((8, 3), (9, 3), (10, 3), (11, 3))),),
+            description="ranks 8-11 (one failure domain) die at entry of "
+                        "exchange 3; replace reroutes, 12 survivors",
+        ),
+        # Cascading: failures arriving at successive exchanges; Self-Healing
+        # respawns between steps so every rank ends holding the result.
+        CollectiveScenario(
+            name="cascading_failures", p=16, variant="selfhealing",
+            rounds=(ReduceRound(deaths=((1, 1), (6, 2), (9, 2), (12, 3))),),
+            description="1 death at step 1, two at step 2, one at step 3 — "
+                        "within the per-step 2^s−1 budget at every step",
+        ),
+        # BLANK under repeat: three successive reductions with a growing
+        # masked set and mid-reduce deaths of the masked ranks — the
+        # collective analogue of the trainer's blank semantics.
+        CollectiveScenario(
+            name="blank_under_repeat", p=8, variant="redundant",
+            rounds=(
+                ReduceRound(),
+                ReduceRound(masked=(2,), deaths=((2, 2),)),
+                ReduceRound(masked=(2, 5), deaths=((5, 1),)),
+            ),
+            description="repeated reductions; masked replicas contribute "
+                        "zero, and also die mid-reduce within tolerance",
+        ),
+        # Fail during rebuild: disk-rollback REBUILD (no buddy store), and a
+        # second replica fails while the first rollback is still replaying.
+        TrainerScenario(
+            name="fail_during_rebuild", on_failure="rebuild",
+            buddy_levels=0, steps=10, ckpt_every=3,
+            events=(
+                FaultEvent(step=5, kind="fail", replica=0),
+                FaultEvent(step=5, kind="fail", replica=1),
+            ),
+            expect={"failures": 2, "rollbacks": 2},
+            description="replica 0 dies at step 5 → rollback to ckpt 3; "
+                        "replica 1 dies when the replay re-reaches step 5",
+        ),
+        # Buddy-pair wipe: both members of an XOR buddy pair die in the same
+        # step — the first recovers diskless from its buddy, the second finds
+        # its only replica gone and must fall back to the disk rollback.
+        TrainerScenario(
+            name="buddy_pair_wipe", on_failure="rebuild",
+            buddy_levels=1, steps=8, ckpt_every=3,
+            events=(
+                FaultEvent(step=5, kind="fail", replica=0),
+                FaultEvent(step=5, kind="fail", replica=1),
+            ),
+            expect={"failures": 2, "buddy_restores": 1, "rollbacks": 1},
+            description="replicas 0 and 1 (level-1 buddies) die together; "
+                        "first recovers diskless, second needs the disk",
+        ),
+        # SHRINK then REBUILD: elastic round trip through the mesh layer.
+        TrainerScenario(
+            name="shrink_then_rebuild", on_failure="shrink",
+            steps=8, ckpt_every=0,
+            events=(
+                FaultEvent(step=3, kind="fail", replica=1),
+                FaultEvent(step=6, kind="rejoin"),
+            ),
+            expect={"failures": 1, "shrinks": 1, "rejoins": 1},
+            description="lose a replica at step 3 (mesh 4→2), replacement "
+                        "hardware rejoins at step 6 (mesh 2→4)",
+        ),
+    )
+
+
+_CACHE: list = []
+
+
+def get_scenarios() -> tuple:
+    """The stock sweep (built lazily: FaultEvent's module imports jax)."""
+    if not _CACHE:
+        _CACHE.append(_stock_scenarios())
+    return _CACHE[0]
+
+
+def case(include_trainer: bool = True, seed: int = 0):
+    metrics: dict[str, Metric] = {}
+    n_run = 0
+    for sc in get_scenarios():
+        if sc.kind == "trainer" and not include_trainer:
+            continue
+        try:
+            sub = run_scenario(sc, **({"seed": seed} if sc.kind == "collective" else {}))
+        except SkipCase as e:       # too few devices; real errors propagate
+            metrics[f"{sc.name}.skipped"] = Metric(
+                True, gate="warn", direction="exact"
+            )
+            print(f"[bench]   scenario {sc.name} skipped: {e}")
+            continue
+        n_run += 1
+        for k, m in sub.items():
+            metrics[f"{sc.name}.{k}"] = m
+    metrics["n_scenarios_run"] = Metric(n_run, gate="hard", direction="higher")
+    return metrics
+
+
+bench_case(
+    "fault_scenarios",
+    tags=("robustness", "scenarios"),
+    params={
+        "smoke": {"include_trainer": True, "seed": 0},
+        "full": {"include_trainer": True, "seed": 0},
+    },
+)(case)

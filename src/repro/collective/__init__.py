@@ -38,14 +38,17 @@ from .combiners import (
 from .comm import Comm, ShardMapComm, SimComm
 from .engine import execute_plan, ft_allreduce
 from .faults import NEVER, FaultSpec, tolerance, total_tolerance, within_tolerance
+from .instrument import CommStats, InstrumentedComm
 from .plan import VARIANTS, Plan, Step, ilog2, make_plan, payload_numel
 
 __all__ = [
     "COMBINERS",
     "Comm",
+    "CommStats",
     "Combiner",
     "FaultSpec",
     "GramSumCombiner",
+    "InstrumentedComm",
     "MaxCombiner",
     "MeanCombiner",
     "NEVER",

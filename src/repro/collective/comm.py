@@ -56,6 +56,13 @@ class Comm:
         """`where` with a per-rank scalar condition, broadcast over payload."""
         raise NotImplementedError
 
+    def leaf_nbytes(self, leaf) -> int:
+        """Per-rank wire bytes of one payload leaf — the hook the
+        per-round byte counters (:mod:`repro.collective.instrument`) use.
+        Backends differ: a ``SimComm`` leaf carries the whole (P,)-leading
+        array, a ``ShardMapComm`` leaf is already the local block."""
+        raise NotImplementedError
+
 
 @dataclasses.dataclass(frozen=True)
 class SimComm(Comm):
@@ -87,6 +94,10 @@ class SimComm(Comm):
         extra = a.ndim - cond.ndim
         return jnp.where(cond.reshape(cond.shape + (1,) * extra), a, b)
 
+    def leaf_nbytes(self, leaf) -> int:
+        # leading (P,) axis: one rank's slice is 1/P of the array
+        return int(np.prod(leaf.shape[1:], dtype=np.int64)) * leaf.dtype.itemsize
+
 
 @dataclasses.dataclass(frozen=True)
 class ShardMapComm(Comm):
@@ -113,3 +124,7 @@ class ShardMapComm(Comm):
 
     def bwhere(self, cond, a, b):
         return jnp.where(cond, a, b)
+
+    def leaf_nbytes(self, leaf) -> int:
+        # SPMD: the leaf is already one rank's local block
+        return int(np.prod(leaf.shape, dtype=np.int64)) * leaf.dtype.itemsize

@@ -197,7 +197,7 @@ def shapes_for(cfg: ModelConfig) -> list[ShapeSpec]:
     """The assigned shape cells for an architecture.
 
     ``long_500k`` runs only for sub-quadratic families (SSM / hybrid) —
-    pure full-attention archs skip it (DESIGN.md §5).
+    pure full-attention archs skip it (DESIGN.md §6).
     """
     out = []
     for spec in SHAPES.values():

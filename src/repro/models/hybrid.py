@@ -5,7 +5,7 @@ The shared block's parameters exist once (the Zamba trick — attention
 quality at ~1/13th of the attention parameter cost); each of its
 ``n_units`` applications keeps its own KV cache.  Deviation from the
 published model: the shared block attends over the hidden state x rather
-than concat(x, x_embed) (DESIGN.md §5 note).
+than concat(x, x_embed) (DESIGN.md §6 note).
 
 Structure: n_units = n_layers // attn_every scanned units of
 (attn_every mamba layers → shared attn block), then a tail of

@@ -43,5 +43,8 @@ def shrink_mesh(mesh: Mesh, drop_replicas: int = 1) -> Mesh | None:
 def rebuild_mesh(template_mesh: Mesh) -> Mesh:
     """REBUILD: re-instantiate the full original topology (replacement
     devices joined).  On real fleets this waits for the scheduler; here the
-    devices never physically left."""
+    devices never physically left.  The trainer drives this via the
+    ``"rejoin"`` :class:`~repro.runtime.trainer.FaultEvent` (the inverse of
+    an elastic shrink), which the fault-scenario benchmarks schedule to
+    exercise shrink→rebuild round trips."""
     return mesh_from_devices(template_mesh.devices, template_mesh.axis_names)

@@ -107,8 +107,8 @@ def ft_replica_grad(loss_fn, params, batch, n_replicas: int, fault_spec=None):
 @dataclasses.dataclass(frozen=True)
 class FaultEvent:
     step: int
-    kind: str              # "fail" | "recover" | "straggle"
-    replica: int           # data-parallel replica index
+    kind: str              # "fail" | "recover" | "straggle" | "rejoin"
+    replica: int = 0       # data-parallel replica index (unused for rejoin)
     duration: int = 1      # steps (straggle)
 
 
@@ -148,12 +148,22 @@ class Trainer:
         )
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
         self.n_replicas = self._mesh_replicas(mesh)
+        # buddy_levels=0 disables the diskless store entirely (forces the
+        # disk-rollback REBUILD path — fault-scenario sweeps rely on this).
         self.buddies = BuddyStore(max(2, 1 << (self.n_replicas - 1).bit_length())) \
-            if self.n_replicas > 1 else None
+            if self.n_replicas > 1 and tcfg.buddy_levels > 0 else None
         self.alive = np.ones(self.n_replicas, dtype=bool)
         self.straggling = np.zeros(self.n_replicas, dtype=np.int64)
         self.metrics_log: list[dict] = []
         self.events_log: list[str] = []
+        # Structured counters consumed by the fault-scenario benchmarks
+        # (repro.bench.scenarios) — the machine-readable twin of events_log.
+        self.fault_stats: dict[str, int] = {
+            "failures": 0, "recoveries": 0, "straggles": 0, "rollbacks": 0,
+            "buddy_restores": 0, "shrinks": 0, "rejoins": 0, "masked_steps": 0,
+        }
+        # REBUILD-to-full-width target: the topology we started with.
+        self._template_mesh = mesh
         self._build(mesh)
 
     # ------------------------------------------------------------------
@@ -273,6 +283,8 @@ class Trainer:
         dead = ~self.alive
         if self.tcfg.drop_stragglers:
             dead = dead | (self.straggling > 0)
+        if dead.any():
+            self.fault_stats["masked_steps"] += 1
         for r in np.nonzero(dead)[0]:
             w[r * per : (r + 1) * per] = 0.0
         alive_frac = max(w.mean(), 1e-6)
@@ -345,16 +357,22 @@ class Trainer:
     def _handle_event(self, ev: FaultEvent, params, opt_state, step):
         if ev.kind == "straggle":
             self.straggling[ev.replica] = ev.duration
+            self.fault_stats["straggles"] += 1
             self.events_log.append(f"step {step}: replica {ev.replica} straggling")
             return params, opt_state, step
         if ev.kind == "recover":
             self.alive[ev.replica] = True
+            self.fault_stats["recoveries"] += 1
             if self.buddies is not None:
                 self.buddies.respawn(ev.replica)
             self.events_log.append(f"step {step}: replica {ev.replica} recovered")
             return params, opt_state, step
+        if ev.kind == "rejoin":
+            params, opt_state = self._rejoin(params, opt_state)
+            return params, opt_state, step
         assert ev.kind == "fail"
         self.alive[ev.replica] = False
+        self.fault_stats["failures"] += 1
         if self.buddies is not None:
             self.buddies.fail(ev.replica)
         mode = self.tcfg.on_failure
@@ -372,6 +390,7 @@ class Trainer:
                 try:
                     ck_step, _ = self.buddies.recover(ev.replica)
                     restored = step  # in-memory state is current: no rollback
+                    self.fault_stats["buddy_restores"] += 1
                     self.events_log.append(
                         f"step {step}: replica {ev.replica} restored from buddy "
                         f"(ckpt step {ck_step}, no rollback)"
@@ -391,6 +410,7 @@ class Trainer:
                     params = jax.device_put(state["params"], self.param_shardings)
                     opt_state = jax.device_put(state["opt"], self.opt_shardings)
                 step = int(meta["step"]) + 1
+                self.fault_stats["rollbacks"] += 1
                 self.events_log.append(
                     f"rollback to checkpoint step {meta['step']}"
                 )
@@ -406,12 +426,51 @@ class Trainer:
     def _shrink(self, params, opt_state, dead_replica: int):
         """Elastic SHRINK: rebuild the mesh without the dead replica's
         devices and reshard live state onto it."""
+        from repro.compat import mesh_from_devices
         from repro.runtime.elastic import shrink_mesh
 
-        new_mesh = shrink_mesh(self.mesh, drop_replicas=1)
+        # shrink_mesh keeps the leading data-axis slice, so rotate the dead
+        # replica's devices to the tail first — the surviving mesh must not
+        # contain the failed hardware.
+        mesh = self.mesh
+        if "data" in mesh.axis_names:
+            ax = mesh.axis_names.index("data")
+            d = mesh.devices.shape[ax]
+            if 0 <= dead_replica < d:
+                order = [i for i in range(d) if i != dead_replica] + [dead_replica]
+                mesh = mesh_from_devices(
+                    np.take(mesh.devices, order, axis=ax), mesh.axis_names
+                )
+        new_mesh = shrink_mesh(mesh, drop_replicas=1)
         if new_mesh is None:
             self.events_log.append("shrink impossible (data axis exhausted) — blanking")
             return params, opt_state
+        params, opt_state = self._remesh(params, opt_state, new_mesh)
+        self.fault_stats["shrinks"] += 1
+        self.events_log.append(
+            f"elastic shrink → mesh {dict(zip(new_mesh.axis_names, new_mesh.devices.shape))}"
+        )
+        return params, opt_state
+
+    def _rejoin(self, params, opt_state):
+        """Elastic REBUILD: replacement devices are back — re-instantiate the
+        original template topology and reshard live state onto it (the
+        inverse of :meth:`_shrink`; a ``"rejoin"`` :class:`FaultEvent`)."""
+        from repro.runtime.elastic import rebuild_mesh
+
+        full = rebuild_mesh(self._template_mesh)
+        if full.devices.shape == self.mesh.devices.shape:
+            self.events_log.append("rejoin: already at full width — no-op")
+            return params, opt_state
+        params, opt_state = self._remesh(params, opt_state, full)
+        self.fault_stats["rejoins"] += 1
+        self.events_log.append(
+            f"elastic rebuild → mesh {dict(zip(full.axis_names, full.devices.shape))}"
+        )
+        return params, opt_state
+
+    def _remesh(self, params, opt_state, new_mesh):
+        """Move live state onto ``new_mesh`` and rebuild the jitted step."""
         host = jax.device_get({"params": params, "opt": opt_state})
         self.n_replicas = self._mesh_replicas(new_mesh)
         self.alive = np.ones(self.n_replicas, dtype=bool)
@@ -420,7 +479,4 @@ class Trainer:
         with mesh_context(new_mesh):
             params = jax.device_put(host["params"], self.param_shardings)
             opt_state = jax.device_put(host["opt"], self.opt_shardings)
-        self.events_log.append(
-            f"elastic shrink → mesh {dict(zip(new_mesh.axis_names, new_mesh.devices.shape))}"
-        )
         return params, opt_state

@@ -1,0 +1,299 @@
+"""The benchmark subsystem: registry, runner/schema, comparator gating,
+collective fault scenarios, and the comm instrumentation hooks."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.bench import compare, registry, runner, schema
+from repro.bench.registry import BenchFailure, SkipCase, bench_case, cases_for
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registered_cases_cover_migrated_benchmarks():
+    from repro.bench import cases  # noqa: F401 — triggers registration
+
+    names = set(registry.REGISTRY)
+    assert {
+        "robustness", "comm_volume", "semantics", "tsqr_scaling",
+        "tsqr_local_qr", "powersgd", "roofline", "fault_scenarios",
+    } <= names
+    smoke = {c.name for c in cases_for("smoke")}
+    assert {"robustness", "comm_volume", "semantics", "fault_scenarios"} <= smoke
+
+
+def test_registry_tier_filter_and_duplicates():
+    table = {}
+    bench_case("a", tiers=("smoke",), registry=table)(lambda: {"m": 1})
+    bench_case("b", tiers=("full",), registry=table)(lambda: {"m": 1})
+    assert [c.name for c in cases_for("smoke", registry=table)] == ["a"]
+    assert [c.name for c in cases_for("full", registry=table)] == ["b"]
+    with pytest.raises(ValueError, match="duplicate"):
+        bench_case("a", registry=table)(lambda: {})
+    with pytest.raises(KeyError, match="unknown bench case"):
+        cases_for("smoke", only=("nope",), registry=table)
+    with pytest.raises(ValueError, match="unknown tiers"):
+        bench_case("c", tiers=("nightly",), registry=table)(lambda: {})
+
+
+# ---------------------------------------------------------------------------
+# runner + schema
+# ---------------------------------------------------------------------------
+
+def _toy_registry():
+    table = {}
+    bench_case(
+        "ok_case", registry=table, repeats=3,
+        params={"smoke": {"x": 2}},
+    )(lambda x: {"doubled": schema.Metric(2 * x, gate="hard", direction="higher"),
+                 "info": 3.5})
+    bench_case("skippy", registry=table)(
+        lambda: (_ for _ in ()).throw(SkipCase("no artifacts"))
+    )
+    return table
+
+
+def test_runner_emits_valid_doc(tmp_path):
+    doc = runner.run_cases("smoke", registry=_toy_registry(), verbose=False)
+    schema.validate(doc)
+    ok = doc["cases"]["ok_case"]
+    assert ok["status"] == "ok"
+    assert ok["params"] == {"x": 2}
+    assert ok["metrics"]["doubled"] == {
+        "value": 4, "gate": "hard", "direction": "higher"
+    }
+    # bare numbers become informational warn/exact metrics
+    assert ok["metrics"]["info"]["gate"] == "warn"
+    # warmup/repeat/percentile timing folded in as warn-gated metrics
+    for t in ("time_mean_us", "time_p50_us", "time_p90_us", "time_min_us"):
+        assert ok["metrics"][t]["gate"] == "warn"
+        assert ok["metrics"][t]["direction"] == "lower"
+    assert doc["cases"]["skippy"] == {
+        "params": {}, "status": "skipped", "skip_reason": "no artifacts"
+    }
+    path = runner.write_doc(doc, out_dir=str(tmp_path))
+    assert path.startswith(str(tmp_path)) and "BENCH_" in path
+    with open(path) as f:
+        schema.validate(json.load(f))
+
+
+def test_runner_records_errors_and_bench_failures():
+    table = {}
+    bench_case("boom", registry=table)(
+        lambda: (_ for _ in ()).throw(BenchFailure("guarantee broke"))
+    )
+    doc = runner.run_cases("smoke", registry=table, verbose=False)
+    c = doc["cases"]["boom"]
+    assert c["status"] == "error"
+    assert "guarantee broke" in c["error"]
+
+
+def test_schema_rejects_malformed():
+    doc = runner.run_cases("smoke", registry=_toy_registry(), verbose=False)
+    for mutate in (
+        lambda d: d.update(schema_version=99),
+        lambda d: d["cases"]["ok_case"]["metrics"]["doubled"].update(gate="soft"),
+        lambda d: d["cases"]["ok_case"].update(status="meh"),
+        lambda d: d["cases"].clear(),
+        lambda d: d.update(n_devices="eight"),
+    ):
+        bad = json.loads(json.dumps(doc))
+        mutate(bad)
+        with pytest.raises(schema.SchemaError):
+            schema.validate(bad)
+
+
+# ---------------------------------------------------------------------------
+# comparator gating
+# ---------------------------------------------------------------------------
+
+def _doc(metrics, status="ok", case="c"):
+    entry = {"status": status, "params": {}}
+    if status == "ok":
+        entry["metrics"] = {
+            k: schema.metric_to_json(m) for k, m in metrics.items()
+        }
+    elif status == "skipped":
+        entry["skip_reason"] = "n/a"
+    return schema.validate({
+        "schema_version": schema.SCHEMA_VERSION,
+        "created": "2026-07-27T00:00:00Z",
+        "git_sha": None, "jax_version": "0.4.37", "backend": "cpu",
+        "platform": "test", "python": "3.10", "n_devices": 1,
+        "tier": "smoke", "cases": {case: entry},
+    })
+
+
+def test_compare_hard_regression_fails():
+    old = _doc({"survivors": schema.Metric(12, gate="hard", direction="higher")})
+    new = _doc({"survivors": schema.Metric(8, gate="hard", direction="higher")})
+    cmp = compare.compare_docs(old, new)
+    assert cmp.failures and cmp.exit_code() == 1
+    # improvement passes
+    up = _doc({"survivors": schema.Metric(16, gate="hard", direction="higher")})
+    assert compare.compare_docs(old, up).exit_code() == 0
+
+
+def test_compare_exact_and_bool_metrics():
+    old = _doc({"msgs": schema.Metric(64, gate="hard", direction="exact"),
+                "holds": schema.Metric(True, gate="hard", direction="exact")})
+    same = _doc({"msgs": schema.Metric(64, gate="hard", direction="exact"),
+                 "holds": schema.Metric(True, gate="hard", direction="exact")})
+    assert compare.compare_docs(old, same).exit_code() == 0
+    drift = _doc({"msgs": schema.Metric(65, gate="hard", direction="exact"),
+                  "holds": schema.Metric(True, gate="hard", direction="exact")})
+    assert compare.compare_docs(old, drift).exit_code() == 1
+    flipped = _doc({"msgs": schema.Metric(64, gate="hard", direction="exact"),
+                    "holds": schema.Metric(False, gate="hard", direction="exact")})
+    assert compare.compare_docs(old, flipped).exit_code() == 1
+
+
+def test_compare_timing_warns_only_unless_strict():
+    old = _doc({"time_mean_us": schema.Metric(
+        100.0, gate="warn", direction="lower", unit="us")})
+    slow = _doc({"time_mean_us": schema.Metric(
+        1000.0, gate="warn", direction="lower", unit="us")})
+    cmp = compare.compare_docs(old, slow)
+    assert cmp.warnings and not cmp.failures
+    assert cmp.exit_code() == 0
+    assert cmp.exit_code(strict_timing=True) == 1
+    # inside the (generous) timing tolerance: no warning at all
+    near = _doc({"time_mean_us": schema.Metric(
+        120.0, gate="warn", direction="lower", unit="us")})
+    assert not compare.compare_docs(old, near).warnings
+
+
+def test_compare_per_metric_tolerance_override():
+    old = _doc({"err": schema.Metric(
+        0.10, gate="hard", direction="lower", tolerance=0.5)})
+    within = _doc({"err": schema.Metric(
+        0.14, gate="hard", direction="lower", tolerance=0.5)})
+    beyond = _doc({"err": schema.Metric(
+        0.16, gate="hard", direction="lower", tolerance=0.5)})
+    assert compare.compare_docs(old, within).exit_code() == 0
+    assert compare.compare_docs(old, beyond).exit_code() == 1
+
+
+def test_compare_coverage_regressions():
+    old = _doc({"m": schema.Metric(1, gate="hard", direction="exact")})
+    # case disappears entirely
+    gone = _doc({"m": schema.Metric(1, gate="hard", direction="exact")},
+                case="other")
+    assert compare.compare_docs(old, gone).exit_code() == 1
+    # ok → skipped is a coverage regression
+    skipped = _doc({}, status="skipped")
+    assert compare.compare_docs(old, skipped).exit_code() == 1
+    # skipped → skipped is fine (e.g. roofline with no artifacts anywhere)
+    assert compare.compare_docs(skipped, skipped).exit_code() == 0
+    # hard metric disappears from a still-ok case
+    fewer = _doc({"other": schema.Metric(1, gate="hard", direction="exact")})
+    assert compare.compare_docs(old, fewer).exit_code() == 1
+
+
+def test_compare_refuses_tier_and_param_mismatches():
+    old = _doc({"m": schema.Metric(1, gate="hard", direction="exact")})
+    other_tier = json.loads(json.dumps(old))
+    other_tier["tier"] = "full"
+    cmp = compare.compare_docs(old, other_tier)
+    assert cmp.exit_code() == 1 and "tier mismatch" in cmp.failures[0]
+    other_params = json.loads(json.dumps(old))
+    other_params["cases"]["c"]["params"] = {"trials": 9}
+    cmp = compare.compare_docs(old, other_params)
+    assert cmp.exit_code() == 1 and "params changed" in cmp.failures[0]
+
+
+def test_compare_cli_roundtrip(tmp_path):
+    from repro.bench.__main__ import main
+
+    old = _doc({"m": schema.Metric(10, gate="hard", direction="higher")})
+    bad = _doc({"m": schema.Metric(1, gate="hard", direction="higher")})
+    po, pb = tmp_path / "old.json", tmp_path / "bad.json"
+    po.write_text(json.dumps(old))
+    pb.write_text(json.dumps(bad))
+    assert main(["compare", str(po), str(po)]) == 0
+    assert main(["compare", str(po), str(pb)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# fault scenarios (collective half; trainer half runs in test_elastic.py's
+# subprocess with 8 forced devices)
+# ---------------------------------------------------------------------------
+
+def test_collective_scenarios_survive_and_match():
+    from repro.bench import scenarios
+
+    byname = {s.name: s for s in scenarios.get_scenarios()}
+    assert {"correlated_block_wipe", "cascading_failures",
+            "blank_under_repeat", "fail_during_rebuild",
+            "shrink_then_rebuild"} <= set(byname)
+    for name in ("correlated_block_wipe", "cascading_failures",
+                 "blank_under_repeat"):
+        m = scenarios.run_collective_scenario(byname[name])
+        assert m["survived"].value is True, name
+        assert m["values_match"].value is True, name
+        assert m["messages"].value > 0
+    # the distilled expectations the baseline gates on
+    m = scenarios.run_collective_scenario(byname["correlated_block_wipe"])
+    assert m["round0_survivors"].value == 12      # 16 − the wiped domain
+    m = scenarios.run_collective_scenario(byname["cascading_failures"])
+    assert m["round0_survivors"].value == 16      # selfhealing respawns all
+    m = scenarios.run_collective_scenario(byname["blank_under_repeat"])
+    assert [m[f"round{i}_survivors"].value for i in range(3)] == [8, 6, 4]
+
+
+def test_scenario_seed_determinism():
+    from repro.bench import scenarios
+
+    sc = [s for s in scenarios.get_scenarios()
+          if s.name == "blank_under_repeat"][0]
+    a = scenarios.run_collective_scenario(sc, seed=7)
+    b = scenarios.run_collective_scenario(sc, seed=7)
+    assert {k: v.value for k, v in a.items()} == {k: v.value for k, v in b.items()}
+
+
+# ---------------------------------------------------------------------------
+# comm instrumentation hooks
+# ---------------------------------------------------------------------------
+
+def test_instrumented_comm_matches_plan_accounting():
+    import jax.numpy as jnp
+
+    from repro.collective import (
+        FaultSpec, InstrumentedComm, SimComm, execute_plan, make_plan,
+    )
+
+    n = 4
+    x = jnp.asarray(
+        np.random.default_rng(0).normal(size=(8, n, n)).astype(np.float32)
+    )
+    for variant in ("tree", "redundant", "replace", "selfhealing"):
+        plan = make_plan(variant, 8)
+        ic = InstrumentedComm(SimComm(8))
+        execute_plan(x, ic, plan, "sum")
+        assert ic.stats.messages == plan.message_count(), variant
+        assert ic.stats.rounds == plan.round_count(), variant
+        # payload + 1 validity byte per message
+        assert ic.stats.payload_bytes == \
+            plan.bytes_on_wire(n, 4) + plan.message_count(), variant
+    # faulted selfhealing: restore transfers are counted too
+    plan = make_plan("selfhealing", 8, FaultSpec.of({5: 1, 2: 2}))
+    ic = InstrumentedComm(SimComm(8))
+    execute_plan(x, ic, plan, "sum")
+    assert ic.stats.messages == plan.message_count()
+    assert any(r["messages"] for r in ic.stats.per_round)
+    ic.stats.reset()
+    assert ic.stats.messages == 0
+
+
+def test_robustness_case_guarantee_and_metrics():
+    from repro.bench.cases import robustness
+
+    m = robustness.case(p=8, trials=60, seed=0)
+    assert m["guarantee_holds"].value is True
+    assert m["guaranteed_max_f_tree"].value == 0
+    assert m["guaranteed_max_f_selfhealing"].value >= 1
+    # sum of (2^s − 1) over the 3 levels of P=8
+    assert m["selfhealing_total_tolerance"].value == 4

@@ -1,0 +1,139 @@
+"""Elastic mesh management (shrink/rebuild) and the trainer-level fault
+scenarios, in subprocesses with 8 forced host devices (same pattern as
+test_spmd.py — the in-process suite keeps the single real CPU device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = REPO_SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_shrink_mesh_power_of_two_widths_and_exhaustion():
+    _run("""
+    import numpy as np
+    from repro.compat import make_mesh
+    from repro.runtime.elastic import shrink_mesh
+
+    mesh = make_mesh((8, 1), ("data", "model"))
+
+    def width(m):
+        return m.devices.shape[m.axis_names.index("data")]
+
+    # default halving walks the power-of-two ladder down to 1
+    m = mesh
+    for expect in (4, 2, 1):
+        m = shrink_mesh(m)
+        assert width(m) == expect, (expect, m.devices.shape)
+        assert m.axis_names == mesh.axis_names
+    assert shrink_mesh(m) is None            # exhausted at width 1
+
+    # drop_replicas keeps halving until enough replicas are gone
+    assert width(shrink_mesh(mesh, drop_replicas=1)) == 4
+    assert width(shrink_mesh(mesh, drop_replicas=4)) == 4   # 8-4 >= 4
+    assert width(shrink_mesh(mesh, drop_replicas=5)) == 2   # needs 8-2 >= 5
+    assert width(shrink_mesh(mesh, drop_replicas=7)) == 1
+    assert shrink_mesh(mesh, drop_replicas=8) is None        # can't drop all
+
+    # the survivors are the leading slice of the original device array
+    small = shrink_mesh(mesh)
+    assert (small.devices == mesh.devices[:4]).all()
+
+    # no data axis -> nothing to shrink
+    assert shrink_mesh(make_mesh((8,), ("model",))) is None
+    print("shrink topology OK")
+    """)
+
+
+@pytest.mark.slow
+def test_rebuild_mesh_roundtrips_template():
+    _run("""
+    from repro.compat import make_mesh
+    from repro.runtime.elastic import rebuild_mesh, shrink_mesh
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    small = shrink_mesh(mesh)
+    assert small.devices.shape == (2, 2)
+    full = rebuild_mesh(mesh)                # template, not the shrunk mesh
+    assert full.axis_names == mesh.axis_names
+    assert full.devices.shape == mesh.devices.shape
+    assert (full.devices == mesh.devices).all()
+    print("rebuild roundtrip OK")
+    """)
+
+
+@pytest.mark.slow
+def test_shrink_excludes_dead_replica_devices():
+    """SHRINK must drop the failed replica's devices, not just halve the
+    leading slice (which would keep the dead hardware in the mesh)."""
+    _run("""
+    from repro.compat import make_mesh
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.runtime.trainer import Trainer, TrainerConfig, FaultEvent
+
+    cfg = get_config("olmo-1b").smoke(n_layers=1)
+    mesh = make_mesh((4, 1), ("data", "model"))
+    dead = set(mesh.devices[1].ravel())          # replica 1's devices
+    tc = TrainerConfig(steps=5, log_every=100, ckpt_every=0,
+                       on_failure="shrink", ckpt_dir="/tmp/ck_shrink_dead")
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    tr = Trainer(cfg, tc, mesh, dc)
+    p, o = tr.init_state()
+    tr.run(p, o, fault_schedule=(FaultEvent(step=2, kind="fail", replica=1),))
+    assert tr.n_replicas == 2
+    surviving = set(tr.mesh.devices.ravel())
+    assert not (dead & surviving), (dead, surviving)
+    print("dead replica excluded OK")
+    """)
+
+
+@pytest.mark.slow
+def test_trainer_fault_scenarios_end_to_end():
+    """The stock trainer scenarios (fail-during-rebuild, buddy-pair wipe,
+    shrink→rebuild) run against a real 4-replica mesh and hit their
+    scheduled fault_stats exactly (run_trainer_scenario raises otherwise)."""
+    _run("""
+    from repro.bench import scenarios
+
+    ran = []
+    for sc in scenarios.get_scenarios():
+        if sc.kind != "trainer":
+            continue
+        m = scenarios.run_trainer_scenario(sc)
+        assert m["loss_finite"].value is True, sc.name
+        ran.append(sc.name)
+    assert set(ran) == {"fail_during_rebuild", "buddy_pair_wipe",
+                        "shrink_then_rebuild"}, ran
+    print("trainer scenarios OK")
+    """, timeout=1200)
+
+
+def test_trainer_scenarios_skip_without_devices():
+    """In-process (single device) the trainer scenarios refuse to run and
+    the registered case degrades to warn-gated skip markers."""
+    import jax
+
+    from repro.bench import scenarios
+    from repro.bench.registry import SkipCase
+
+    if jax.device_count() >= 4:
+        pytest.skip("multi-device host: nothing to verify")
+    sc = [s for s in scenarios.get_scenarios() if s.kind == "trainer"][0]
+    with pytest.raises(SkipCase, match="devices"):
+        scenarios.run_trainer_scenario(sc)

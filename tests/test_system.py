@@ -12,7 +12,7 @@ from repro.configs.base import ShapeSpec, get_config, list_archs, shapes_for
 
 def test_cell_matrix_is_complete():
     """32 assigned cells: 10 archs × {train,prefill,decode} + long_500k for
-    the two sub-quadratic archs (DESIGN.md §5)."""
+    the two sub-quadratic archs (DESIGN.md §6)."""
     cells = [(a, s.name) for a in list_archs() for s in shapes_for(get_config(a))]
     assert len(cells) == 32
     long_archs = {a for a, s in cells if s == "long_500k"}
