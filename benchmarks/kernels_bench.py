@@ -1,0 +1,8 @@
+"""Thin shim — logic lives in :mod:`repro.bench.cases.kernels` and is
+registered as the ``kernels`` bench case (``python -m repro.bench run``),
+hard-gating the fused CQR2 pipeline's 2-sweep HBM claim.  Run with
+``PYTHONPATH=src`` for the standalone CSV."""
+from repro.bench.cases.kernels import case, main, run  # noqa: F401
+
+if __name__ == "__main__":
+    main()

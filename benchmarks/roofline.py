@@ -6,6 +6,7 @@ from repro.bench.cases.roofline import (  # noqa: F401
     advice,
     analyze_record,
     case,
+    cqr2_rows,
     load_all,
     main,
     markdown_table,

@@ -7,14 +7,17 @@ pairs (same serial rounds = same latency on full-duplex ICI) and (b) buys
 transfers).
 
 Wire volume depends on the combiner's payload: ``qr_combine`` ships square
-(n, n) R factors; ``gram_sum`` payloads are symmetric, so the packed
-n(n+1)/2 encoding applies — both numbers are reported (``bytes`` square,
-``bytes_packed`` symmetric).
+(n, n) R factors; ``gram_sum`` payloads are symmetric and the engine ships
+them packed (n(n+1)/2, via ``repro.collective.packing``) — both numbers are
+reported (``bytes`` square, ``bytes_packed`` symmetric).
 
 The registered case additionally *executes* the plans through
 :class:`~repro.collective.instrument.InstrumentedComm` and gates on the
-observed-vs-planned agreement, so a planner change that silently alters
-real wire traffic (not just the accounting) trips CI.
+observed-vs-planned agreement — covering the fault-free fast path (payload
+only), the general executor (+1 validity byte per message), the packed
+symmetric wire, and faulty plans with restore rounds — so an engine or
+planner change that silently alters real wire traffic (not just the
+accounting) trips CI.
 """
 from __future__ import annotations
 
@@ -61,25 +64,69 @@ def run(n_cols: int = 32, itemsize: int = 4, ops=_OPS):
 
 
 def _observed_matches_plan(p: int, n_cols: int) -> bool:
-    """Execute each fault-free plan with counting comms; compare to the
-    planner's accounting (payload + 1 validity byte per message)."""
+    """Execute each plan with counting comms; compare to the planner's
+    accounting.  Fault-free plans ride the engine's fast path, which ships
+    the payload alone (``bytes_on_wire`` exactly); the general executor
+    (forced, and under faults) adds 1 validity byte per message; symmetric
+    ``gram_sum`` payloads ship packed (``bytes_on_wire(symmetric=True)``)."""
     import jax.numpy as jnp
 
-    from repro.collective import InstrumentedComm, SimComm, execute_plan
+    from repro.collective import (
+        FaultSpec,
+        InstrumentedComm,
+        SimComm,
+        execute_plan,
+        plan_is_fault_free,
+    )
 
     x = jnp.asarray(
         np.random.default_rng(0).normal(size=(p, n_cols, n_cols)).astype(np.float32)
     )
+    sym = jnp.einsum("pmi,pmj->pij", x, x)      # symmetric gram payloads
+
+    def observed(payload, plan, op, fast):
+        ic = InstrumentedComm(SimComm(p))
+        execute_plan(payload, ic, plan, op, fast=fast)
+        return ic.stats
+
     for variant in ("tree", "redundant", "replace", "selfhealing"):
         plan = make_plan(variant, p)
-        ic = InstrumentedComm(SimComm(p))
-        execute_plan(x, ic, plan, "sum")
-        if ic.stats.messages != plan.message_count():
+        # fault-free auto dispatch: payload only on the wire
+        st = observed(x, plan, "sum", None)
+        expect = plan.bytes_on_wire(n_cols, 4)
+        if plan_is_fault_free(plan):
+            if st.payload_bytes != expect:
+                return False
+        else:  # tree never takes the fast path: validity rides along
+            if st.payload_bytes != expect + plan.message_count():
+                return False
+        if st.messages != plan.message_count():
             return False
-        if ic.stats.rounds != plan.round_count():
+        if st.rounds != plan.round_count():
+            return False
+        # forced general path: + 1 validity byte per message
+        st = observed(x, plan, "sum", False)
+        if st.payload_bytes != expect + plan.message_count():
+            return False
+        # packed symmetric wire: what bytes_on_wire(symmetric=True) prices
+        st = observed(sym, plan, "gram_sum", None)
+        packed = plan.bytes_on_wire(n_cols, 4, symmetric=True)
+        if plan_is_fault_free(plan):
+            if st.payload_bytes != packed:
+                return False
+        elif st.payload_bytes != packed + plan.message_count():
+            return False
+    # under faults the general executor runs (restore rounds included)
+    spec = FaultSpec.of({3: 1, 5: 2})
+    for variant in ("redundant", "replace", "selfhealing"):
+        plan = make_plan(variant, p, spec)
+        st = observed(x, plan, "sum", None)
+        if st.messages != plan.message_count():
+            return False
+        if st.rounds != plan.round_count():
             return False
         expect = plan.bytes_on_wire(n_cols, 4) + plan.message_count()
-        if ic.stats.payload_bytes != expect:
+        if st.payload_bytes != expect:
             return False
     return True
 

@@ -36,9 +36,10 @@ from .combiners import (
     qr_r,
 )
 from .comm import Comm, ShardMapComm, SimComm
-from .engine import execute_plan, ft_allreduce
+from .engine import execute_plan, ft_allreduce, plan_is_fault_free
 from .faults import NEVER, FaultSpec, tolerance, total_tolerance, within_tolerance
 from .instrument import CommStats, InstrumentedComm
+from .packing import pack_sym, unpack_sym
 from .plan import VARIANTS, Plan, Step, ilog2, make_plan, payload_numel
 
 __all__ = [
@@ -64,8 +65,11 @@ __all__ = [
     "get_combiner",
     "ilog2",
     "make_plan",
+    "pack_sym",
     "payload_numel",
+    "plan_is_fault_free",
     "posdiag",
+    "unpack_sym",
     "qr_r",
     "tolerance",
     "total_tolerance",

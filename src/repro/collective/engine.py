@@ -18,6 +18,25 @@ fault-oblivious ``butterfly_allreduce_sum``: PowerSGD's Gram reductions,
 the CholeskyQR reorthogonalization passes, and the trainer's BLANK-mode
 gradient reduction all route through it.
 
+**Fault-free fast path.**  ~100% of production steps run a fault-free plan:
+one perm-round per level, nobody dies, every rank stays valid.  The general
+executor still paid per level for machinery only faults need — a
+``zeros_like`` + ``add`` receive-staging loop (multi-round Replace
+multicast), a validity bit on the wire, per-rank validity updates and
+NaN-poison writes.  When the host plan proves fault-freeness
+(:func:`plan_is_fault_free`), :func:`execute_plan` dispatches to a
+straight-line butterfly — exchange, order by the level bit, combine — that
+both the jnp and Pallas combiners ride, and returns the host-predicted
+(all-true) validity.  The result is bit-identical to the general path
+(asserted across the test suite); pass ``fast=False`` to force the general
+executor.
+
+**Symmetric wire packing.**  Combiners that declare ``wire_symmetric``
+(``gram_sum``) carry symmetric (…, n, n) payloads; both executors pack them
+to the n(n+1)/2 upper triangle at the comm boundary
+(:mod:`repro.collective.packing`), so the wire carries exactly what
+``Plan.bytes_on_wire(symmetric=True)`` prices.
+
 Validity semantics: a dead rank's contribution is zero-filled (XLA
 collective-permute semantics) and flagged invalid — the step-boundary
 analogue of ULFM's error returns.  The host plan predicts the same validity;
@@ -35,9 +54,10 @@ import jax.numpy as jnp
 from .combiners import Combiner, get_combiner
 from .comm import Comm
 from .faults import NEVER, FaultSpec
+from .packing import pack_sym, packable, unpack_sym
 from .plan import Plan, make_plan
 
-__all__ = ["execute_plan", "ft_allreduce"]
+__all__ = ["execute_plan", "ft_allreduce", "plan_is_fault_free"]
 
 
 def _poison(leaf):
@@ -47,7 +67,71 @@ def _poison(leaf):
     return jnp.zeros_like(leaf)
 
 
-def execute_plan(x, comm: Comm, plan: Plan, combiner: Combiner | str):
+def plan_is_fault_free(plan: Plan) -> bool:
+    """Host-side fast-path eligibility: one perm-round per step, no restore
+    rounds, no deaths during the collective, and every rank valid
+    throughout (excludes ``tree``, whose senders go invalid by design)."""
+    if not bool(plan.final_valid.all()):
+        return False
+    if plan.n_steps and bool((plan.death < plan.n_steps).any()):
+        return False
+    for step in plan.steps:
+        if len(step.perm_rounds) != 1 or step.restore_rounds:
+            return False
+        if not bool(step.valid_after.all()):
+            return False
+    return True
+
+
+def _wire_codec(combiner: Combiner, val):
+    """(pack, unpack) applied at the comm boundary.  Symmetric payloads ship
+    the n(n+1)/2 upper triangle; everything else passes through."""
+    leaves = jax.tree.leaves(val)
+    if (
+        getattr(combiner, "wire_symmetric", False)
+        and leaves
+        and all(packable(leaf) for leaf in leaves)
+    ):
+        def pack(t):
+            return jax.tree.map(pack_sym, t)
+
+        def unpack(t):
+            return jax.tree.map(
+                lambda leaf, orig: unpack_sym(leaf, orig.shape[-1]), t, val
+            )
+
+        return pack, unpack
+
+    def ident(t):
+        return t
+
+    return ident, ident
+
+
+def _execute_fast(x, comm: Comm, plan: Plan, combiner: Combiner):
+    """Straight-line fault-free butterfly: no receive staging, no validity
+    bit on the wire, no poison writes.  Requires :func:`plan_is_fault_free`;
+    bit-identical to the general executor on such plans."""
+    val = jax.tree.map(combiner.prepare, x)
+    pack, unpack = _wire_codec(combiner, val)
+    my = comm.ranks()
+    for step in plan.steps:
+        recv = unpack(comm.exchange(pack(val), step.perm_rounds[0]))
+        mine_first = ((my >> step.level) & 1) == 0
+        lo = jax.tree.map(lambda m, o: comm.bwhere(mine_first, m, o), val, recv)
+        hi = jax.tree.map(lambda m, o: comm.bwhere(mine_first, o, m), val, recv)
+        val = jax.tree.map(combiner.combine, lo, hi)
+    return val, comm.take(plan.final_valid)
+
+
+def execute_plan(
+    x,
+    comm: Comm,
+    plan: Plan,
+    combiner: Combiner | str,
+    *,
+    fast: bool | None = None,
+):
     """Run ``plan`` over ``x`` with ``combiner``.  Returns ``(value, valid)``.
 
     ``x`` is a pytree of per-rank payloads (leading (P,) axis under
@@ -55,9 +139,23 @@ def execute_plan(x, comm: Comm, plan: Plan, combiner: Combiner | str):
     un-finalized combine (callers wanting mean semantics etc. should use
     :func:`ft_allreduce`); ``valid`` is the per-rank validity bit, which
     matches ``plan.final_valid`` bit-for-bit.
+
+    ``fast=None`` auto-dispatches to the fault-free fast path when the host
+    plan permits; ``False`` forces the general executor; ``True`` demands
+    the fast path (raises if the plan is not fault-free).
     """
     combiner = get_combiner(combiner)
+    fault_free = plan_is_fault_free(plan)
+    if fast is True and not fault_free:
+        raise ValueError(
+            "fast=True requires a fault-free plan (one perm-round per step, "
+            "no deaths, all ranks valid)"
+        )
+    if fault_free and fast is not False:
+        return _execute_fast(x, comm, plan, combiner)
+
     val = jax.tree.map(combiner.prepare, x)
+    pack, unpack = _wire_codec(combiner, val)
     d = comm.take(plan.death)
     my = comm.ranks()
     valid = d > 0
@@ -65,12 +163,14 @@ def execute_plan(x, comm: Comm, plan: Plan, combiner: Combiner | str):
         s = step.level
         can = valid & (d > s)
         # ---- exchange (possibly several unique-source rounds) -------------
-        recv = jax.tree.map(jnp.zeros_like, val)
+        pval = pack(val)
+        recv_p = jax.tree.map(jnp.zeros_like, pval)
         recv_v = jnp.zeros_like(can)
         for rnd in step.perm_rounds:
-            rr, rv = comm.exchange((val, can), rnd)
-            recv = jax.tree.map(jnp.add, recv, rr)  # each rank receives ≤once
+            rr, rv = comm.exchange((pval, can), rnd)
+            recv_p = jax.tree.map(jnp.add, recv_p, rr)  # each rank receives ≤once
             recv_v = recv_v | rv
+        recv = unpack(recv_p)
         # ---- combine: operands ordered by this level's block bit ----------
         mine_first = ((my >> s) & 1) == 0
         lo = jax.tree.map(lambda m, o: comm.bwhere(mine_first, m, o), val, recv)
@@ -81,7 +181,8 @@ def execute_plan(x, comm: Comm, plan: Plan, combiner: Combiner | str):
         # ---- Self-Healing: respawn dead ranks from a replica ---------------
         if step.restore_rounds:
             for rnd in step.restore_rounds:
-                rr, rv = comm.exchange((val, valid), rnd)
+                rr, rv = comm.exchange((pack(val), valid), rnd)
+                rr = unpack(rr)
                 got = rv & ~valid
                 val = jax.tree.map(
                     lambda cur, rec: comm.bwhere(got, rec, cur), val, rr
@@ -100,13 +201,15 @@ def ft_allreduce(
     variant: str = "redundant",
     fault_spec: FaultSpec | None = None,
     plan: Plan | None = None,
+    fast: bool | None = None,
 ):
     """Fault-tolerant all-reduce over the paper's butterfly.
 
     Fault-free this is exactly the redundant-TSQR communication pattern with
-    the requested combiner; under a ``fault_spec`` (or explicit ``plan``) it
-    inherits the variant's tolerance — ``2^s − 1`` failures at the entry of
-    exchange ``s`` — and survivors end with the full reduction.
+    the requested combiner (ridden on the straight-line fast path); under a
+    ``fault_spec`` (or explicit ``plan``) it inherits the variant's
+    tolerance — ``2^s − 1`` failures at the entry of exchange ``s`` — and
+    survivors end with the full reduction.
 
     Returns ``(value, valid)``: ``value`` is the finalized reduction (pytree
     like ``x``), ``valid`` the per-rank validity bit.  Invalid ranks hold
@@ -115,6 +218,6 @@ def ft_allreduce(
     if plan is None:
         plan = make_plan(variant, comm.n_ranks, fault_spec)
     combiner = get_combiner(op)
-    val, valid = execute_plan(x, comm, plan, combiner)
+    val, valid = execute_plan(x, comm, plan, combiner, fast=fast)
     val = jax.tree.map(lambda leaf: combiner.finalize(leaf, plan.n_ranks), val)
     return val, valid

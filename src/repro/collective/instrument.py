@@ -14,10 +14,14 @@ This is the measurement hook the benchmark subsystem
 agree in tests, so a planner change that silently alters wire traffic trips
 the regression gate.
 
-Accounting note: the engine exchanges ``(payload, validity)`` tuples, so
-observed bytes include one validity byte (bool) per message on top of the
-payload — ``observed == plan.bytes_on_wire(...) + plan.message_count()``
-for a single-leaf payload of matching shape.
+Accounting note: the *general* executor exchanges ``(payload, validity)``
+tuples, so observed bytes include one validity byte (bool) per message on
+top of the payload — ``observed == plan.bytes_on_wire(...) +
+plan.message_count()`` for a single-leaf payload of matching shape.  The
+fault-free fast path ships the payload alone (validity is host-proven), so
+there ``observed == plan.bytes_on_wire(...)`` exactly; symmetric combiners
+(``gram_sum``) pack to the n(n+1)/2 triangle on either path, priced by
+``bytes_on_wire(symmetric=True)``.
 """
 from __future__ import annotations
 

@@ -1,0 +1,43 @@
+"""Symmetric wire packing for butterfly payloads.
+
+``gram_sum`` payloads are symmetric (…, n, n) matrices, so only the upper
+triangle — n(n+1)/2 elements — needs to cross the wire.
+:meth:`repro.collective.plan.Plan.bytes_on_wire(symmetric=True)` has priced
+that encoding since PR 1; this module makes the engine actually *ship* it:
+:func:`pack_sym` flattens the upper triangle before every exchange and
+:func:`unpack_sym` mirrors it back on receipt, so the planned and observed
+byte counts agree (hard-gated in ``repro.bench.cases.comm_volume``).
+
+The round trip is exact for symmetric inputs: off-diagonal entries are
+copied (never recomputed), and the diagonal is selected with a ``where``
+rather than reconstructed arithmetically, so zero-filled non-receiver slots
+and NaN-poisoned invalid slots survive bit-for-bit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+__all__ = ["pack_sym", "unpack_sym", "packable"]
+
+
+def packable(leaf) -> bool:
+    """Is this payload leaf a batched square matrix we can pack?"""
+    return leaf.ndim >= 2 and leaf.shape[-1] == leaf.shape[-2]
+
+
+def pack_sym(x):
+    """(…, n, n) symmetric → (…, n(n+1)/2) upper triangle, row-major."""
+    n = x.shape[-1]
+    iu, ju = np.triu_indices(n)
+    return x[..., iu, ju]
+
+
+def unpack_sym(v, n: int):
+    """Inverse of :func:`pack_sym`: (…, n(n+1)/2) → symmetric (…, n, n)."""
+    iu, ju = np.triu_indices(n)
+    upper = jnp.zeros(v.shape[:-1] + (n, n), v.dtype).at[..., iu, ju].set(v)
+    return jnp.where(
+        jnp.eye(n, dtype=bool), upper, upper + jnp.swapaxes(upper, -1, -2)
+    )

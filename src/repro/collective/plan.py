@@ -48,10 +48,11 @@ def payload_numel(n_cols: int, symmetric: bool = False) -> int:
     """Elements per exchanged (n, n) payload.
 
     ``symmetric=True`` accounts for packed storage of a symmetric matrix
-    (Gram payloads): n(n+1)/2 instead of n² — the wire saving the
-    ``gram_sum`` combiner leaves on the table when payloads are shipped
-    square.  (Triangular R factors admit the same packing; that saving is
-    not modeled — ``qr_combine`` is priced square.)
+    (Gram payloads): n(n+1)/2 instead of n² — what the engine actually
+    ships for ``wire_symmetric`` combiners since the
+    :mod:`repro.collective.packing` codec (the comm_volume bench hard-gates
+    the observed agreement).  (Triangular R factors admit the same packing;
+    that saving is not modeled — ``qr_combine`` is priced square.)
     """
     if symmetric:
         return n_cols * (n_cols + 1) // 2

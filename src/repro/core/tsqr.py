@@ -27,8 +27,13 @@ butterfly a true all-reduce — every survivor ends with the same final R,
 which the paper's semantics require and which lets Q be formed locally as
 ``A R⁻¹`` without a backward tree pass).  The CholeskyQR reorthogonalization
 inside :func:`form_q` reduces its Gram matrices with
-:func:`~repro.collective.engine.ft_allreduce` (``gram_sum`` combiner) over
-the same butterfly.
+:func:`~repro.collective.engine.ft_allreduce` (``gram_sum`` combiner — the
+symmetric payload ships packed) over the same butterfly.
+
+Hot-path notes (DESIGN.md §7): fault-free plans ride the engine's
+straight-line fast path automatically, and the CQR2 local QRs use the
+fused 2-sweep R-only pipeline (``cholesky_qr2_r``) — the butterfly only
+carries R, so no tall intermediate is ever materialized.
 """
 from __future__ import annotations
 
@@ -66,16 +71,21 @@ def qr_r_jnp(a):
 
 
 def qr_r_cqr2(a):
-    """CholeskyQR2 R factor — the MXU-native local QR (see kernels/)."""
+    """CholeskyQR2 R factor — the MXU-native local QR (see kernels/).
+
+    Rides the fused 2-sweep R-only pipeline: the butterfly only carries R,
+    so no tall intermediate is ever materialized (the seed computed the full
+    4-sweep factorization and discarded Q).
+    """
     from repro.kernels import ops as kops
 
-    return kops.cholesky_qr2(a)[1]
+    return kops.cholesky_qr2_r(a)
 
 
 def qr_r_cqr2_pallas(a):
     from repro.kernels import ops as kops
 
-    return kops.cholesky_qr2(a, use_pallas=True)[1]
+    return kops.cholesky_qr2_r(a, use_pallas=True)
 
 
 local_qr_fns: dict[str, Callable] = {

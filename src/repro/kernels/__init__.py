@@ -1,18 +1,23 @@
 """Pallas TPU kernels for the paper's compute hot-spot: local tall-skinny QR.
 
 The paper's local QR (LAPACK Householder in the MPI original) is adapted to
-the MXU as CholeskyQR2 (DESIGN.md §2, adaptation #2).  Three kernels:
+the MXU as CholeskyQR2 (DESIGN.md §2, adaptation #2).  Four kernels:
 
-  * :mod:`repro.kernels.gram`         — blocked G = AᵀA, VMEM accumulator;
-  * :mod:`repro.kernels.apply_right`  — panel-streamed Q = A·R⁻¹ application;
-  * :mod:`repro.kernels.combine_gram` — fused R̃ᵀR̃ + R̃ᵀR̃ combine for the
+  * :mod:`repro.kernels.gram`             — blocked G = AᵀA, VMEM accumulator;
+  * :mod:`repro.kernels.apply_right`      — panel-streamed Q = A·R⁻¹;
+  * :mod:`repro.kernels.fused_apply_gram` — ONE sweep: Q = A·W **and** the
+    next round's G' = QᵀQ accumulated in VMEM (optionally without writing Q
+    at all) — the single-sweep-per-round CQR2 pipeline;
+  * :mod:`repro.kernels.combine_gram`     — fused R̃ᵀR̃ + R̃ᵀR̃ combine for the
     Gram-butterfly variant (§Perf).
 
-``ops.py`` holds the jit'd public wrappers (with pure-jnp fallbacks and
-batching); ``ref.py`` the oracles the tests compare against.  Kernels are
-validated in ``interpret=True`` mode on CPU; ``interpret=False`` targets the
-Mosaic TPU compiler.
+Edge tiles are masked in-kernel (no ``jnp.pad`` HBM round-trips), and the
+execution mode auto-detects the backend (:mod:`repro.kernels.backend`):
+compiled Mosaic on TPU, the Pallas interpreter elsewhere.  ``ops.py`` holds
+the jit'd public wrappers (jnp fallbacks, batching, and the HBM-traffic
+notes consumed by :mod:`repro.kernels.traffic`); ``ref.py`` the oracles the
+tests compare against.
 """
-from . import ops, ref
+from . import backend, ops, ref, traffic
 
-__all__ = ["ops", "ref"]
+__all__ = ["backend", "ops", "ref", "traffic"]

@@ -6,6 +6,11 @@ kernel — A row-panels stream HBM→VMEM, the (n, k) right operand is resident
 in VMEM for the whole sweep, and each output panel is written exactly once
 (index_map i → (i, 0), no revisits).  Accumulation is f32 on the MXU;
 the result is cast back to A's dtype on the way out.
+
+Edge tiles need no masking here: an out-of-bounds input row produces an
+out-of-bounds output row, which Pallas discards on the partial final block
+write.  No padded copy of A or W ever hits HBM (the seed padded both to
+lane multiples before every call).
 """
 from __future__ import annotations
 
@@ -16,13 +21,10 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from .backend import resolve_interpret
+from .gram import DEFAULT_BLOCK_ROWS, pick_block_rows
+
 __all__ = ["apply_right"]
-
-_LANE = 128
-
-
-def _ceil_to(x: int, q: int) -> int:
-    return -(-x // q) * q
 
 
 def _apply_kernel(a_ref, w_ref, o_ref):
@@ -35,26 +37,26 @@ def _apply_kernel(a_ref, w_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def apply_right(a, w, *, block_rows: int = 1024, interpret: bool = True):
-    """A (m, n) @ W (n, k) → (m, k) in A's dtype, f32 accumulation."""
+def apply_right(a, w, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                interpret: bool | None = None):
+    """A (m, n) @ W (n, k) → (m, k) in A's dtype, f32 accumulation.
+
+    ``interpret=None`` auto-detects the backend (compiled on TPU,
+    interpreted elsewhere).
+    """
+    interpret = resolve_interpret(interpret)
     m, n = a.shape
     n2, k = w.shape
     assert n == n2, (a.shape, w.shape)
-    n_pad = _ceil_to(max(n, 1), _LANE)
-    k_pad = _ceil_to(max(k, 1), _LANE)
-    block_rows = max(_LANE, min(block_rows, _ceil_to(m, _LANE)))
-    m_pad = _ceil_to(m, block_rows)
-    a_pad = jnp.pad(a, ((0, m_pad - m), (0, n_pad - n)))
-    w_pad = jnp.pad(w, ((0, n_pad - n), (0, k_pad - k)))
-    out = pl.pallas_call(
+    block_rows = pick_block_rows(m, block_rows)
+    return pl.pallas_call(
         _apply_kernel,
-        grid=(m_pad // block_rows,),
+        grid=(pl.cdiv(m, block_rows),),
         in_specs=[
-            pl.BlockSpec((block_rows, n_pad), lambda i: (i, 0)),
-            pl.BlockSpec((n_pad, k_pad), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_rows, k_pad), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((m_pad, k_pad), a.dtype),
+        out_specs=pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), a.dtype),
         interpret=interpret,
-    )(a_pad, w_pad)
-    return out[:m, :k]
+    )(a, w)

@@ -1,0 +1,33 @@
+"""Backend auto-detection for the Pallas kernels.
+
+The kernels in this package run in one of two modes:
+
+  * ``interpret=False`` — the compiled Mosaic TPU kernel (the production
+    path);
+  * ``interpret=True``  — the Pallas interpreter, which executes the kernel
+    body with XLA ops on any backend (the CPU test/CI path).
+
+The seed hard-coded ``interpret=True`` everywhere, so the "TPU-native"
+kernels silently ran interpreted even on a TPU runtime.  Every kernel entry
+point now takes ``interpret: bool | None = None`` and resolves ``None``
+here: compiled on TPU, interpreted elsewhere.  An explicit ``True``/``False``
+always wins (tests assert the resolved flag is the one that reaches
+``pl.pallas_call``).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["default_interpret", "resolve_interpret"]
+
+
+def default_interpret() -> bool:
+    """True (interpreter) unless running on a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve the tri-state ``interpret`` flag: ``None`` → auto-detect."""
+    if interpret is None:
+        return default_interpret()
+    return bool(interpret)

@@ -7,7 +7,9 @@ form ``G = R̃₁ᵀR̃₁ + R̃₂ᵀR̃₂`` — two n×n MXU matmuls fused in
 kernel, deferring the single Cholesky to the end of the butterfly.
 
 Single-block kernel: both operands and the output live entirely in VMEM
-(n ≤ 512 in every TSQR use; 3·n²·4B ≤ 3 MiB).
+(n ≤ 512 in every TSQR use; 3·n²·4B ≤ 3 MiB).  Operands are passed at their
+natural (n, n) shape — Mosaic pads to lane tiles inside VMEM; no padded
+copy is materialized in HBM.
 """
 from __future__ import annotations
 
@@ -18,13 +20,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from .backend import resolve_interpret
+
 __all__ = ["combine_gram"]
-
-_LANE = 128
-
-
-def _ceil_to(x: int, q: int) -> int:
-    return -(-x // q) * q
 
 
 def _combine_kernel(r1_ref, r2_ref, o_ref):
@@ -37,21 +35,22 @@ def _combine_kernel(r1_ref, r2_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def combine_gram(r1, r2, *, interpret: bool = True):
-    """G = R1ᵀR1 + R2ᵀR2, float32.  r1, r2: (n, n) → (n, n)."""
+def combine_gram(r1, r2, *, interpret: bool | None = None):
+    """G = R1ᵀR1 + R2ᵀR2, float32.  r1, r2: (n, n) → (n, n).
+
+    ``interpret=None`` auto-detects the backend.
+    """
+    interpret = resolve_interpret(interpret)
     n = r1.shape[-1]
     assert r1.shape == r2.shape == (n, n)
-    n_pad = _ceil_to(max(n, 1), _LANE)
-    pad = ((0, n_pad - n), (0, n_pad - n))
-    out = pl.pallas_call(
+    return pl.pallas_call(
         _combine_kernel,
         grid=(1,),
         in_specs=[
-            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
-            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
         interpret=interpret,
-    )(jnp.pad(r1, pad), jnp.pad(r2, pad))
-    return out[:n, :n]
+    )(r1, r2)

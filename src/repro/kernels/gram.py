@@ -1,21 +1,24 @@
 """Pallas TPU kernel: blocked Gram matrix G = AᵀA for tall-skinny A.
 
 This is the FLOP hot-spot of the TPU-native local QR (CholeskyQR2,
-DESIGN.md §2): for A (m, n) with m ≫ n, the Gram product is ~m·n² MACs while
-everything downstream (Cholesky, small inverse) is O(n³).  The kernel streams
-row-panels of A HBM→VMEM and accumulates the (n, n) Gram block in VMEM across
-the sequential TPU grid, so A is read exactly once and the accumulator never
-leaves VMEM.
+DESIGN.md §2, adaptation #2): for A (m, n) with m ≫ n, the Gram product is
+~m·n² MACs while everything downstream (Cholesky, small inverse) is O(n³).
+The kernel streams row-panels of A HBM→VMEM and accumulates the (n, n) Gram
+block in VMEM across the sequential TPU grid, so A is read exactly once and
+the accumulator never leaves VMEM.
 
 Tiling:
-  * grid = (m_pad / block_rows,) — sequential row sweep ("arbitrary"
+  * grid = (⌈m / block_rows⌉,) — sequential row sweep ("arbitrary"
     dimension semantics: the accumulation is order-independent).
-  * A panel  BlockSpec (block_rows, n_pad), index_map i → (i, 0).
-  * G output BlockSpec (n_pad, n_pad), index_map i → (0, 0): a constant
-    output block revisited by every grid step = the VMEM accumulator.
-  * n is zero-padded to the 128-lane boundary and m to the row-block size;
-    zero rows/columns contribute nothing to AᵀA, so padding is exact, and
-    the MXU sees native (8·k × 128·j) tiles.
+  * A panel  BlockSpec (block_rows, n), index_map i → (i, 0).
+  * G output BlockSpec (n, n), index_map i → (0, 0): a constant output
+    block revisited by every grid step = the VMEM accumulator.
+  * Edge tiles are handled **in-kernel**: when ``block_rows ∤ m`` the last
+    panel's out-of-bounds rows are zeroed against a row-index iota before
+    the matmul, so zero rows contribute nothing to AᵀA.  No padded copy of
+    A is ever materialized in HBM (the seed ``jnp.pad``-ed A to lane/block
+    multiples before every call — a full extra HBM round-trip); sub-lane n
+    is padded by Mosaic inside VMEM only.
 
 VMEM budget at defaults (block_rows=1024, n≤512, bf16 in / f32 acc):
 1 MiB panel + 1 MiB accumulator — comfortably inside the ~16 MiB/core VMEM.
@@ -29,46 +32,64 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-__all__ = ["gram", "DEFAULT_BLOCK_ROWS"]
+from .backend import resolve_interpret
+
+__all__ = ["gram", "DEFAULT_BLOCK_ROWS", "pick_block_rows", "mask_rows"]
 
 DEFAULT_BLOCK_ROWS = 1024
-_LANE = 128
+_SUBLANE = 8
 
 
 def _ceil_to(x: int, q: int) -> int:
     return -(-x // q) * q
 
 
-def _gram_kernel(a_ref, o_ref):
-    @pl.when(pl.program_id(0) == 0)
+def pick_block_rows(m: int, block_rows: int) -> int:
+    """Clamp the streaming panel height: never taller than (sublane-rounded)
+    m, never shorter than one sublane tile."""
+    return max(_SUBLANE, min(block_rows, _ceil_to(m, _SUBLANE)))
+
+
+def mask_rows(panel, grid_idx, block_rows: int, m: int):
+    """Zero the out-of-bounds rows of an edge panel (no-op when blocks
+    divide m exactly — the branch is static)."""
+    if m % block_rows == 0:
+        return panel
+    rows = grid_idx * block_rows + lax.broadcasted_iota(
+        jnp.int32, panel.shape, 0
+    )
+    return jnp.where(rows < m, panel, jnp.zeros_like(panel))
+
+
+def _gram_kernel(a_ref, o_ref, *, block_rows: int, m: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    a = a_ref[...]
+    a = mask_rows(a_ref[...], i, block_rows, m)
     o_ref[...] += lax.dot_general(
         a, a, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def gram(a, *, block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+def gram(a, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+         interpret: bool | None = None):
     """G = AᵀA, float32.  a: (m, n); returns (n, n).
 
-    ``interpret=True`` (the default in this CPU container) runs the kernel
-    body in the Pallas interpreter; on a TPU runtime pass ``interpret=False``
-    for the compiled Mosaic kernel.
+    ``interpret=None`` auto-detects the backend (compiled Mosaic kernel on
+    TPU, Pallas interpreter elsewhere); pass an explicit bool to override.
     """
+    interpret = resolve_interpret(interpret)
     m, n = a.shape
-    n_pad = _ceil_to(max(n, 1), _LANE)
-    block_rows = max(_LANE, min(block_rows, _ceil_to(m, _LANE)))
-    m_pad = _ceil_to(m, block_rows)
-    a_pad = jnp.pad(a, ((0, m_pad - m), (0, n_pad - n)))
-    out = pl.pallas_call(
-        _gram_kernel,
-        grid=(m_pad // block_rows,),
-        in_specs=[pl.BlockSpec((block_rows, n_pad), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
+    block_rows = pick_block_rows(m, block_rows)
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, block_rows=block_rows, m=m),
+        grid=(pl.cdiv(m, block_rows),),
+        in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
         interpret=interpret,
-    )(a_pad)
-    return out[:n, :n]
+    )(a)

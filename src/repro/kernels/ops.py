@@ -6,8 +6,19 @@ VPU-bound, while CQR2 is two rounds of (Gram matmul → n×n Cholesky →
 triangular inverse → panel matmul) — all MXU-shaped.  Numerically CQR2
 delivers Householder-grade orthogonality for κ(A) ≲ 1/√ε per round.
 
-Every wrapper accepts arbitrary leading batch dimensions (the SimComm
-backend carries a (P,) rank axis); Pallas calls are vmapped.
+The pipeline is **fused** (DESIGN.md §Kernels): round 1's panel apply also
+accumulates round 2's Gram in VMEM (:mod:`repro.kernels.fused_apply_gram`),
+so the full factorization streams the tall operand 3× instead of the seed's
+4×, and the R-factor-only variant (:func:`cholesky_qr2_r` — what the TSQR
+local QR actually needs) streams it exactly **2×** with no tall intermediate
+ever written to HBM.  Every wrapper reports its HBM traffic to
+:mod:`repro.kernels.traffic`, which the ``kernels`` bench case hard-gates.
+
+``interpret=None`` (the default everywhere) auto-detects the backend:
+compiled Mosaic kernels on TPU, the Pallas interpreter elsewhere
+(:mod:`repro.kernels.backend`).  Every wrapper accepts arbitrary leading
+batch dimensions (the SimComm backend carries a (P,) rank axis); Pallas
+calls are vmapped.
 """
 from __future__ import annotations
 
@@ -19,15 +30,19 @@ import jax.scipy.linalg as jsl
 
 from . import apply_right as _apply_mod
 from . import combine_gram as _combine_mod
+from . import fused_apply_gram as _fused_mod
 from . import gram as _gram_mod
 from . import ref as _ref
+from . import traffic as _traffic
 
 __all__ = [
     "gram",
     "apply_right",
+    "fused_apply_gram",
     "combine_gram",
     "cholesky_qr",
     "cholesky_qr2",
+    "cholesky_qr2_r",
     "tri_inv",
 ]
 
@@ -48,34 +63,88 @@ def _batched(fn, n_array_args):
     return wrapped
 
 
+def _nbytes(x) -> int:
+    return int(x.size) * x.dtype.itemsize
+
+
 # -- kernel entry points (batched, pallas/jnp switchable) -------------------
 
-def gram(a, *, use_pallas: bool = False, interpret: bool = True):
-    if not use_pallas:
-        return _ref.gram(a)
-    return _batched(_gram_mod.gram, 1)(a, interpret=interpret)
+def gram(a, *, use_pallas: bool = False, interpret: bool | None = None):
+    out = (
+        _batched(_gram_mod.gram, 1)(a, interpret=interpret)
+        if use_pallas
+        else _ref.gram(a)
+    )
+    _traffic.note("gram", sweeps=1, read_bytes=_nbytes(a),
+                  write_bytes=_nbytes(out))
+    return out
 
 
-def apply_right(a, w, *, use_pallas: bool = False, interpret: bool = True):
-    if not use_pallas:
-        return _ref.apply_right(a, w)
-    return _batched(_apply_mod.apply_right, 2)(a, w, interpret=interpret)
+def apply_right(a, w, *, use_pallas: bool = False,
+                interpret: bool | None = None):
+    out = (
+        _batched(_apply_mod.apply_right, 2)(a, w, interpret=interpret)
+        if use_pallas
+        else _ref.apply_right(a, w)
+    )
+    _traffic.note("apply_right", sweeps=1,
+                  read_bytes=_nbytes(a) + _nbytes(w),
+                  write_bytes=_nbytes(out))
+    return out
 
 
-def combine_gram(r1, r2, *, use_pallas: bool = False, interpret: bool = True):
-    if not use_pallas:
-        return _ref.combine_gram(r1, r2)
-    return _batched(_combine_mod.combine_gram, 2)(r1, r2, interpret=interpret)
+def fused_apply_gram(a, w, *, use_pallas: bool = False,
+                     interpret: bool | None = None, want_q: bool = True):
+    """One tall-operand sweep: ``Q = A @ W`` and ``G' = QᵀQ`` together.
+
+    Returns ``(q, g)`` — or just ``g`` when ``want_q=False``, in which case
+    the applied panel never leaves VMEM (no tall HBM write at all).
+    """
+    if use_pallas:
+        out = _batched(_fused_mod.fused_apply_gram, 2)(
+            a, w, interpret=interpret, want_q=want_q
+        )
+    else:
+        q = _ref.apply_right(a, w)
+        g = _ref.gram(q)
+        out = (q, g) if want_q else g
+    g_out = out[1] if want_q else out
+    q_bytes = _nbytes(out[0]) if want_q else 0
+    _traffic.note("fused_apply_gram", sweeps=1,
+                  read_bytes=_nbytes(a) + _nbytes(w),
+                  write_bytes=q_bytes + _nbytes(g_out))
+    return out
+
+
+def combine_gram(r1, r2, *, use_pallas: bool = False,
+                 interpret: bool | None = None):
+    out = (
+        _batched(_combine_mod.combine_gram, 2)(r1, r2, interpret=interpret)
+        if use_pallas
+        else _ref.combine_gram(r1, r2)
+    )
+    _traffic.note("combine_gram", read_bytes=_nbytes(r1) + _nbytes(r2),
+                  write_bytes=_nbytes(out))
+    return out
 
 
 # -- composed ops -----------------------------------------------------------
 
 def tri_inv(r):
-    """Inverse of an upper-triangular (…, n, n) factor."""
-    eye = jnp.broadcast_to(
-        jnp.eye(r.shape[-1], dtype=r.dtype), r.shape
-    )
-    return jsl.solve_triangular(r, eye, lower=False)
+    """Inverse of an upper-triangular (…, n, n) factor.
+
+    Solves against the single unbatched identity — no broadcast (…, n, n)
+    identity is ever materialized; batch dims are vmapped over ``r`` only.
+    Accumulation stays in ``r``'s (f32 in every CQR2 use) precision.
+    """
+    eye = jnp.eye(r.shape[-1], dtype=r.dtype)
+
+    def solve(rr):
+        return jsl.solve_triangular(rr, eye, lower=False)
+
+    for _ in range(r.ndim - 2):
+        solve = jax.vmap(solve)
+    return solve(r)
 
 
 def _posdiag(r):
@@ -84,18 +153,66 @@ def _posdiag(r):
     return r * s[..., :, None]
 
 
-def cholesky_qr(a, *, use_pallas: bool = False, interpret: bool = True):
+def _chol_upper(g):
+    """Upper-triangular Cholesky factor of a Gram matrix (positive diag)."""
+    return jnp.swapaxes(jnp.linalg.cholesky(g), -1, -2)
+
+
+def cholesky_qr(a, *, use_pallas: bool = False, interpret: bool | None = None):
     """One CholeskyQR round.  a: (…, m, n) → (Q (…, m, n), R (…, n, n) f32)."""
     g = gram(a, use_pallas=use_pallas, interpret=interpret)
-    r = jnp.swapaxes(jnp.linalg.cholesky(g), -1, -2)  # upper, positive diag
+    r = _chol_upper(g)
     q = apply_right(
         a, tri_inv(r).astype(a.dtype), use_pallas=use_pallas, interpret=interpret
     )
     return q, r
 
 
-def cholesky_qr2(a, *, use_pallas: bool = False, interpret: bool = True):
-    """CholeskyQR2: Householder-grade orthogonality, MXU-native FLOPs."""
-    q1, r1 = cholesky_qr(a, use_pallas=use_pallas, interpret=interpret)
-    q, r2 = cholesky_qr(q1, use_pallas=use_pallas, interpret=interpret)
+def cholesky_qr2(a, *, use_pallas: bool = False, interpret: bool | None = None,
+                 fused: bool = True):
+    """CholeskyQR2: Householder-grade orthogonality, MXU-native FLOPs.
+
+    ``fused=True`` (default) rides :func:`fused_apply_gram`: round 1's panel
+    apply accumulates round 2's Gram in the same sweep — 3 tall-operand
+    sweeps (A, A, Q₁) instead of the unfused 4 (A, A, Q₁, Q₁).
+    ``fused=False`` keeps the seed's two independent rounds (the bench
+    baseline and the property-test reference).
+    """
+    if not fused:
+        q1, r1 = cholesky_qr(a, use_pallas=use_pallas, interpret=interpret)
+        q, r2 = cholesky_qr(q1, use_pallas=use_pallas, interpret=interpret)
+        return q, _posdiag(r2 @ r1)
+    g1 = gram(a, use_pallas=use_pallas, interpret=interpret)       # sweep 1
+    r1 = _chol_upper(g1)
+    q1, g2 = fused_apply_gram(                                     # sweep 2
+        a, tri_inv(r1).astype(a.dtype),
+        use_pallas=use_pallas, interpret=interpret,
+    )
+    r2 = _chol_upper(g2)
+    q = apply_right(                                               # sweep 3
+        q1, tri_inv(r2).astype(a.dtype),
+        use_pallas=use_pallas, interpret=interpret,
+    )
     return q, _posdiag(r2 @ r1)
+
+
+def cholesky_qr2_r(a, *, use_pallas: bool = False,
+                   interpret: bool | None = None):
+    """CholeskyQR2, R factor only — **2 HBM sweeps** over the tall operand.
+
+    This is the TSQR local QR (``QRCombiner.prepare``): the butterfly only
+    carries R, so Q₁ is never needed.  Sweep 1 is the Gram of A; sweep 2 is
+    :func:`fused_apply_gram` with ``want_q=False`` — the applied panel is
+    consumed in VMEM for round 2's Gram and no tall intermediate touches
+    HBM.  Bit-identical to ``cholesky_qr2(a)[1]`` (same panel boundaries,
+    same cast points); the seed computed the full 4-sweep factorization and
+    discarded Q.
+    """
+    g1 = gram(a, use_pallas=use_pallas, interpret=interpret)       # sweep 1
+    r1 = _chol_upper(g1)
+    g2 = fused_apply_gram(                                         # sweep 2
+        a, tri_inv(r1).astype(a.dtype),
+        use_pallas=use_pallas, interpret=interpret, want_q=False,
+    )
+    r2 = _chol_upper(g2)
+    return _posdiag(r2 @ r1)

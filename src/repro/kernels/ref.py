@@ -7,7 +7,14 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["gram", "apply_right", "combine_gram", "cholesky_qr", "cholesky_qr2"]
+__all__ = [
+    "gram",
+    "apply_right",
+    "fused_apply_gram",
+    "combine_gram",
+    "cholesky_qr",
+    "cholesky_qr2",
+]
 
 
 def gram(a: jnp.ndarray) -> jnp.ndarray:
@@ -20,6 +27,15 @@ def apply_right(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """A @ W with float32 accumulation, result in A's dtype.  w: (..., n, k)."""
     out = a.astype(jnp.float32) @ w.astype(jnp.float32)
     return out.astype(a.dtype)
+
+
+def fused_apply_gram(
+    a: jnp.ndarray, w: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the fused kernel: Q = A @ W and G' = QᵀQ of the *stored*
+    (cast) Q — the rounding a materialized panel would carry."""
+    q = apply_right(a, w)
+    return q, gram(q)
 
 
 def combine_gram(r1: jnp.ndarray, r2: jnp.ndarray) -> jnp.ndarray:

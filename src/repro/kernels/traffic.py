@@ -1,0 +1,92 @@
+"""Trace-time HBM traffic model for the CQR2 kernel pipeline.
+
+The fused-pipeline claim of DESIGN.md §Kernels — CholeskyQR2's R factor in
+**2** HBM sweeps over the tall operand instead of the seed's 4 — is gated
+as a hard benchmark metric (``repro.bench.cases.kernels``), so it needs a
+measurement, not an assertion-by-construction.  Because every kernel's
+routing is static (shapes known at trace time, one ``pallas_call`` per
+streamed sweep), the public wrappers in :mod:`repro.kernels.ops` can report
+their exact traffic as they are called: each wrapper notes the bytes it
+streams from/to HBM and whether the call is a *sweep* over a tall operand
+(the (m, n) panel stream; the n×n Cholesky/inverse work is not).
+
+Usage::
+
+    with track_traffic() as t:
+        ops.cholesky_qr2_r(a, use_pallas=True)
+    assert t.tall_sweeps == 2
+
+Counting happens at Python call time in the ``ops`` wrappers (outside any
+``jit``), so call the pipeline un-jitted when measuring; the model is the
+same traffic a compiled TPU execution commits to, since the block streaming
+is fixed by the BlockSpecs.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+__all__ = ["KernelTraffic", "note", "track_traffic"]
+
+
+@dataclasses.dataclass
+class KernelTraffic:
+    """Accumulated per-op HBM traffic records."""
+
+    records: list[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def tall_sweeps(self) -> int:
+        """Number of HBM sweeps over a tall (panel-streamed) operand."""
+        return sum(r["sweeps"] for r in self.records)
+
+    @property
+    def read_bytes(self) -> int:
+        return sum(r["read_bytes"] for r in self.records)
+
+    @property
+    def write_bytes(self) -> int:
+        return sum(r["write_bytes"] for r in self.records)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.read_bytes + self.write_bytes
+
+    def as_dict(self) -> dict:
+        return {
+            "tall_sweeps": self.tall_sweeps,
+            "read_bytes": self.read_bytes,
+            "write_bytes": self.write_bytes,
+            "ops": [r["op"] for r in self.records],
+        }
+
+
+_ACTIVE: list[KernelTraffic] = []
+
+
+def note(op: str, *, sweeps: int = 0, read_bytes: int = 0,
+         write_bytes: int = 0) -> None:
+    """Record one kernel invocation into every active tracker (no-op when
+    nothing is tracking — the hot path pays one list check)."""
+    if not _ACTIVE:
+        return
+    rec = {
+        "op": op,
+        "sweeps": int(sweeps),
+        "read_bytes": int(read_bytes),
+        "write_bytes": int(write_bytes),
+    }
+    for t in _ACTIVE:
+        t.records.append(rec)
+
+
+@contextlib.contextmanager
+def track_traffic():
+    """Context manager yielding a :class:`KernelTraffic` that observes every
+    ``ops``-level kernel call made inside the block."""
+    t = KernelTraffic()
+    _ACTIVE.append(t)
+    try:
+        yield t
+    finally:
+        _ACTIVE.remove(t)

@@ -20,9 +20,12 @@ def test_registered_cases_cover_migrated_benchmarks():
     assert {
         "robustness", "comm_volume", "semantics", "tsqr_scaling",
         "tsqr_local_qr", "powersgd", "roofline", "fault_scenarios",
+        "kernels",
     } <= names
     smoke = {c.name for c in cases_for("smoke")}
-    assert {"robustness", "comm_volume", "semantics", "fault_scenarios"} <= smoke
+    assert {
+        "robustness", "comm_volume", "semantics", "fault_scenarios", "kernels",
+    } <= smoke
 
 
 def test_registry_tier_filter_and_duplicates():
@@ -269,13 +272,24 @@ def test_instrumented_comm_matches_plan_accounting():
     x = jnp.asarray(
         np.random.default_rng(0).normal(size=(8, n, n)).astype(np.float32)
     )
+    from repro.collective import plan_is_fault_free
+
     for variant in ("tree", "redundant", "replace", "selfhealing"):
         plan = make_plan(variant, 8)
         ic = InstrumentedComm(SimComm(8))
         execute_plan(x, ic, plan, "sum")
         assert ic.stats.messages == plan.message_count(), variant
         assert ic.stats.rounds == plan.round_count(), variant
-        # payload + 1 validity byte per message
+        if plan_is_fault_free(plan):
+            # fast path: payload only, validity is host-proven
+            assert ic.stats.payload_bytes == plan.bytes_on_wire(n, 4), variant
+        else:
+            # general path (tree): payload + 1 validity byte per message
+            assert ic.stats.payload_bytes == \
+                plan.bytes_on_wire(n, 4) + plan.message_count(), variant
+        # the forced general executor always ships the validity bit
+        ic = InstrumentedComm(SimComm(8))
+        execute_plan(x, ic, plan, "sum", fast=False)
         assert ic.stats.payload_bytes == \
             plan.bytes_on_wire(n, 4) + plan.message_count(), variant
     # faulted selfhealing: restore transfers are counted too

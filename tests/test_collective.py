@@ -134,6 +134,65 @@ def test_qr_combiner_matches_oracle(rng):
 
 
 # ---------------------------------------------------------------------------
+# fault-free fast path: bit-identical to the general executor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", ["sum", "mean", "max", "gram_sum", "qr"])
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_fast_path_bit_identical_fault_free(rng, op, variant):
+    if op == "qr":
+        x = jnp.asarray(ref.random_tall_skinny(rng, 8, 12, 4).astype(np.float32))
+    elif op == "gram_sum":
+        base = jnp.asarray(rng.normal(size=(8, 6, 5)).astype(np.float32))
+        x = jnp.einsum("pmi,pmj->pij", base, base)   # symmetric: packed wire
+    else:
+        x = jnp.asarray(rng.normal(size=(8, 4, 5)).astype(np.float32))
+    plan = make_plan(variant, 8)
+    v_fast, ok_fast = execute_plan(x, SimComm(8), plan, op)
+    v_gen, ok_gen = execute_plan(x, SimComm(8), plan, op, fast=False)
+    assert np.array_equal(np.asarray(ok_fast), np.asarray(ok_gen))
+    assert np.array_equal(np.asarray(v_fast), np.asarray(v_gen),
+                          equal_nan=True), (variant, op)
+
+
+def test_fast_path_eligibility_and_forcing():
+    from repro.collective import plan_is_fault_free
+
+    assert plan_is_fault_free(make_plan("redundant", 8))
+    assert plan_is_fault_free(make_plan("replace", 8))
+    assert plan_is_fault_free(make_plan("selfhealing", 8))
+    # tree's senders go invalid by design → not fault-free
+    assert not plan_is_fault_free(make_plan("tree", 8))
+    faulty = make_plan("redundant", 8, FaultSpec.of({5: 1}))
+    assert not plan_is_fault_free(faulty)
+    with pytest.raises(ValueError, match="fast=True"):
+        execute_plan(jnp.zeros((8, 2, 2)), SimComm(8), faulty, "sum", fast=True)
+
+
+def test_fast_path_wire_skips_validity_and_packs_gram(rng):
+    """Observed wire bytes: the fast path ships the payload alone, and
+    symmetric gram payloads ship the n(n+1)/2 triangle — exactly what
+    Plan.bytes_on_wire prices."""
+    from repro.collective import InstrumentedComm
+
+    n = 6
+    base = jnp.asarray(rng.normal(size=(8, 4, n)).astype(np.float32))
+    g = jnp.einsum("pmi,pmj->pij", base, base)
+    plan = make_plan("redundant", 8)
+    ic = InstrumentedComm(SimComm(8))
+    execute_plan(g, ic, plan, "gram_sum")
+    assert ic.stats.payload_bytes == plan.bytes_on_wire(n, 4, symmetric=True)
+    ic = InstrumentedComm(SimComm(8))
+    execute_plan(g, ic, plan, "sum")          # not wire_symmetric → square
+    assert ic.stats.payload_bytes == plan.bytes_on_wire(n, 4)
+    # general path adds exactly one validity byte per message
+    ic = InstrumentedComm(SimComm(8))
+    execute_plan(g, ic, plan, "gram_sum", fast=False)
+    assert ic.stats.payload_bytes == \
+        plan.bytes_on_wire(n, 4, symmetric=True) + plan.message_count()
+
+
+# ---------------------------------------------------------------------------
 # pytree payloads (the trainer's gradient-tree path)
 # ---------------------------------------------------------------------------
 

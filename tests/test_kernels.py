@@ -39,6 +39,37 @@ def test_apply_right_matches_ref(rng, m, n, dt):
     )
 
 
+@pytest.mark.parametrize("m,n", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_fused_apply_gram_matches_ref(rng, m, n, dt):
+    a = jnp.asarray(rng.standard_normal((m, n)), dtype=dt)
+    w = jnp.asarray(rng.standard_normal((n, n)), dtype=dt)
+    q, g = ops.fused_apply_gram(a, w, use_pallas=True)
+    q_ref, g_ref = ref.fused_apply_gram(a, w)
+    assert q.dtype == a.dtype and g.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(q, np.float32), np.asarray(q_ref, np.float32), **_tol(dt)
+    )
+    # blocked Gram accumulation reorders sums and bf16 squares grow large
+    gt = dict(rtol=5e-2, atol=5e-1) if dt == jnp.bfloat16 else _tol(dt)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), **gt)
+    # want_q=False consumes the panel in VMEM; the Gram must be identical
+    g_only = ops.fused_apply_gram(a, w, use_pallas=True, want_q=False)
+    assert np.array_equal(np.asarray(g_only), np.asarray(g))
+
+
+def test_fused_apply_gram_bit_matches_unfused_kernels(rng):
+    """The fused sweep takes the Gram of the *cast* panel with the same
+    panel boundaries, so it must reproduce gram(apply_right(A, W)) exactly."""
+    a = jnp.asarray(rng.standard_normal((1500, 40)), dtype=jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((40, 40)), dtype=jnp.bfloat16)
+    q, g = ops.fused_apply_gram(a, w, use_pallas=True)
+    q_u = ops.apply_right(a, w, use_pallas=True)
+    g_u = ops.gram(q_u, use_pallas=True)
+    assert np.array_equal(np.asarray(q, np.float32), np.asarray(q_u, np.float32))
+    assert np.array_equal(np.asarray(g), np.asarray(g_u))
+
+
 @pytest.mark.parametrize("n", [3, 16, 129, 256])
 def test_combine_gram_matches_ref(rng, n):
     r1 = jnp.asarray(np.triu(rng.standard_normal((n, n))), dtype=jnp.float32)
@@ -93,3 +124,88 @@ def test_tri_inv(rng):
     )
     inv = ops.tri_inv(r)
     np.testing.assert_allclose(np.asarray(r @ inv), np.eye(24), atol=1e-5)
+
+
+def test_tri_inv_batched_no_broadcast_identity(rng):
+    """Batched factors solve against the single unbatched eye (vmapped)."""
+    r = jnp.asarray(
+        np.triu(rng.standard_normal((3, 2, 24, 24))) + 8 * np.eye(24),
+        jnp.float32,
+    )
+    inv = ops.tri_inv(r)
+    assert inv.shape == r.shape
+    np.testing.assert_allclose(
+        np.asarray(r @ inv),
+        np.broadcast_to(np.eye(24), r.shape),
+        atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused pipeline: sweep counts and R-only equivalence
+# ---------------------------------------------------------------------------
+
+def test_cholesky_qr2_r_matches_full_and_unfused(rng):
+    a = jnp.asarray(rng.standard_normal((1000, 32)), dtype=jnp.float32)
+    for pallas in (False, True):
+        r_only = ops.cholesky_qr2_r(a, use_pallas=pallas)
+        _, r_full = ops.cholesky_qr2(a, use_pallas=pallas)
+        _, r_unfused = ops.cholesky_qr2(a, use_pallas=pallas, fused=False)
+        assert np.array_equal(np.asarray(r_only), np.asarray(r_full)), pallas
+        assert np.array_equal(np.asarray(r_only), np.asarray(r_unfused)), pallas
+
+
+def test_traffic_model_sweep_counts(rng):
+    from repro.kernels import traffic
+
+    a = jnp.asarray(rng.standard_normal((2048, 32)), dtype=jnp.float32)
+    with traffic.track_traffic() as t_fused:
+        ops.cholesky_qr2_r(a, use_pallas=True)
+    with traffic.track_traffic() as t_unfused:
+        ops.cholesky_qr2(a, use_pallas=True, fused=False)
+    assert t_fused.tall_sweeps == 2
+    assert t_unfused.tall_sweeps == 4
+    panel = 2048 * 32 * 4
+    assert t_fused.read_bytes == 2 * panel + 32 * 32 * 4   # A twice + W once
+    assert t_unfused.read_bytes > 4 * panel                # A, A, Q1, Q1 (+Ws)
+    # R-only never writes a tall intermediate: only the two (n, n) Grams
+    assert t_fused.write_bytes == 2 * 32 * 32 * 4
+    assert t_unfused.write_bytes == 2 * panel + 2 * 32 * 32 * 4
+    # nothing records outside a tracking block
+    ops.gram(a, use_pallas=True)
+    assert t_fused.tall_sweeps == 2
+
+
+# ---------------------------------------------------------------------------
+# backend auto-detection: the resolved flag must reach pallas_call
+# ---------------------------------------------------------------------------
+
+def test_interpret_flag_reaches_pallas_call(rng, monkeypatch):
+    from jax.experimental import pallas as pl
+
+    from repro.kernels import apply_right as apply_mod
+    from repro.kernels import backend, fused_apply_gram as fused_mod
+    from repro.kernels import gram as gram_mod
+
+    captured = []
+    real = pl.pallas_call
+
+    def spy(*args, **kw):
+        captured.append(kw.get("interpret"))
+        kw["interpret"] = True          # CPU cannot compile Mosaic
+        return real(*args, **kw)
+
+    for mod in (gram_mod, apply_mod, fused_mod):
+        monkeypatch.setattr(mod.pl, "pallas_call", spy, raising=True)
+
+    # unique shapes so jit can't replay a cached trace from earlier tests
+    a = jnp.asarray(rng.standard_normal((333, 11)), dtype=jnp.float32)
+    w = jnp.asarray(rng.standard_normal((11, 11)), dtype=jnp.float32)
+
+    ops.gram(a, use_pallas=True, interpret=False)
+    assert captured[-1] is False        # explicit override wins
+    ops.apply_right(a, w, use_pallas=True, interpret=True)
+    assert captured[-1] is True
+    ops.fused_apply_gram(a, w, use_pallas=True)          # auto-detect
+    assert captured[-1] is backend.default_interpret()
+    assert backend.default_interpret() is True           # CPU container

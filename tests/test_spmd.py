@@ -208,6 +208,28 @@ def test_ft_allreduce_under_shard_map():
         assert within_tolerance(variant, fs, 3)
         for op in ("sum", "mean", "max", "gram_sum"):
             run(op, fs, variant)
+
+    # fault-free fast path: bit-identical (value, valid) to the general
+    # executor for every variant on the SPMD backend (symmetric payloads so
+    # gram_sum exercises the packed wire)
+    from repro.collective import execute_plan, plan_is_fault_free
+    sym = jnp.einsum("pmi,pmj->pij", x, x)
+    tall = jnp.asarray(rng.normal(size=(p, 12, 4)).astype(np.float32))
+    for op in ("sum", "max", "gram_sum", "qr"):
+        payload = tall if op == "qr" else sym
+        for variant in ("tree", "redundant", "replace", "selfhealing"):
+            plan = make_plan(variant, p)
+            def body(blk):
+                va, oa = execute_plan(blk[0], comm, plan, op)
+                vg, og = execute_plan(blk[0], comm, plan, op, fast=False)
+                return va[None], oa[None], vg[None], og[None]
+            f = jax.jit(shard_map(body, mesh=mesh, in_specs=P("rows"),
+                                  out_specs=(P("rows"),) * 4))
+            va, oa, vg, og = f(payload)
+            assert np.array_equal(np.asarray(oa), np.asarray(og)), (op, variant)
+            assert np.array_equal(np.asarray(va), np.asarray(vg),
+                                  equal_nan=True), (op, variant)
+            assert plan_is_fault_free(plan) == (variant != "tree")
     print("SPMD ft_allreduce OK")
     """)
 
