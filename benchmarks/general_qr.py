@@ -1,0 +1,9 @@
+"""Thin shim — logic lives in :mod:`repro.bench.cases.general_qr` and is
+registered as the ``general_qr`` bench case (``python -m repro.bench run``),
+hard-gating the blocked-QR 1-trailing-sweep-per-panel HBM claim and the
+per-variant survival guarantees.  Run with ``PYTHONPATH=src`` for the
+standalone CSV."""
+from repro.bench.cases.general_qr import case, main, run  # noqa: F401
+
+if __name__ == "__main__":
+    main()

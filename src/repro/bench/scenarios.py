@@ -21,11 +21,20 @@ metrics.  Two scenario kinds:
   ``fault_stats`` counters.  Needs enough (simulated) devices — the bench
   CLI forces 8 host devices; under-provisioned environments skip.
 
-The stock :data:`SCENARIOS` sweep covers the four scenario families the
+* :class:`BlockedQRScenario` — a :class:`~repro.qr.blocked.
+  PanelFaultSchedule` driven through the general-matrix blocked QR
+  (:mod:`repro.qr.blocked`): deaths during a panel's TSQR reduction or its
+  trailing-update (W) butterfly, evaluated per panel against the variant's
+  guarantee, with the one-trailing-sweep-per-panel HBM model measured
+  through :mod:`repro.kernels.traffic`.
+
+The stock :data:`SCENARIOS` sweep covers the scenario families the
 single-round Monte-Carlo misses: **correlated** block wipes, **cascading**
 step-after-step failures, **fail-during-rebuild** (a second failure while
-the first rollback is still replaying), and **BLANK-under-repeat**
-(masking + mid-reduce faults across repeated reductions).
+the first rollback is still replaying), **BLANK-under-repeat** (masking +
+mid-reduce faults across repeated reductions), and the per-panel blocked-QR
+families (**death during panel k**, **death during the trailing update**,
+**cascading panels**).
 """
 from __future__ import annotations
 
@@ -39,11 +48,13 @@ from repro.bench.registry import BenchFailure, SkipCase, bench_case
 from repro.bench.schema import Metric
 
 __all__ = [
+    "BlockedQRScenario",
     "CollectiveScenario",
     "ReduceRound",
     "TrainerScenario",
     "case",
     "get_scenarios",
+    "run_blocked_qr_scenario",
     "run_collective_scenario",
     "run_scenario",
     "run_trainer_scenario",
@@ -88,6 +99,28 @@ class TrainerScenario:
     description: str = ""
 
     kind = "trainer"
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedQRScenario:
+    """Deaths scheduled into a general-matrix blocked QR.
+
+    ``panel_deaths`` / ``update_deaths`` map panel index →
+    ``((rank, butterfly_step), …)`` for that panel's TSQR reduction (phase
+    1) resp. its trailing-update W butterfly (phase 3).
+    """
+
+    name: str
+    p: int
+    variant: str
+    m_local: int = 64
+    n: int = 24
+    panel_width: int = 8
+    panel_deaths: tuple[tuple[int, tuple[tuple[int, int], ...]], ...] = ()
+    update_deaths: tuple[tuple[int, tuple[tuple[int, int], ...]], ...] = ()
+    description: str = ""
+
+    kind = "blocked"
 
 
 # ---------------------------------------------------------------------------
@@ -149,6 +182,76 @@ def run_collective_scenario(sc: CollectiveScenario, seed: int = 0) -> dict:
         comm.stats.payload_bytes, gate="hard", direction="exact", unit="B"
     )
     return metrics
+
+
+def run_blocked_qr_scenario(sc: BlockedQRScenario, seed: int = 0) -> dict:
+    """Run the blocked QR under the death schedule; metric dict.
+
+    Hard-gates: survivors match the host prediction, every strict
+    survivor's R equals the dense oracle whenever the schedule is within
+    the variant's per-panel tolerance, and the trailing block is swept
+    exactly once per panel (the fused-pipeline HBM claim).
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import traffic
+    from repro.qr import PanelFaultSchedule, blocked_qr_sim
+
+    rng = np.random.default_rng(seed)
+    blocks = rng.standard_normal((sc.p, sc.m_local, sc.n)).astype(np.float32)
+    sched = PanelFaultSchedule.of(
+        panel={k: dict(deaths) for k, deaths in sc.panel_deaths},
+        update={k: dict(deaths) for k, deaths in sc.update_deaths},
+    )
+    with traffic.track_traffic() as t:
+        res = blocked_qr_sim(
+            jnp.asarray(blocks), panel_width=sc.panel_width,
+            variant=sc.variant, faults=sched,
+        )
+    in_tol = all(rep.within_tolerance for rep in res.reports)
+    valid = np.asarray(res.valid)
+    expect = np.ones(sc.p, dtype=bool)
+    for rep in res.reports:
+        expect &= rep.plan_r.final_valid
+        if rep.plan_w is not None:
+            expect &= rep.plan_w.final_valid
+    from repro.core import ref
+
+    truth = ref.qr_r(blocks.reshape(-1, sc.n).astype(np.float64))
+    scale = max(1.0, np.abs(truth).max())
+    holders = np.flatnonzero(valid)
+    match = bool(holders.size) and all(
+        np.abs(np.asarray(res.r)[r] - truth).max() / scale < 5e-4
+        for r in holders
+    )
+    if in_tol and not match:
+        raise BenchFailure(
+            f"scenario {sc.name}: within-tolerance schedule but survivor R "
+            "does not match the dense QR"
+        )
+    sweeps = t.sweeps_of("panel_cross", "trailing_update")
+    if sweeps != res.n_panels:
+        raise BenchFailure(
+            f"scenario {sc.name}: {sweeps} trailing-block sweeps for "
+            f"{res.n_panels} panels — the 1-sweep-per-panel claim failed"
+        )
+    return {
+        "survivors": Metric(int(valid.sum()), gate="hard", direction="exact"),
+        "survivors_match_plan": Metric(
+            bool((valid == expect).all()), gate="hard", direction="exact"
+        ),
+        "within_tolerance": Metric(in_tol, gate="hard", direction="exact"),
+        "values_match": Metric(match, gate="hard", direction="exact"),
+        "recovered": Metric(
+            sum(rep.recovered_r + rep.recovered_w for rep in res.reports),
+            gate="hard", direction="exact",
+        ),
+        "n_panels": Metric(res.n_panels, gate="hard", direction="exact"),
+        "trailing_sweeps": Metric(sweeps, gate="hard", direction="exact"),
+        "sweeps_per_panel": Metric(
+            sweeps / res.n_panels, gate="hard", direction="exact"
+        ),
+    }
 
 
 def run_trainer_scenario(sc: TrainerScenario, ckpt_dir: str | None = None) -> dict:
@@ -217,6 +320,8 @@ def run_trainer_scenario(sc: TrainerScenario, ckpt_dir: str | None = None) -> di
 def run_scenario(sc, **kw) -> dict:
     if sc.kind == "collective":
         return run_collective_scenario(sc, **kw)
+    if sc.kind == "blocked":
+        return run_blocked_qr_scenario(sc, **kw)
     return run_trainer_scenario(sc, **kw)
 
 
@@ -285,6 +390,38 @@ def _stock_scenarios() -> tuple:
             description="replicas 0 and 1 (level-1 buddies) die together; "
                         "first recovers diskless, second needs the disk",
         ),
+        # Blocked QR, death during panel k: two ranks die inside panel 1's
+        # TSQR butterfly; Replace reroutes to replicas within the cumulative
+        # 2^s−1 budget and the panel's R stays exact on every survivor.
+        BlockedQRScenario(
+            name="panel_death_midsweep", p=8, variant="replace",
+            m_local=48, n=20, panel_width=6,
+            panel_deaths=((1, ((3, 1), (6, 2))),),
+            description="ranks 3 and 6 die at exchanges 1 and 2 of panel 1's "
+                        "TSQR; replace reroutes, R exact on all 6 survivors",
+        ),
+        # Blocked QR, death during the trailing update: the W butterfly of
+        # panel 0 loses a rank; the redundant variant's coset goes invalid
+        # but survivors hold the exact block row, and the dead rank's W is
+        # restored from a replica so later panels stay clean.
+        BlockedQRScenario(
+            name="death_during_trailing_update", p=8, variant="redundant",
+            m_local=48, n=20, panel_width=6,
+            update_deaths=((0, ((5, 1),)),),
+            description="rank 5 dies during panel 0's trailing-update "
+                        "reduction; its step-1 coset invalidates, replica "
+                        "fetch re-arms the pipeline",
+        ),
+        # Blocked QR, cascading panels: a fresh death in each of the first
+        # three panels; self-healing respawns within every butterfly so all
+        # ranks stay valid through the whole factorization.
+        BlockedQRScenario(
+            name="cascading_panels", p=8, variant="selfhealing",
+            m_local=48, n=20, panel_width=6,
+            panel_deaths=((0, ((1, 1),)), (1, ((6, 2),)), (2, ((3, 1),))),
+            description="one death per panel across panels 0-2, each within "
+                        "the per-step budget; selfhealing keeps all 8 valid",
+        ),
         # SHRINK then REBUILD: elastic round trip through the mesh layer.
         TrainerScenario(
             name="shrink_then_rebuild", on_failure="shrink",
@@ -317,7 +454,11 @@ def case(include_trainer: bool = True, seed: int = 0):
         if sc.kind == "trainer" and not include_trainer:
             continue
         try:
-            sub = run_scenario(sc, **({"seed": seed} if sc.kind == "collective" else {}))
+            sub = run_scenario(
+                sc,
+                **({"seed": seed} if sc.kind in ("collective", "blocked")
+                   else {}),
+            )
         except SkipCase as e:       # too few devices; real errors propagate
             metrics[f"{sc.name}.skipped"] = Metric(
                 True, gate="warn", direction="exact"

@@ -36,7 +36,7 @@ from .combiners import (
     qr_r,
 )
 from .comm import Comm, ShardMapComm, SimComm
-from .engine import execute_plan, ft_allreduce, plan_is_fault_free
+from .engine import execute_plan, ft_allreduce, plan_is_fault_free, replica_fetch
 from .faults import NEVER, FaultSpec, tolerance, total_tolerance, within_tolerance
 from .instrument import CommStats, InstrumentedComm
 from .packing import pack_sym, unpack_sym
@@ -69,6 +69,7 @@ __all__ = [
     "payload_numel",
     "plan_is_fault_free",
     "posdiag",
+    "replica_fetch",
     "unpack_sym",
     "qr_r",
     "tolerance",

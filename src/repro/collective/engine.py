@@ -50,14 +50,16 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .combiners import Combiner, get_combiner
 from .comm import Comm
 from .faults import NEVER, FaultSpec
 from .packing import pack_sym, packable, unpack_sym
-from .plan import Plan, make_plan
+from .plan import Plan, _split_rounds, make_plan
 
-__all__ = ["execute_plan", "ft_allreduce", "plan_is_fault_free"]
+__all__ = ["execute_plan", "ft_allreduce", "plan_is_fault_free",
+           "replica_fetch"]
 
 
 def _poison(leaf):
@@ -191,6 +193,42 @@ def execute_plan(
             respawned = comm.take(step.respawned)
             d = jnp.where(respawned, jnp.asarray(NEVER, d.dtype), d)
     return val, valid
+
+
+def replica_fetch(x, comm: Comm, valid) -> object:
+    """Restore invalid ranks' payloads from replicas of the reduced value.
+
+    After a within-tolerance butterfly, every *valid* rank holds an
+    identical copy of the reduction — the redundant copies the paper buys
+    with the exchange.  This converts that data existence into recovery at
+    a step boundary: each invalid rank receives the value from a valid
+    donor (round-robin, decomposed into unique-source rounds exactly like
+    the Replace multicast).  ``valid`` is the *host-side* (P,) prediction
+    (``plan.final_valid``) — routing must be trace-time static, the same
+    step-boundary replanning contract as the plans themselves.
+
+    The blocked-QR driver uses this between panels: a rank that lost a
+    panel's R or W re-joins the pipeline instead of poisoning every later
+    panel's reduction.  Raises ``ValueError`` when no rank is valid —
+    the value is genuinely extinct and no routing can recover it.
+    """
+    valid = np.asarray(valid, dtype=bool)
+    if valid.all():
+        return x
+    if not valid.any():
+        raise ValueError("replica_fetch: no valid rank holds the value")
+    donors = np.flatnonzero(valid)
+    starved = np.flatnonzero(~valid)
+    pairs = [
+        (int(donors[i % len(donors)]), int(r)) for i, r in enumerate(starved)
+    ]
+    for rnd in _split_rounds(pairs):
+        got = np.zeros(valid.shape[0], dtype=bool)
+        got[[d for _, d in rnd]] = True
+        g = comm.take(got)
+        recv = comm.exchange(x, rnd)
+        x = jax.tree.map(lambda cur, rec: comm.bwhere(g, rec, cur), x, recv)
+    return x
 
 
 def ft_allreduce(

@@ -1,6 +1,17 @@
-"""Compatibility shim — the communication backends moved to
-:mod:`repro.collective.comm` when the fault-tolerant collective engine was
-extracted.  Import from :mod:`repro.collective` in new code."""
-from repro.collective.comm import Comm, ShardMapComm, SimComm
+"""DEPRECATED shim — the comm backends live in :mod:`repro.collective.comm`.
+
+Importing this module warns; it will be removed one release after the
+panel-pipeline extraction (DESIGN.md §8).  Import from
+:mod:`repro.collective` instead.
+"""
+import warnings
+
+from repro.collective.comm import Comm, ShardMapComm, SimComm  # noqa: F401
+
+warnings.warn(
+    "repro.core.comm is deprecated; import from repro.collective instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 __all__ = ["Comm", "SimComm", "ShardMapComm"]

@@ -1,12 +1,23 @@
-"""Compatibility shim — the fault model moved to
-:mod:`repro.collective.faults` when the fault-tolerant collective engine was
-extracted.  Import from :mod:`repro.collective` in new code."""
-from repro.collective.faults import (
+"""DEPRECATED shim — the fault model lives in :mod:`repro.collective.faults`.
+
+Importing this module warns; it will be removed one release after the
+panel-pipeline extraction (DESIGN.md §8).  Import from
+:mod:`repro.collective` instead.
+"""
+import warnings
+
+from repro.collective.faults import (  # noqa: F401
     NEVER,
     FaultSpec,
     tolerance,
     total_tolerance,
     within_tolerance,
+)
+
+warnings.warn(
+    "repro.core.faults is deprecated; import from repro.collective instead",
+    DeprecationWarning,
+    stacklevel=2,
 )
 
 __all__ = [

@@ -1,13 +1,24 @@
-"""Compatibility shim — communication plans moved to
-:mod:`repro.collective.plan` when the fault-tolerant collective engine was
-extracted.  Import from :mod:`repro.collective` in new code."""
-from repro.collective.plan import (
+"""DEPRECATED shim — communication plans live in :mod:`repro.collective.plan`.
+
+Importing this module warns; it will be removed one release after the
+panel-pipeline extraction (DESIGN.md §8).  Import from
+:mod:`repro.collective` instead.
+"""
+import warnings
+
+from repro.collective.plan import (  # noqa: F401
     VARIANTS,
     Plan,
     Step,
     ilog2,
     make_plan,
     payload_numel,
+)
+
+warnings.warn(
+    "repro.core.plan is deprecated; import from repro.collective instead",
+    DeprecationWarning,
+    stacklevel=2,
 )
 
 __all__ = ["Step", "Plan", "make_plan", "ilog2", "payload_numel", "VARIANTS"]

@@ -1,55 +1,28 @@
-"""Fault-tolerant, communication-avoiding TSQR (Coti 2015) in JAX.
+"""Back-compat facade — the TSQR implementation moved to :mod:`repro.qr`
+when the panel-pipeline layer was extracted (DESIGN.md §8).
 
-This module is now a thin instantiation of the generic collective engine
-(:mod:`repro.collective`) with the QR combiner: the plan/route/validity
-machinery, the butterfly executor, and the self-healing restore rounds all
-live in :func:`repro.collective.engine.execute_plan`; this file contributes
-only what is QR-specific — the local panel factorizations, the
-``Q = A·R⁻¹`` formation, and the entry-point plumbing.
-
-The four variants of the paper are driven by a host-computed
-:class:`~repro.collective.plan.Plan` and execute identically on the
-:class:`~repro.collective.comm.SimComm` (single device, leading (P,) axis)
-and :class:`~repro.collective.comm.ShardMapComm` (SPMD, ``lax.ppermute``)
-backends:
-
-  * ``tree``        — Alg. 1, the baseline reduction tree (zero redundancy);
-  * ``redundant``   — Alg. 2, butterfly *exchange*: both buddies combine, so
-                      every intermediate R̃ exists in ``2^s`` copies;
-  * ``replace``     — Alg. 3, identical fault-free, reroutes to a replica of
-                      a dead buddy;
-  * ``selfhealing`` — Alg. 4–6, additionally respawns dead ranks from a
-                      replica at every level.
-
-The combine is ``QR([R_lo; R_hi])`` ordered by the level bit of the *block*
-index so every member of a block computes an identical R (making the
-butterfly a true all-reduce — every survivor ends with the same final R,
-which the paper's semantics require and which lets Q be formed locally as
-``A R⁻¹`` without a backward tree pass).  The CholeskyQR reorthogonalization
-inside :func:`form_q` reduces its Gram matrices with
-:func:`~repro.collective.engine.ft_allreduce` (``gram_sum`` combiner — the
-symmetric payload ships packed) over the same butterfly.
-
-Hot-path notes (DESIGN.md §7): fault-free plans ride the engine's
-straight-line fast path automatically, and the CQR2 local QRs use the
-fused 2-sweep R-only pipeline (``cholesky_qr2_r``) — the butterfly only
-carries R, so no tall intermediate is ever materialized.
+The panel-local machinery (local QR fns, ``form_q``) now lives in
+:mod:`repro.qr.panel` as the engine-agnostic
+:class:`~repro.qr.panel.PanelFactorizer`, shared between the
+tall-and-skinny entry points (:mod:`repro.qr.tsqr`) and the blocked
+general-matrix driver (:mod:`repro.qr.blocked`).  Import from
+:mod:`repro.qr` in new code; everything this module ever exported is
+re-exported unchanged below.
 """
-from __future__ import annotations
-
-import dataclasses
-from typing import Callable
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.collective.combiners import QRCombiner, posdiag as _posdiag, qr_r
-from repro.collective.comm import Comm, ShardMapComm, SimComm
-from repro.collective.engine import execute_plan, ft_allreduce
-from repro.collective.faults import FaultSpec
-from repro.collective.plan import Plan, make_plan
-from repro.compat import shard_map
+from repro.qr.panel import (  # noqa: F401
+    form_q,
+    local_qr_fns,
+    qr_r_cqr2,
+    qr_r_cqr2_pallas,
+    qr_r_jnp,
+    resolve_local_qr as _resolve_local_qr,
+)
+from repro.qr.tsqr import (  # noqa: F401
+    TSQRResult,
+    tsqr_gram_shard_map,
+    tsqr_shard_map,
+    tsqr_sim,
+)
 
 __all__ = [
     "TSQRResult",
@@ -59,232 +32,3 @@ __all__ = [
     "form_q",
     "local_qr_fns",
 ]
-
-
-# ---------------------------------------------------------------------------
-# Local QR building blocks
-# ---------------------------------------------------------------------------
-
-def qr_r_jnp(a):
-    """Householder QR, R factor only (LAPACK on CPU, QR-decomp HLO on TPU)."""
-    return qr_r(a)
-
-
-def qr_r_cqr2(a):
-    """CholeskyQR2 R factor — the MXU-native local QR (see kernels/).
-
-    Rides the fused 2-sweep R-only pipeline: the butterfly only carries R,
-    so no tall intermediate is ever materialized (the seed computed the full
-    4-sweep factorization and discarded Q).
-    """
-    from repro.kernels import ops as kops
-
-    return kops.cholesky_qr2_r(a)
-
-
-def qr_r_cqr2_pallas(a):
-    from repro.kernels import ops as kops
-
-    return kops.cholesky_qr2_r(a, use_pallas=True)
-
-
-local_qr_fns: dict[str, Callable] = {
-    "jnp": qr_r_jnp,
-    "cqr2": qr_r_cqr2,
-    "cqr2_pallas": qr_r_cqr2_pallas,
-}
-
-
-def _resolve_local_qr(local_qr: str | Callable) -> Callable:
-    return local_qr_fns[local_qr] if isinstance(local_qr, str) else local_qr
-
-
-# ---------------------------------------------------------------------------
-# Result container
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class TSQRResult:
-    """Per-rank outcome of a fault-tolerant TSQR.
-
-    ``r``      — (P, n, n) in sim / per-device (n, n) under shard_map.
-    ``valid``  — who holds a correct final R (the paper's semantics).
-    ``q``      — optional per-rank (m_local, n) orthonormal factor.
-    ``plan``   — the communication plan that was executed (accounting).
-    """
-
-    r: jax.Array
-    valid: jax.Array
-    q: jax.Array | None
-    plan: Plan
-
-
-# ---------------------------------------------------------------------------
-# Q formation (QR-specific; the reduction rides the generic engine)
-# ---------------------------------------------------------------------------
-
-def form_q(a_blocks, r, comm: Comm, reorth: int = 1):
-    """Q = A·R⁻¹ locally (every survivor holds the same final R), followed by
-    ``reorth`` CholeskyQR-style re-orthonormalization passes whose Gram
-    reduction rides the fault-tolerant butterfly (``gram_sum`` combiner).
-
-    Requires an all-valid plan (fault-free, or self-healing within
-    tolerance): Q spans *all* row-blocks, so a permanently-lost block makes
-    the global Q undefined.  Entry points enforce this on the host plan.
-    """
-    import jax.scipy.linalg as jsl
-
-    def solve_r(q_in, rr):
-        # q = a @ rr^{-1}  ==  solve rr^T y = a^T  (rr upper → rr^T lower)
-        y = jsl.solve_triangular(
-            jnp.swapaxes(rr, -1, -2), jnp.swapaxes(q_in, -1, -2), lower=True
-        )
-        return jnp.swapaxes(y, -1, -2)
-
-    q = solve_r(a_blocks, r)
-    for _ in range(reorth):
-        g = jnp.swapaxes(q, -1, -2) @ q
-        g_sum, _ = ft_allreduce(g, comm, op="gram_sum")
-        r2 = _posdiag(jnp.swapaxes(jnp.linalg.cholesky(g_sum), -1, -2))
-        q = solve_r(q, r2)
-        r = _posdiag(r2 @ r)
-    return q, r
-
-
-# ---------------------------------------------------------------------------
-# Public entry points
-# ---------------------------------------------------------------------------
-
-def tsqr_sim(
-    a_blocks,
-    *,
-    variant: str = "redundant",
-    fault_spec: FaultSpec | None = None,
-    compute_q: bool = False,
-    reorth: int = 1,
-    local_qr: str | Callable = "jnp",
-) -> TSQRResult:
-    """Single-device simulation: ``a_blocks`` is (P, m_local, n).
-
-    This is the backend the test-suite and the hypothesis robustness sweeps
-    drive; the algorithm body is shared with :func:`tsqr_shard_map`.
-    """
-    p = a_blocks.shape[0]
-    plan = make_plan(variant, p, fault_spec)
-    if compute_q and not plan.final_valid.all():
-        raise ValueError(
-            "compute_q requires an all-valid plan (fault-free, or "
-            "self-healing within tolerance); got final_valid="
-            f"{plan.final_valid}"
-        )
-    comm = SimComm(p)
-    combiner = QRCombiner(_resolve_local_qr(local_qr))
-    r, valid = execute_plan(a_blocks, comm, plan, combiner)
-    q = None
-    if compute_q:
-        q, r = form_q(a_blocks, r, comm, reorth)
-    return TSQRResult(r=r, valid=valid, q=q, plan=plan)
-
-
-def tsqr_gram_shard_map(
-    a_global,
-    *,
-    mesh,
-    axis: str,
-    reorth: int = 1,
-    jit: bool = True,
-):
-    """Beyond-paper optimized TSQR: the **Gram butterfly** (EXPERIMENTS.md
-    §Perf, cell C).
-
-    The paper's combine is ``QR([R̃ᵢ; R̃ⱼ])`` at every butterfly level —
-    log₂(P) Householder factorizations of 2n×n on the critical path, each
-    sequential and VPU-bound on TPU.  This variant keeps the *same
-    butterfly* (same exchanges, same 2^s-copy redundancy, same fault
-    semantics) but swaps the combiner to ``gram_sum``: it carries Gram
-    matrices ``G = Σ AᵢᵀAᵢ``, one Cholesky at the end, and a CholeskyQR2
-    polish for Householder-grade orthogonality.  Per level the combine is
-    an n×n add instead of an O(n³) QR; the local work is one MXU Gram
-    matmul instead of a Householder panel.  Wire bytes are n² per exchange
-    shipped square — n(n+1)/2 with symmetric packing, which
-    ``Plan.bytes_on_wire(symmetric=True)`` now prices (see
-    benchmarks/comm_volume.py).
-
-    Numerics: κ(A)² enters the Gram, so the polish round is mandatory;
-    certified for κ(A) ≲ 1/√ε like CQR2.
-    """
-    p = mesh.shape[axis]
-    comm = ShardMapComm(p, axis)
-
-    def body(a_blk):
-        a32 = a_blk.astype(jnp.float32)
-        g = jnp.einsum("mi,mj->ij", a32, a32)
-        g, _ = ft_allreduce(g, comm, op="gram_sum")
-        r = _posdiag(jnp.swapaxes(jnp.linalg.cholesky(g), -1, -2))
-        q, r = compute_q(a_blk, r, comm, reorth)
-        return r[None], q
-
-    shard = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=P(axis),
-        out_specs=(P(axis), P(axis)),
-    )
-    fun = jax.jit(shard) if jit else shard
-    r, q = fun(a_global)
-    return TSQRResult(r=r, valid=jnp.ones((p,), bool), q=q,
-                      plan=make_plan("redundant", p))
-
-
-def tsqr_shard_map(
-    a_global,
-    *,
-    mesh,
-    axis: str,
-    variant: str = "redundant",
-    fault_spec: FaultSpec | None = None,
-    compute_q: bool = False,
-    reorth: int = 1,
-    local_qr: str | Callable = "jnp",
-    jit: bool = True,
-):
-    """Production path: A (m, n) row-sharded over ``mesh`` axis ``axis``.
-
-    Returns ``(r, valid, q)`` with r (P, n, n) — one (replicated-if-valid)
-    copy per rank — valid (P,) and q (m, n) row-sharded (or None).
-
-    The permutation plan is host-computed from ``fault_spec``; on a real
-    fleet the runtime re-invokes this with a fresh plan after each health
-    change (step-boundary replanning, DESIGN.md §2).
-    """
-    p = mesh.shape[axis]
-    plan = make_plan(variant, p, fault_spec)
-    if compute_q and not plan.final_valid.all():
-        raise ValueError(
-            "compute_q requires an all-valid plan (fault-free, or "
-            "self-healing within tolerance)"
-        )
-    comm = ShardMapComm(p, axis)
-    combiner = QRCombiner(_resolve_local_qr(local_qr))
-    want_q = compute_q
-
-    def body(a_blk):
-        a = a_blk  # (m_local, n)
-        r, valid = execute_plan(a, comm, plan, combiner)
-        q = None
-        if want_q:
-            q, r = form_q(a, r, comm, reorth)
-        out_q = q if want_q else jnp.zeros((0, a.shape[-1]), a.dtype)
-        return r[None], valid[None], out_q
-
-    shard = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=P(axis),
-        out_specs=(P(axis), P(axis), P(axis)),
-    )
-    fun = jax.jit(shard) if jit else shard
-    r, valid, q = fun(a_global)
-    return TSQRResult(
-        r=r, valid=valid, q=(q if want_q else None), plan=plan
-    )

@@ -9,7 +9,10 @@ the MXU as CholeskyQR2 (DESIGN.md §2, adaptation #2).  Four kernels:
     next round's G' = QᵀQ accumulated in VMEM (optionally without writing Q
     at all) — the single-sweep-per-round CQR2 pipeline;
   * :mod:`repro.kernels.combine_gram`     — fused R̃ᵀR̃ + R̃ᵀR̃ combine for the
-    Gram-butterfly variant (§Perf).
+    Gram-butterfly variant (§Perf);
+  * :mod:`repro.kernels.trailing_update`  — blocked-QR trailing update
+    ``A − Q W`` in ONE trailing-block sweep, with the next panel's
+    cross-Gram accumulated in the same pass (DESIGN.md §8).
 
 Edge tiles are masked in-kernel (no ``jnp.pad`` HBM round-trips), and the
 execution mode auto-detects the backend (:mod:`repro.kernels.backend`):

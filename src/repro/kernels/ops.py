@@ -34,6 +34,7 @@ from . import fused_apply_gram as _fused_mod
 from . import gram as _gram_mod
 from . import ref as _ref
 from . import traffic as _traffic
+from . import trailing_update as _trailing_mod
 
 __all__ = [
     "gram",
@@ -44,6 +45,8 @@ __all__ = [
     "cholesky_qr2",
     "cholesky_qr2_r",
     "tri_inv",
+    "trailing_update",
+    "panel_cross",
 ]
 
 
@@ -124,6 +127,42 @@ def combine_gram(r1, r2, *, use_pallas: bool = False,
         else _ref.combine_gram(r1, r2)
     )
     _traffic.note("combine_gram", read_bytes=_nbytes(r1) + _nbytes(r2),
+                  write_bytes=_nbytes(out))
+    return out
+
+
+def trailing_update(a, q, w, *, next_width: int = 0, use_pallas: bool = False,
+                    interpret: bool | None = None):
+    """Blocked-QR trailing update ``A − Q W`` in **one** trailing-block
+    sweep, with the next panel's cross-Gram ``S`` accumulated in the same
+    pass when ``next_width > 0`` (see :mod:`repro.kernels.trailing_update`).
+
+    Returns ``a_new`` — or ``(a_new, s)`` when ``next_width > 0``.
+    """
+    if use_pallas:
+        out = _batched(_trailing_mod.trailing_update, 3)(
+            a, q, w, next_width=next_width, interpret=interpret
+        )
+    else:
+        out = _ref.trailing_update(a, q, w, next_width=next_width)
+    a_new = out[0] if next_width else out
+    s_bytes = _nbytes(out[1]) if next_width else 0
+    _traffic.note("trailing_update", sweeps=1,
+                  read_bytes=_nbytes(a) + _nbytes(q) + _nbytes(w),
+                  write_bytes=_nbytes(a_new) + s_bytes)
+    return out
+
+
+def panel_cross(a, *, split: int, use_pallas: bool = False,
+                interpret: bool | None = None):
+    """Pipeline prime for blocked QR: ``S = A[:, :split]ᵀ A`` in one sweep."""
+    out = (
+        _batched(_trailing_mod.panel_cross, 1)(a, split=split,
+                                               interpret=interpret)
+        if use_pallas
+        else _ref.panel_cross(a, split=split)
+    )
+    _traffic.note("panel_cross", sweeps=1, read_bytes=_nbytes(a),
                   write_bytes=_nbytes(out))
     return out
 

@@ -14,6 +14,8 @@ __all__ = [
     "combine_gram",
     "cholesky_qr",
     "cholesky_qr2",
+    "trailing_update",
+    "panel_cross",
 ]
 
 
@@ -36,6 +38,25 @@ def fused_apply_gram(
     (cast) Q — the rounding a materialized panel would carry."""
     q = apply_right(a, w)
     return q, gram(q)
+
+
+def trailing_update(
+    a: jnp.ndarray, q: jnp.ndarray, w: jnp.ndarray, *, next_width: int = 0
+):
+    """Oracle for the fused trailing update: ``A_new = A − Q W`` (f32 math,
+    stored in A's dtype) and, when ``next_width > 0``, the lookahead
+    ``S = A_new[:, :next_width]ᵀ A_new`` of the *stored* (cast) update."""
+    upd = q.astype(jnp.float32) @ w.astype(jnp.float32)
+    a_new = (a.astype(jnp.float32) - upd).astype(a.dtype)
+    if not next_width:
+        return a_new
+    return a_new, panel_cross(a_new, split=next_width)
+
+
+def panel_cross(a: jnp.ndarray, *, split: int) -> jnp.ndarray:
+    """S = A[:, :split]ᵀ A accumulated in float32.  a: (..., m, n)."""
+    a32 = a.astype(jnp.float32)
+    return jnp.einsum("...mi,...mj->...ij", a32[..., :split], a32)
 
 
 def combine_gram(r1: jnp.ndarray, r2: jnp.ndarray) -> jnp.ndarray:

@@ -40,6 +40,13 @@ class KernelTraffic:
         """Number of HBM sweeps over a tall (panel-streamed) operand."""
         return sum(r["sweeps"] for r in self.records)
 
+    def sweeps_of(self, *ops: str) -> int:
+        """Tall sweeps attributed to the named ops only — e.g. the blocked-QR
+        trailing-block accounting counts ``panel_cross`` + ``trailing_update``
+        and excludes the narrow panel-local factorization sweeps."""
+        wanted = set(ops)
+        return sum(r["sweeps"] for r in self.records if r["op"] in wanted)
+
     @property
     def read_bytes(self) -> int:
         return sum(r["read_bytes"] for r in self.records)

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.collective import Comm, FaultSpec, QRCombiner, execute_plan, make_plan
-from repro.core.tsqr import form_q, local_qr_fns
+from repro.qr.panel import form_q, local_qr_fns
 
 __all__ = ["PowerSGDConfig", "init_state", "compress_grad"]
 

@@ -1,0 +1,45 @@
+"""The QR panel-pipeline layer: every QR workload on the collective engine.
+
+Built in three tiers (DESIGN.md §8):
+
+  * :mod:`repro.qr.panel`   — :class:`~repro.qr.panel.PanelFactorizer`, the
+    engine-agnostic panel machinery (local QR choice, butterfly R
+    reduction, explicit-Q formation with CholeskyQR polish).  Knows nothing
+    about meshes, fault specs, or column blocking.
+  * :mod:`repro.qr.tsqr`    — the paper's tall-and-skinny workload: one
+    panel, four fault variants, sim + shard_map backends.
+  * :mod:`repro.qr.blocked` — fault-tolerant right-looking blocked QR for
+    general m×n matrices (arXiv:1604.02504's extension): TSQR per column
+    panel, butterfly-replicated factors doubling as fault-tolerance
+    replicas, and the one-sweep-per-panel fused trailing update
+    (:mod:`repro.kernels.trailing_update`).
+
+``repro.core.tsqr`` remains as a thin back-compat facade over this package.
+"""
+from .blocked import (
+    BlockedQRResult,
+    PanelFaultSchedule,
+    PanelReport,
+    blocked_qr_shard_map,
+    blocked_qr_sim,
+    panel_widths,
+)
+from .panel import PanelFactorizer, chol_r, form_q, local_qr_fns
+from .tsqr import TSQRResult, tsqr_gram_shard_map, tsqr_shard_map, tsqr_sim
+
+__all__ = [
+    "BlockedQRResult",
+    "PanelFactorizer",
+    "PanelFaultSchedule",
+    "PanelReport",
+    "TSQRResult",
+    "blocked_qr_shard_map",
+    "blocked_qr_sim",
+    "chol_r",
+    "form_q",
+    "local_qr_fns",
+    "panel_widths",
+    "tsqr_gram_shard_map",
+    "tsqr_shard_map",
+    "tsqr_sim",
+]

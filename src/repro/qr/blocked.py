@@ -1,0 +1,424 @@
+"""Fault-tolerant right-looking blocked QR for general m×n matrices.
+
+Coti's follow-on to the TSQR paper ("Fault Tolerant QR Factorization for
+General Matrices", arXiv:1604.02504) extends the redundant-computation
+trick beyond tall-and-skinny: use TSQR as the *panel* factorization inside
+a right-looking blocked QR, and the butterfly's ``2^s``-copy redundancy
+protects every panel's reduced factors for free.  This driver implements
+that on the repo's collective engine:
+
+  per column panel ``k`` (width ``b``):
+    1. **Panel TSQR** — each rank's local R of the panel block rides the
+       fault-tolerant butterfly (QR combiner, any variant/plan); every
+       valid rank ends holding the identical global ``R_kk``.  The
+       redundant copies double as the fault-tolerance replicas — the
+       "broadcast" of the implicit panel factor costs nothing extra.
+    2. **Explicit panel Q** — ``Q_k = A_panel R_kk⁻¹`` locally (plus
+       ``reorth`` CholeskyQR polish passes over the same butterfly).
+    3. **Block row of R** — ``W = R_totᵀ⁻¹ · Σ_ranks A_panelᵀ A_trail``:
+       the cross products are summed by a second fault-tolerant butterfly
+       (``sum`` combiner), so ``W = Q_kᵀ A_trail`` is replicated too.
+    4. **Trailing update** — ``A_trail ← A_trail − Q_k W`` by the fused
+       Pallas kernel (:mod:`repro.kernels.trailing_update`), which also
+       accumulates the *next* panel's Gram + cross products in the same
+       pass.  The trailing block is touched exactly **once per panel**
+       (hard-gated by the ``general_qr`` bench case); panel-local reads
+       are narrow (m×b).
+
+**Failure semantics, per panel** (DESIGN.md §8): a death during phase 1 or
+phase 3 follows the variant's butterfly guarantee (``2^s − 1`` at entry of
+exchange ``s``).  Ranks that lose a replicated factor are restored at the
+phase boundary via :func:`~repro.collective.engine.replica_fetch` — the
+blocked-QR analogue of Self-Healing's respawn, hoisted to the panel
+boundary where a real runtime replans (``recover="replica"``, default).
+With ``recover="off"`` the honest no-recovery consequence is observable:
+the NaN-poisoned rank corrupts every later panel's reduction — exactly why
+the general-matrix paper needs a recovery story at all.  ``valid`` reports
+the *strict survivors* (ranks valid through every reduction with no
+replica fetch); ``reports`` carries the per-panel tolerance verdicts and
+recovery counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections.abc import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.collective.comm import Comm, ShardMapComm, SimComm
+from repro.collective.engine import ft_allreduce, replica_fetch
+from repro.collective.faults import FaultSpec, within_tolerance
+from repro.collective.plan import Plan, make_plan
+from repro.compat import shard_map
+from repro.kernels import ops as kops
+
+from .panel import PanelFactorizer, chol_r
+
+__all__ = [
+    "PanelFaultSchedule",
+    "PanelReport",
+    "BlockedQRResult",
+    "blocked_qr_sim",
+    "blocked_qr_shard_map",
+    "panel_widths",
+]
+
+
+def panel_widths(n: int, panel_width: int) -> tuple[int, ...]:
+    """Column widths of the ``⌈n / panel_width⌉`` panels (ragged tail)."""
+    if panel_width <= 0:
+        raise ValueError(f"panel_width must be positive, got {panel_width}")
+    k = math.ceil(n / panel_width)
+    return tuple(
+        min(panel_width, n - i * panel_width) for i in range(k)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PanelFaultSchedule:
+    """Fail-stop deaths scheduled into a blocked factorization.
+
+    ``panel[k]`` strikes during panel ``k``'s TSQR reduction (phase 1);
+    ``update[k]`` during its cross-product reduction (phase 3 — "death
+    during the trailing update": the local subtraction has no communication,
+    so the W butterfly is where a mid-update death is observable).  Each
+    value is a :class:`~repro.collective.faults.FaultSpec` whose steps index
+    that butterfly's exchanges.
+    """
+
+    panel: Mapping[int, FaultSpec] = dataclasses.field(default_factory=dict)
+    update: Mapping[int, FaultSpec] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def of(cls, panel=None, update=None) -> "PanelFaultSchedule":
+        """From ``{panel_index: FaultSpec | {rank: step}}`` mappings."""
+
+        def norm(d):
+            return {
+                int(k): v if isinstance(v, FaultSpec) else FaultSpec.of(v)
+                for k, v in (d or {}).items()
+            }
+
+        return cls(panel=norm(panel), update=norm(update))
+
+    def __bool__(self) -> bool:
+        return bool(self.panel) or bool(self.update)
+
+
+@dataclasses.dataclass(frozen=True)
+class PanelReport:
+    """Host-side verdicts for one panel (the guarantee bookkeeping)."""
+
+    panel: int
+    plan_r: Plan
+    plan_w: Plan | None
+    within_tolerance_r: bool
+    within_tolerance_w: bool
+    recovered_r: int          # ranks restored from a replica after phase 1
+    recovered_w: int          # …after phase 3
+    recoverable: bool         # some rank held every replicated factor
+
+    @property
+    def within_tolerance(self) -> bool:
+        return self.within_tolerance_r and self.within_tolerance_w
+
+
+@dataclasses.dataclass
+class BlockedQRResult:
+    """Outcome of a fault-tolerant blocked QR.
+
+    ``r``      — (P, n, n) in sim / per-device (n, n) under shard_map: the
+                 assembled upper-triangular factor (replicated row blocks).
+    ``valid``  — (P,) strict survivors: valid through every panel's
+                 reductions without replica recovery.
+    ``q``      — optional per-rank (m_local, n) explicit orthonormal factor.
+    ``reports``— per-panel :class:`PanelReport` (tolerance + recovery).
+    """
+
+    r: jax.Array
+    valid: jax.Array
+    q: jax.Array | None
+    reports: tuple[PanelReport, ...]
+    panel_width: int
+
+    @property
+    def n_panels(self) -> int:
+        return len(self.reports)
+
+    @property
+    def recoverable(self) -> bool:
+        return all(rep.recoverable for rep in self.reports)
+
+
+# ---------------------------------------------------------------------------
+# Host-side planning
+# ---------------------------------------------------------------------------
+
+def _build_reports(
+    variant: str,
+    p: int,
+    widths: tuple[int, ...],
+    faults: PanelFaultSchedule,
+    recover: str,
+) -> tuple[PanelReport, ...]:
+    n_panels = len(widths)
+    for key in set(faults.panel) | set(faults.update):
+        if not 0 <= key < n_panels:
+            raise ValueError(
+                f"fault schedule names panel {key}, but only {n_panels} "
+                "panels exist"
+            )
+    if (n_panels - 1) in faults.update:
+        raise ValueError(
+            f"panel {n_panels - 1} is the last panel — it has no trailing "
+            "update to die during"
+        )
+    reports = []
+    for k in range(n_panels):
+        spec_r = faults.panel.get(k, FaultSpec.none())
+        plan_r = make_plan(variant, p, spec_r)
+        tol_r = within_tolerance(variant, spec_r, plan_r.n_steps)
+        last = k == n_panels - 1
+        plan_w = None
+        tol_w = True
+        if not last:
+            spec_w = faults.update.get(k, FaultSpec.none())
+            plan_w = make_plan(variant, p, spec_w)
+            tol_w = within_tolerance(variant, spec_w, plan_w.n_steps)
+        recoverable = bool(plan_r.final_valid.any()) and (
+            plan_w is None or bool(plan_w.final_valid.any())
+        )
+        # recovered_* counts ranks replica_fetch actually restores — zero
+        # when recovery is disabled (the ranks stay poisoned).
+        fetching = recover == "replica" and recoverable
+        reports.append(
+            PanelReport(
+                panel=k,
+                plan_r=plan_r,
+                plan_w=plan_w,
+                within_tolerance_r=tol_r,
+                within_tolerance_w=tol_w,
+                recovered_r=(
+                    int((~plan_r.final_valid).sum()) if fetching else 0
+                ),
+                recovered_w=(
+                    int((~plan_w.final_valid).sum())
+                    if fetching and plan_w is not None else 0
+                ),
+                recoverable=recoverable,
+            )
+        )
+    return tuple(reports)
+
+
+# ---------------------------------------------------------------------------
+# The driver body (backend-agnostic: arrays may carry a leading (P,) axis
+# under SimComm, or be per-rank local blocks under ShardMapComm)
+# ---------------------------------------------------------------------------
+
+def _solve_w(r_tot, c_sum):
+    """W = R_totᵀ⁻¹ C  (C = Σ A_panelᵀ A_trail, so W = Q_kᵀ A_trail)."""
+    import jax.scipy.linalg as jsl
+
+    return jsl.solve_triangular(
+        jnp.swapaxes(r_tot, -1, -2), c_sum, lower=True
+    )
+
+
+def _blocked_body(
+    a,
+    comm: Comm,
+    reports: tuple[PanelReport, ...],
+    widths: tuple[int, ...],
+    pf: PanelFactorizer,
+    *,
+    local_r: str,
+    compute_q: bool,
+    use_pallas: bool,
+    interpret: bool | None,
+):
+    m_local, n = a.shape[-2], a.shape[-1]
+    kw = dict(use_pallas=use_pallas, interpret=interpret)
+    r_full = jnp.zeros(a.shape[:-2] + (n, n), jnp.float32)
+    valid = comm.take(np.ones(comm.n_ranks, dtype=bool))
+    q_cols = []
+    trail = a
+    s = kops.panel_cross(a, split=widths[0], **kw)          # pipeline prime
+    c0 = 0
+    for rep, b in zip(reports, widths):
+        nt = n - c0 - b
+        panel = trail[..., :, :b]
+        g_loc = s[..., :, :b]
+        c_loc = s[..., :, b:]
+        # -- phase 1: panel TSQR over the butterfly -------------------------
+        if local_r == "chol":
+            r_loc = chol_r(g_loc)                 # free: lookahead Gram
+        else:
+            r_loc = pf.local_fn()(panel.astype(jnp.float32))
+        r_kk, valid_r = pf.reduce_r_prepared(r_loc, comm, rep.plan_r)
+        valid = valid & valid_r
+        all_valid_r = bool(rep.plan_r.final_valid.all())
+        if rep.recovered_r:
+            r_kk = replica_fetch(r_kk, comm, rep.plan_r.final_valid)
+        # -- phase 2: explicit panel Q (+ reorth polish) --------------------
+        # The polish's gram all-reduce mixes every rank's contribution, so
+        # it needs every rank to hold a finite r_kk; when a no-recovery run
+        # left poisoned ranks, skip the polish — survivors keep their exact
+        # unpolished factor instead of inheriting the NaN.
+        clean = all_valid_r or bool(rep.recovered_r)
+        pf_k = pf if clean else dataclasses.replace(pf, reorth=0)
+        q_k, r_tot = pf_k.form_q(panel.astype(jnp.float32), r_kk, comm)
+        q_k = q_k.astype(a.dtype)
+        if compute_q:
+            q_cols.append(q_k)
+        # -- phase 3: block row of R via the sum butterfly ------------------
+        if nt:
+            c_sum, valid_w = ft_allreduce(
+                c_loc, comm, op="sum", plan=rep.plan_w
+            )
+            valid = valid & valid_w
+            if rep.recovered_w:
+                c_sum = replica_fetch(c_sum, comm, rep.plan_w.final_valid)
+            w = _solve_w(r_tot, c_sum)
+            r_full = r_full.at[..., c0:c0 + b, c0:].set(
+                jnp.concatenate([r_tot, w], axis=-1)
+            )
+            # -- phase 4: one-sweep trailing update + lookahead -------------
+            trail, s = kops.trailing_update(
+                trail[..., :, b:], q_k, w.astype(a.dtype),
+                next_width=widths[rep.panel + 1], **kw
+            )
+        else:
+            r_full = r_full.at[..., c0:c0 + b, c0:].set(r_tot)
+        c0 += b
+    q = jnp.concatenate(q_cols, axis=-1) if compute_q else None
+    return r_full, valid, q
+
+
+def _setup(
+    m_local: int,
+    n: int,
+    panel_width: int,
+    variant: str,
+    p: int,
+    faults: PanelFaultSchedule | None,
+    local_r: str,
+    reorth: int,
+    recover: str,
+) -> tuple[tuple[int, ...], tuple[PanelReport, ...], PanelFactorizer]:
+    """Shared entry-point validation + host planning (sim and shard_map)."""
+    if recover not in ("replica", "off"):
+        raise ValueError(f"recover must be 'replica' or 'off', got {recover!r}")
+    widths = panel_widths(n, panel_width)
+    if m_local < max(widths):
+        raise ValueError(
+            f"each rank's row block ({m_local} rows) must be at least as "
+            f"tall as the widest panel ({max(widths)}); shrink panel_width "
+            "or use fewer ranks"
+        )
+    from .panel import local_qr_fns
+
+    if local_r != "chol" and local_r not in local_qr_fns:
+        raise ValueError(
+            f"unknown local_r {local_r!r}; choose 'chol' (zero-extra-sweep "
+            f"lookahead Gram) or one of {sorted(local_qr_fns)}"
+        )
+    reports = _build_reports(
+        variant, p, widths, faults or PanelFaultSchedule(), recover
+    )
+    pf = PanelFactorizer(
+        local_qr="jnp" if local_r == "chol" else local_r, reorth=reorth
+    )
+    return widths, reports, pf
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def blocked_qr_sim(
+    a_blocks,
+    *,
+    panel_width: int,
+    variant: str = "redundant",
+    faults: PanelFaultSchedule | None = None,
+    compute_q: bool = False,
+    local_r: str = "chol",
+    reorth: int = 1,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+    recover: str = "replica",
+) -> BlockedQRResult:
+    """Single-device simulation: ``a_blocks`` is (P, m_local, n) — the
+    general-matrix analogue of :func:`repro.qr.tsqr.tsqr_sim`."""
+    p, m_local, n = a_blocks.shape
+    widths, reports, pf = _setup(
+        m_local, n, panel_width, variant, p, faults, local_r, reorth, recover
+    )
+    r, valid, q = _blocked_body(
+        a_blocks, SimComm(p), reports, widths, pf,
+        local_r=local_r, compute_q=compute_q, use_pallas=use_pallas,
+        interpret=interpret,
+    )
+    return BlockedQRResult(
+        r=r, valid=valid, q=q, reports=reports, panel_width=panel_width
+    )
+
+
+def blocked_qr_shard_map(
+    a_global,
+    *,
+    mesh,
+    axis: str,
+    panel_width: int,
+    variant: str = "redundant",
+    faults: PanelFaultSchedule | None = None,
+    compute_q: bool = False,
+    local_r: str = "chol",
+    reorth: int = 1,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+    recover: str = "replica",
+    jit: bool = True,
+) -> BlockedQRResult:
+    """Production path: A (m, n) row-sharded over ``mesh`` axis ``axis``.
+
+    Same body as :func:`blocked_qr_sim` under ``shard_map`` — exchanges
+    lower to ``lax.ppermute``, replica fetches ride the same wires.
+    Returns r (P, n, n) (one copy per rank), valid (P,), q (m, n)
+    row-sharded or None.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    p = mesh.shape[axis]
+    m, n = a_global.shape
+    widths, reports, pf = _setup(
+        m // p, n, panel_width, variant, p, faults, local_r, reorth, recover
+    )
+    comm = ShardMapComm(p, axis)
+    want_q = compute_q
+
+    def body(a_blk):
+        r, valid, q = _blocked_body(
+            a_blk, comm, reports, widths, pf,
+            local_r=local_r, compute_q=want_q, use_pallas=use_pallas,
+            interpret=interpret,
+        )
+        out_q = q if want_q else jnp.zeros((0, n), a_blk.dtype)
+        return r[None], valid[None], out_q
+
+    shard = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=P(axis),
+        out_specs=(P(axis), P(axis), P(axis)),
+    )
+    fun = jax.jit(shard) if jit else shard
+    r, valid, q = fun(a_global)
+    return BlockedQRResult(
+        r=r, valid=valid, q=(q if want_q else None),
+        reports=reports, panel_width=panel_width,
+    )

@@ -1,0 +1,212 @@
+"""Fault-tolerant, communication-avoiding TSQR (Coti 2015) entry points.
+
+The tall-and-skinny workload of the paper: one panel — the whole matrix —
+factored by the generic collective engine (:mod:`repro.collective`) with
+the QR combiner.  The panel-local machinery (local QR fns, ``form_q``)
+lives in :mod:`repro.qr.panel` as the :class:`~repro.qr.panel.
+PanelFactorizer` shared with the blocked general-matrix driver
+(:mod:`repro.qr.blocked`); this module contributes only the entry-point
+plumbing (plan construction, backends, result container).
+
+The four variants of the paper are driven by a host-computed
+:class:`~repro.collective.plan.Plan` and execute identically on the
+:class:`~repro.collective.comm.SimComm` (single device, leading (P,) axis)
+and :class:`~repro.collective.comm.ShardMapComm` (SPMD, ``lax.ppermute``)
+backends:
+
+  * ``tree``        — Alg. 1, the baseline reduction tree (zero redundancy);
+  * ``redundant``   — Alg. 2, butterfly *exchange*: both buddies combine, so
+                      every intermediate R̃ exists in ``2^s`` copies;
+  * ``replace``     — Alg. 3, identical fault-free, reroutes to a replica of
+                      a dead buddy;
+  * ``selfhealing`` — Alg. 4–6, additionally respawns dead ranks from a
+                      replica at every level.
+
+Hot-path notes (DESIGN.md §7): fault-free plans ride the engine's
+straight-line fast path automatically, and the CQR2 local QRs use the
+fused 2-sweep R-only pipeline (``cholesky_qr2_r``) — the butterfly only
+carries R, so no tall intermediate is ever materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.collective.combiners import posdiag as _posdiag
+from repro.collective.comm import ShardMapComm, SimComm
+from repro.collective.engine import ft_allreduce
+from repro.collective.faults import FaultSpec
+from repro.collective.plan import Plan, make_plan
+from repro.compat import shard_map
+
+from .panel import PanelFactorizer, form_q
+
+__all__ = [
+    "TSQRResult",
+    "tsqr_sim",
+    "tsqr_shard_map",
+    "tsqr_gram_shard_map",
+]
+
+
+# ---------------------------------------------------------------------------
+# Result container
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TSQRResult:
+    """Per-rank outcome of a fault-tolerant TSQR.
+
+    ``r``      — (P, n, n) in sim / per-device (n, n) under shard_map.
+    ``valid``  — who holds a correct final R (the paper's semantics).
+    ``q``      — optional per-rank (m_local, n) orthonormal factor.
+    ``plan``   — the communication plan that was executed (accounting).
+    """
+
+    r: jax.Array
+    valid: jax.Array
+    q: jax.Array | None
+    plan: Plan
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def tsqr_sim(
+    a_blocks,
+    *,
+    variant: str = "redundant",
+    fault_spec: FaultSpec | None = None,
+    compute_q: bool = False,
+    reorth: int = 1,
+    local_qr: str | Callable = "jnp",
+) -> TSQRResult:
+    """Single-device simulation: ``a_blocks`` is (P, m_local, n).
+
+    This is the backend the test-suite and the hypothesis robustness sweeps
+    drive; the algorithm body is shared with :func:`tsqr_shard_map`.
+    """
+    p = a_blocks.shape[0]
+    plan = make_plan(variant, p, fault_spec)
+    if compute_q and not plan.final_valid.all():
+        raise ValueError(
+            "compute_q requires an all-valid plan (fault-free, or "
+            "self-healing within tolerance); got final_valid="
+            f"{plan.final_valid}"
+        )
+    comm = SimComm(p)
+    pf = PanelFactorizer(local_qr=local_qr, reorth=reorth)
+    r, valid = pf.reduce_r(a_blocks, comm, plan)
+    q = None
+    if compute_q:
+        q, r = pf.form_q(a_blocks, r, comm)
+    return TSQRResult(r=r, valid=valid, q=q, plan=plan)
+
+
+def tsqr_gram_shard_map(
+    a_global,
+    *,
+    mesh,
+    axis: str,
+    reorth: int = 1,
+    jit: bool = True,
+):
+    """Beyond-paper optimized TSQR: the **Gram butterfly** (EXPERIMENTS.md
+    §Perf, cell C).
+
+    The paper's combine is ``QR([R̃ᵢ; R̃ⱼ])`` at every butterfly level —
+    log₂(P) Householder factorizations of 2n×n on the critical path, each
+    sequential and VPU-bound on TPU.  This variant keeps the *same
+    butterfly* (same exchanges, same 2^s-copy redundancy, same fault
+    semantics) but swaps the combiner to ``gram_sum``: it carries Gram
+    matrices ``G = Σ AᵢᵀAᵢ``, one Cholesky at the end, and a CholeskyQR2
+    polish for Householder-grade orthogonality.  Per level the combine is
+    an n×n add instead of an O(n³) QR; the local work is one MXU Gram
+    matmul instead of a Householder panel.  Wire bytes are n² per exchange
+    shipped square — n(n+1)/2 with symmetric packing, which
+    ``Plan.bytes_on_wire(symmetric=True)`` now prices (see
+    benchmarks/comm_volume.py).
+
+    Numerics: κ(A)² enters the Gram, so the polish round is mandatory;
+    certified for κ(A) ≲ 1/√ε like CQR2.
+    """
+    p = mesh.shape[axis]
+    comm = ShardMapComm(p, axis)
+
+    def body(a_blk):
+        a32 = a_blk.astype(jnp.float32)
+        g = jnp.einsum("mi,mj->ij", a32, a32)
+        g, _ = ft_allreduce(g, comm, op="gram_sum")
+        r = _posdiag(jnp.swapaxes(jnp.linalg.cholesky(g), -1, -2))
+        q, r = form_q(a_blk, r, comm, reorth)
+        return r[None], q
+
+    shard = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=P(axis),
+        out_specs=(P(axis), P(axis)),
+    )
+    fun = jax.jit(shard) if jit else shard
+    r, q = fun(a_global)
+    return TSQRResult(r=r, valid=jnp.ones((p,), bool), q=q,
+                      plan=make_plan("redundant", p))
+
+
+def tsqr_shard_map(
+    a_global,
+    *,
+    mesh,
+    axis: str,
+    variant: str = "redundant",
+    fault_spec: FaultSpec | None = None,
+    compute_q: bool = False,
+    reorth: int = 1,
+    local_qr: str | Callable = "jnp",
+    jit: bool = True,
+):
+    """Production path: A (m, n) row-sharded over ``mesh`` axis ``axis``.
+
+    Returns ``(r, valid, q)`` with r (P, n, n) — one (replicated-if-valid)
+    copy per rank — valid (P,) and q (m, n) row-sharded (or None).
+
+    The permutation plan is host-computed from ``fault_spec``; on a real
+    fleet the runtime re-invokes this with a fresh plan after each health
+    change (step-boundary replanning, DESIGN.md §2).
+    """
+    p = mesh.shape[axis]
+    plan = make_plan(variant, p, fault_spec)
+    if compute_q and not plan.final_valid.all():
+        raise ValueError(
+            "compute_q requires an all-valid plan (fault-free, or "
+            "self-healing within tolerance)"
+        )
+    comm = ShardMapComm(p, axis)
+    pf = PanelFactorizer(local_qr=local_qr, reorth=reorth)
+    want_q = compute_q
+
+    def body(a_blk):
+        a = a_blk  # (m_local, n)
+        r, valid = pf.reduce_r(a, comm, plan)
+        q = None
+        if want_q:
+            q, r = pf.form_q(a, r, comm)
+        out_q = q if want_q else jnp.zeros((0, a.shape[-1]), a.dtype)
+        return r[None], valid[None], out_q
+
+    shard = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=P(axis),
+        out_specs=(P(axis), P(axis), P(axis)),
+    )
+    fun = jax.jit(shard) if jit else shard
+    r, valid, q = fun(a_global)
+    return TSQRResult(
+        r=r, valid=valid, q=(q if want_q else None), plan=plan
+    )

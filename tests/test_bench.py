@@ -20,11 +20,12 @@ def test_registered_cases_cover_migrated_benchmarks():
     assert {
         "robustness", "comm_volume", "semantics", "tsqr_scaling",
         "tsqr_local_qr", "powersgd", "roofline", "fault_scenarios",
-        "kernels",
+        "kernels", "general_qr",
     } <= names
     smoke = {c.name for c in cases_for("smoke")}
     assert {
         "robustness", "comm_volume", "semantics", "fault_scenarios", "kernels",
+        "general_qr",
     } <= smoke
 
 
@@ -245,6 +246,28 @@ def test_collective_scenarios_survive_and_match():
     assert m["round0_survivors"].value == 16      # selfhealing respawns all
     m = scenarios.run_collective_scenario(byname["blank_under_repeat"])
     assert [m[f"round{i}_survivors"].value for i in range(3)] == [8, 6, 4]
+
+
+def test_blocked_qr_scenarios_survive_and_match():
+    from repro.bench import scenarios
+
+    byname = {s.name: s for s in scenarios.get_scenarios()}
+    assert {"panel_death_midsweep", "death_during_trailing_update",
+            "cascading_panels"} <= set(byname)
+    got = {}
+    for name in ("panel_death_midsweep", "death_during_trailing_update",
+                 "cascading_panels"):
+        m = got[name] = scenarios.run_blocked_qr_scenario(byname[name])
+        assert m["within_tolerance"].value is True, name
+        assert m["values_match"].value is True, name
+        assert m["survivors_match_plan"].value is True, name
+        assert m["sweeps_per_panel"].value == 1.0, name
+    # the distilled expectations the baseline gates on
+    assert got["panel_death_midsweep"]["survivors"].value == 6   # 8 − 2 deaths
+    m = got["death_during_trailing_update"]
+    assert m["survivors"].value == 4              # rank 5's step-1 coset
+    assert m["recovered"].value == 4              # …restored from replicas
+    assert got["cascading_panels"]["survivors"].value == 8  # respawned all
 
 
 def test_scenario_seed_determinism():

@@ -5,9 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.comm import SimComm
+from repro.collective import FaultSpec, SimComm
 from repro.optim import adamw, lowrank, orthosgd, powersgd
-from repro.core import FaultSpec
 
 
 def _quad_problem(key, d=16):
