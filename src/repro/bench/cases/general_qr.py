@@ -16,7 +16,12 @@ case measures that with the trace-time traffic model of
     :class:`~repro.bench.registry.BenchFailure`, not a buried metric;
   * the per-variant failure guarantee: a within-tolerance death schedule
     injected mid-factorization leaves the host-predicted survivor count,
-    every survivor holding the exact R.
+    every survivor holding the exact R;
+  * the single-program discipline (DESIGN.md §9): the fault-free
+    factorization launches exactly **one** device program, and the B=8
+    batched shape ("B independent user matrices, one dispatch") launches
+    one program for the whole batch with every element matching the dense
+    oracle.
 
 Wall-clock timings ride along warn-gated (shared CI runners are noisy).
 The full tier runs the acceptance shape: 4096×512 at panel width 128.
@@ -42,14 +47,16 @@ GUARANTEE_SPECS = {
 
 
 def run(p: int = 4, m_local: int = 128, n: int = 96, panel_width: int = 32,
-        use_pallas: bool = True) -> dict:
+        use_pallas: bool = True, batch: int = 8) -> dict:
     """Execute the blocked QR under the traffic tracker; return the raw
     model numbers and numerical measurements."""
     import jax.numpy as jnp
 
     from repro.collective import FaultSpec, within_tolerance
+    from repro.kernels import dispatch as disp
     from repro.kernels import traffic
-    from repro.qr import PanelFaultSchedule, blocked_qr_sim
+    from repro.qr import PanelFaultSchedule, blocked_qr_batched, blocked_qr_sim
+    from repro.qr.blocked import PIPELINE_NAME
 
     from repro.core import ref
 
@@ -70,7 +77,19 @@ def run(p: int = 4, m_local: int = 128, n: int = 96, panel_width: int = 32,
     )
     ortho_err = float(np.abs(q.T @ q - np.eye(n)).max())
     trailing = [r for r in t.records
-                if r["op"] in ("panel_cross", "trailing_update")]
+                if r["op"] in ("panel_cross", "pad_cross", "trailing_update")]
+
+    # -- batched throughput shape: B independent user matrices, ONE dispatch
+    ab = rng.standard_normal((batch, p, m_local, n)).astype(np.float32)
+    ab[0] = blocks
+    with disp.track_dispatch() as d:
+        bres = blocked_qr_batched(
+            jnp.asarray(ab), panel_width=panel_width, use_pallas=use_pallas
+        )
+    batched_dispatches = int(d.dispatches[PIPELINE_NAME])
+    batched_err = float(
+        np.abs(np.asarray(bres.r)[0, 0] - truth).max() / scale
+    )
 
     # -- per-variant guarantee: within-tolerance deaths mid-factorization --
     mid_panel = res.n_panels // 2
@@ -101,20 +120,26 @@ def run(p: int = 4, m_local: int = 128, n: int = 96, panel_width: int = 32,
     return {
         "p": p, "m_local": m_local, "n": n, "panel_width": panel_width,
         "n_panels": res.n_panels,
-        "trailing_sweeps": t.sweeps_of("panel_cross", "trailing_update"),
+        "trailing_sweeps": t.sweeps_of(
+            "panel_cross", "pad_cross", "trailing_update"
+        ),
         "trailing_read_bytes": sum(r["read_bytes"] for r in trailing),
         "trailing_write_bytes": sum(r["write_bytes"] for r in trailing),
+        "dispatches": t.dispatches,
         "r_err": r_err,
         "recon_err": recon_err,
         "ortho_err": ortho_err,
+        "batch": batch,
+        "batched_dispatches": batched_dispatches,
+        "batched_r_err": batched_err,
         "survivors": survivors,
     }
 
 
 def case(p: int = 4, m_local: int = 128, n: int = 96, panel_width: int = 32,
-         use_pallas: bool = True):
+         use_pallas: bool = True, batch: int = 8):
     rows = run(p=p, m_local=m_local, n=n, panel_width=panel_width,
-               use_pallas=use_pallas)
+               use_pallas=use_pallas, batch=batch)
     if rows["r_err"] > R_TOL:
         raise BenchFailure(
             f"blocked R deviates from the dense QR by {rows['r_err']:.2e} "
@@ -130,9 +155,25 @@ def case(p: int = 4, m_local: int = 128, n: int = 96, panel_width: int = 32,
             f"{rows['trailing_sweeps']} trailing-block sweeps for "
             f"{rows['n_panels']} panels — the 1-sweep-per-panel claim failed"
         )
+    if rows["dispatches"] != 1:
+        raise BenchFailure(
+            f"the fault-free factorization launched {rows['dispatches']} "
+            "programs — the single-dispatch pipeline claim failed"
+        )
+    if rows["batched_dispatches"] != 1:
+        raise BenchFailure(
+            f"the B={rows['batch']} batched factorization launched "
+            f"{rows['batched_dispatches']} programs instead of 1"
+        )
+    if rows["batched_r_err"] > R_TOL:
+        raise BenchFailure(
+            f"batched R deviates from the dense QR by "
+            f"{rows['batched_r_err']:.2e} (tolerance {R_TOL:.0e})"
+        )
     hard = dict(gate="hard", direction="exact")
     metrics = {
-        # THE claim: trailing block touched once per panel, bytes exact
+        # THE claim: trailing block touched once per panel, bytes exact,
+        # the whole fault-free factorization one device dispatch
         "n_panels": Metric(rows["n_panels"], **hard),
         "trailing_sweeps": Metric(rows["trailing_sweeps"], **hard),
         "sweeps_per_panel": Metric(
@@ -143,6 +184,12 @@ def case(p: int = 4, m_local: int = 128, n: int = 96, panel_width: int = 32,
         ),
         "trailing_write_bytes": Metric(
             rows["trailing_write_bytes"], **hard, unit="B"
+        ),
+        "dispatches": Metric(rows["dispatches"], **hard),
+        "batched_b": Metric(rows["batch"], **hard),
+        "batched_dispatches": Metric(rows["batched_dispatches"], **hard),
+        "batched_r_err": Metric(
+            rows["batched_r_err"], gate="warn", direction="lower"
         ),
         # enforced above via BenchFailure; recorded values only warn on
         # drift (near-epsilon fp noise shifts with jax/XLA versions)

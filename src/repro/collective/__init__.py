@@ -36,7 +36,13 @@ from .combiners import (
     qr_r,
 )
 from .comm import Comm, ShardMapComm, SimComm
-from .engine import execute_plan, ft_allreduce, plan_is_fault_free, replica_fetch
+from .engine import (
+    execute_plan,
+    ft_allreduce,
+    ft_allreduce_jit,
+    plan_is_fault_free,
+    replica_fetch,
+)
 from .faults import NEVER, FaultSpec, tolerance, total_tolerance, within_tolerance
 from .instrument import CommStats, InstrumentedComm
 from .packing import pack_sym, unpack_sym
@@ -62,6 +68,7 @@ __all__ = [
     "VARIANTS",
     "execute_plan",
     "ft_allreduce",
+    "ft_allreduce_jit",
     "get_combiner",
     "ilog2",
     "make_plan",

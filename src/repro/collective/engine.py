@@ -48,18 +48,22 @@ trainer routes whole gradient trees through one call.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import dispatch as _dispatch
+
 from .combiners import Combiner, get_combiner
-from .comm import Comm
+from .comm import Comm, SimComm
 from .faults import NEVER, FaultSpec
 from .packing import pack_sym, packable, unpack_sym
 from .plan import Plan, _split_rounds, make_plan
 
-__all__ = ["execute_plan", "ft_allreduce", "plan_is_fault_free",
-           "replica_fetch"]
+__all__ = ["execute_plan", "ft_allreduce", "ft_allreduce_jit",
+           "plan_is_fault_free", "replica_fetch"]
 
 
 def _poison(leaf):
@@ -70,19 +74,10 @@ def _poison(leaf):
 
 
 def plan_is_fault_free(plan: Plan) -> bool:
-    """Host-side fast-path eligibility: one perm-round per step, no restore
-    rounds, no deaths during the collective, and every rank valid
-    throughout (excludes ``tree``, whose senders go invalid by design)."""
-    if not bool(plan.final_valid.all()):
-        return False
-    if plan.n_steps and bool((plan.death < plan.n_steps).any()):
-        return False
-    for step in plan.steps:
-        if len(step.perm_rounds) != 1 or step.restore_rounds:
-            return False
-        if not bool(step.valid_after.all()):
-            return False
-    return True
+    """Fast-path eligibility — cached on the plan (:attr:`Plan.
+    is_fault_free`), so the K×3 collectives of a blocked factorization pay
+    the step walk once instead of once per call."""
+    return plan.is_fault_free
 
 
 def _wire_codec(combiner: Combiner, val):
@@ -147,7 +142,7 @@ def execute_plan(
     the fast path (raises if the plan is not fault-free).
     """
     combiner = get_combiner(combiner)
-    fault_free = plan_is_fault_free(plan)
+    fault_free = plan.is_fault_free
     if fast is True and not fault_free:
         raise ValueError(
             "fast=True requires a fault-free plan (one perm-round per step, "
@@ -259,3 +254,55 @@ def ft_allreduce(
     val, valid = execute_plan(x, comm, plan, combiner, fast=fast)
     val = jax.tree.map(lambda leaf: combiner.finalize(leaf, plan.n_ranks), val)
     return val, valid
+
+
+# ---------------------------------------------------------------------------
+# Retrace-proof compiled entry point
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _ft_allreduce_compiled(comm: Comm, plan: Plan, op, fast):
+    """One compiled butterfly per ``(comm, plan, combiner)`` — the jit cache
+    underneath keys on the payload's ``(treedef, shapes, dtypes)``, so the
+    full cache key is exactly ``(plan, combiner-name, treedef, shapes)``."""
+
+    @jax.jit
+    def fun(x):
+        _dispatch.note_trace("ft_allreduce")
+        return ft_allreduce(x, comm, op=op, plan=plan, fast=fast)
+
+    return fun
+
+
+def ft_allreduce_jit(
+    x,
+    comm: Comm,
+    *,
+    op: Combiner | str = "sum",
+    variant: str = "redundant",
+    fault_spec: FaultSpec | None = None,
+    plan: Plan | None = None,
+    fast: bool | None = None,
+):
+    """:func:`ft_allreduce` as a cached, zero-retrace device program.
+
+    The plan is hashable-static (value-keyed ``Plan.__hash__``) and the
+    combiner resolves to a frozen instance, so the whole butterfly closes
+    over them and compiles once per ``(plan, combiner, treedef, shapes)`` —
+    a repeat call with identical statics performs **zero** new traces (the
+    ``dispatch`` bench case and the CI retrace guard pin this).  Standalone
+    compilation implies a :class:`~repro.collective.comm.SimComm` payload;
+    inside a ``shard_map`` body call :func:`ft_allreduce` directly — the
+    enclosing program is what gets compiled there.
+    """
+    if not isinstance(comm, SimComm):
+        raise ValueError(
+            "ft_allreduce_jit compiles a standalone program, which only the "
+            "SimComm backend supports; ShardMapComm exchanges must execute "
+            "inside an enclosing shard_map (call ft_allreduce there)"
+        )
+    if plan is None:
+        plan = make_plan(variant, comm.n_ranks, fault_spec)
+    fun = _ft_allreduce_compiled(comm, plan, get_combiner(op), fast)
+    _dispatch.note_dispatch("ft_allreduce")
+    return fun(x)

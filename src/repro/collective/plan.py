@@ -25,6 +25,7 @@ findReplica" of the paper, hoisted to the step boundary — see DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -59,7 +60,7 @@ def payload_numel(n_cols: int, symmetric: bool = False) -> int:
     return n_cols * n_cols
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Step:
     level: int
     perm_rounds: tuple[tuple[Pair, ...], ...]
@@ -67,6 +68,25 @@ class Step:
     # Host-side predictions (numpy bool, shape (P,)):
     valid_after: np.ndarray      # holds a correct partial value after this level
     respawned: np.ndarray        # ranks respawned at the end of this level
+
+    # Steps hold numpy fields, so the dataclass-generated __eq__/__hash__
+    # are unusable (ambiguous array truth / unhashable arrays).  A value
+    # signature restores both, which lets plans key jit/LRU caches.
+    @functools.cached_property
+    def _sig(self) -> tuple:
+        return (
+            self.level,
+            self.perm_rounds,
+            self.restore_rounds,
+            self.valid_after.tobytes(),
+            self.respawned.tobytes(),
+        )
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, Step) and self._sig == other._sig
+
+    def __hash__(self) -> int:
+        return hash(self._sig)
 
     @property
     def n_messages(self) -> int:
@@ -79,7 +99,7 @@ class Step:
         return len(self.perm_rounds) + len(self.restore_rounds)
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Plan:
     variant: str
     n_ranks: int
@@ -87,6 +107,42 @@ class Plan:
     death: np.ndarray            # (P,) effective death vector consumed
     steps: tuple[Step, ...]
     final_valid: np.ndarray      # (P,) who holds the final value
+
+    # -- value identity (hashable-static: plans key jit/LRU caches) ---------
+    @functools.cached_property
+    def _sig(self) -> tuple:
+        return (
+            self.variant,
+            self.n_ranks,
+            self.n_steps,
+            self.death.tobytes(),
+            self.steps,
+            self.final_valid.tobytes(),
+        )
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, Plan) and self._sig == other._sig
+
+    def __hash__(self) -> int:
+        return hash(self._sig)
+
+    @functools.cached_property
+    def is_fault_free(self) -> bool:
+        """Fast-path eligibility, computed once per plan (the panel loop
+        fires several collectives per panel — re-walking every step on every
+        call was pure host overhead): one perm-round per step, no restore
+        rounds, no deaths during the collective, every rank valid throughout
+        (excludes ``tree``, whose senders go invalid by design)."""
+        if not bool(self.final_valid.all()):
+            return False
+        if self.n_steps and bool((self.death < self.n_steps).any()):
+            return False
+        for step in self.steps:
+            if len(step.perm_rounds) != 1 or step.restore_rounds:
+                return False
+            if not bool(step.valid_after.all()):
+                return False
+        return True
 
     # -- communication accounting (benchmarks/comm_volume.py) --------------
     def message_count(self) -> int:
@@ -288,14 +344,8 @@ _PLANNERS = {
 VARIANTS = tuple(_PLANNERS)
 
 
-def make_plan(
-    variant: str,
-    n_ranks: int,
-    fault_spec: FaultSpec | None = None,
-) -> Plan:
-    if variant not in _PLANNERS:
-        raise ValueError(f"unknown variant {variant!r}; choose from {VARIANTS}")
-    spec = fault_spec or FaultSpec.none()
+@functools.lru_cache(maxsize=512)
+def _make_plan_cached(variant: str, n_ranks: int, spec: FaultSpec) -> Plan:
     death = spec.death_vector(n_ranks)
     n_steps = ilog2(n_ranks)
     steps, final_valid = _PLANNERS[variant](n_ranks, death)
@@ -309,3 +359,17 @@ def make_plan(
         steps=tuple(steps),
         final_valid=final_valid,
     )
+
+
+def make_plan(
+    variant: str,
+    n_ranks: int,
+    fault_spec: FaultSpec | None = None,
+) -> Plan:
+    """Host-plan the collective.  Memoized on ``(variant, n_ranks, spec)``:
+    the panel loop requests the same fault-free plan for every collective of
+    every panel, and callers key jit caches on the (shared, hashable) plan
+    object."""
+    if variant not in _PLANNERS:
+        raise ValueError(f"unknown variant {variant!r}; choose from {VARIANTS}")
+    return _make_plan_cached(variant, n_ranks, fault_spec or FaultSpec.none())

@@ -18,8 +18,49 @@ __all__ = [
     "axis_types_kwargs",
     "make_mesh",
     "mesh_from_devices",
+    "optimization_barrier",
     "shard_map",
 ]
+
+
+# -- lax.optimization_barrier under vmap ------------------------------------
+#
+# The trailing-update oracle (repro.kernels.ref) uses optimization_barrier
+# to pin XLA rewrites so the eager driver and the scan pipeline stay
+# bitwise-comparable at narrow panel widths — but jax (through at least
+# 0.4.37) never registered a vmap batching rule for the primitive, which
+# breaks the batched (vmapped) pipeline.  The barrier is an identity on
+# every leaf, so the rule is trivial: bind through, dims unchanged.  When
+# the internal primitive moves, fall back to the identity function (vmap
+# keeps working; the last-ulp pinning is best-effort by nature).
+
+def _make_optimization_barrier():
+    try:
+        from jax import lax
+
+        barrier = lax.optimization_barrier
+    except (ImportError, AttributeError):
+        return lambda x: x
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+        from jax.interpreters import batching
+
+        if optimization_barrier_p not in batching.primitive_batchers:
+            def _batch_rule(args, dims):
+                return optimization_barrier_p.bind(*args), dims
+
+            batching.primitive_batchers[optimization_barrier_p] = _batch_rule
+    except (ImportError, AttributeError):
+        # Private primitive moved but the public op still exists: keep the
+        # barrier (the single-matrix bit-identity contract depends on it)
+        # and let vmapped narrow-width calls fail loudly — a silent
+        # identity here would surface as mysterious last-ulp mismatches in
+        # the hypothesis sweep instead of an error pointing at this shim.
+        pass
+    return barrier
+
+
+optimization_barrier = _make_optimization_barrier()
 
 try:
     from jax.sharding import AxisType  # type: ignore[attr-defined]

@@ -22,6 +22,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from .backend import resolve_interpret
+from .dispatch import note_trace
 from .gram import DEFAULT_BLOCK_ROWS, pick_block_rows
 
 __all__ = ["apply_right"]
@@ -44,6 +45,7 @@ def apply_right(a, w, *, block_rows: int = DEFAULT_BLOCK_ROWS,
     ``interpret=None`` auto-detects the backend (compiled on TPU,
     interpreted elsewhere).
     """
+    note_trace("kernel:apply_right")
     interpret = resolve_interpret(interpret)
     m, n = a.shape
     n2, k = w.shape

@@ -21,6 +21,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from .backend import resolve_interpret
+from .dispatch import note_trace
 
 __all__ = ["combine_gram"]
 
@@ -40,6 +41,7 @@ def combine_gram(r1, r2, *, interpret: bool | None = None):
 
     ``interpret=None`` auto-detects the backend.
     """
+    note_trace("kernel:combine_gram")
     interpret = resolve_interpret(interpret)
     n = r1.shape[-1]
     assert r1.shape == r2.shape == (n, n)

@@ -38,6 +38,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from .backend import resolve_interpret
+from .dispatch import note_trace
 from .gram import DEFAULT_BLOCK_ROWS, mask_rows, pick_block_rows
 
 __all__ = ["fused_apply_gram"]
@@ -78,6 +79,7 @@ def fused_apply_gram(a, w, *, block_rows: int = DEFAULT_BLOCK_ROWS,
     g (k, k) float32 — or just ``g`` when ``want_q=False`` (Q never leaves
     VMEM).  ``interpret=None`` auto-detects the backend.
     """
+    note_trace("kernel:fused_apply_gram")
     interpret = resolve_interpret(interpret)
     m, n = a.shape
     n2, k = w.shape

@@ -33,8 +33,15 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from .backend import resolve_interpret
+from .dispatch import note_trace
 
-__all__ = ["gram", "DEFAULT_BLOCK_ROWS", "pick_block_rows", "mask_rows"]
+__all__ = [
+    "gram",
+    "DEFAULT_BLOCK_ROWS",
+    "pick_block_rows",
+    "mask_rows",
+    "mask_cols",
+]
 
 DEFAULT_BLOCK_ROWS = 1024
 _SUBLANE = 8
@@ -61,6 +68,17 @@ def mask_rows(panel, grid_idx, block_rows: int, m: int):
     return jnp.where(rows < m, panel, jnp.zeros_like(panel))
 
 
+def mask_cols(block, n_valid: int):
+    """Zero columns ``>= n_valid`` of a block — the column analogue of
+    :func:`mask_rows`, used by the fixed-shape blocked-QR pipeline to keep
+    a padded trailing block exact (no-op when the block is exactly
+    ``n_valid`` wide — the branch is static)."""
+    if block.shape[-1] == n_valid:
+        return block
+    cols = lax.broadcasted_iota(jnp.int32, block.shape, block.ndim - 1)
+    return jnp.where(cols < n_valid, block, jnp.zeros_like(block))
+
+
 def _gram_kernel(a_ref, o_ref, *, block_rows: int, m: int):
     i = pl.program_id(0)
 
@@ -82,6 +100,7 @@ def gram(a, *, block_rows: int = DEFAULT_BLOCK_ROWS,
     ``interpret=None`` auto-detects the backend (compiled Mosaic kernel on
     TPU, Pallas interpreter elsewhere); pass an explicit bool to override.
     """
+    note_trace("kernel:gram")
     interpret = resolve_interpret(interpret)
     m, n = a.shape
     block_rows = pick_block_rows(m, block_rows)

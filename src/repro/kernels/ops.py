@@ -30,6 +30,7 @@ import jax.scipy.linalg as jsl
 
 from . import apply_right as _apply_mod
 from . import combine_gram as _combine_mod
+from . import dispatch as _dispatch
 from . import fused_apply_gram as _fused_mod
 from . import gram as _gram_mod
 from . import ref as _ref
@@ -47,6 +48,7 @@ __all__ = [
     "tri_inv",
     "trailing_update",
     "panel_cross",
+    "pad_cross",
 ]
 
 
@@ -70,29 +72,47 @@ def _nbytes(x) -> int:
     return int(x.size) * x.dtype.itemsize
 
 
+def _pre(op: str) -> int:
+    """Snapshot the kernel's process-lifetime trace count before a call."""
+    return _dispatch.trace_count("kernel:" + op)
+
+
+def _note(op: str, t0: int, **traffic_kw) -> None:
+    """Record one wrapper call: a device dispatch plus its HBM traffic, with
+    the number of *new* jit traces the call caused (0 on warm calls — the
+    zero-retrace contract the ``dispatch`` bench case gates)."""
+    _dispatch.note_dispatch(op)
+    _traffic.note(
+        op, dispatches=1, traces=_dispatch.trace_count("kernel:" + op) - t0,
+        **traffic_kw,
+    )
+
+
 # -- kernel entry points (batched, pallas/jnp switchable) -------------------
 
 def gram(a, *, use_pallas: bool = False, interpret: bool | None = None):
+    t0 = _pre("gram")
     out = (
         _batched(_gram_mod.gram, 1)(a, interpret=interpret)
         if use_pallas
         else _ref.gram(a)
     )
-    _traffic.note("gram", sweeps=1, read_bytes=_nbytes(a),
-                  write_bytes=_nbytes(out))
+    _note("gram", t0, sweeps=1, read_bytes=_nbytes(a),
+          write_bytes=_nbytes(out))
     return out
 
 
 def apply_right(a, w, *, use_pallas: bool = False,
                 interpret: bool | None = None):
+    t0 = _pre("apply_right")
     out = (
         _batched(_apply_mod.apply_right, 2)(a, w, interpret=interpret)
         if use_pallas
         else _ref.apply_right(a, w)
     )
-    _traffic.note("apply_right", sweeps=1,
-                  read_bytes=_nbytes(a) + _nbytes(w),
-                  write_bytes=_nbytes(out))
+    _note("apply_right", t0, sweeps=1,
+          read_bytes=_nbytes(a) + _nbytes(w),
+          write_bytes=_nbytes(out))
     return out
 
 
@@ -103,6 +123,7 @@ def fused_apply_gram(a, w, *, use_pallas: bool = False,
     Returns ``(q, g)`` — or just ``g`` when ``want_q=False``, in which case
     the applied panel never leaves VMEM (no tall HBM write at all).
     """
+    t0 = _pre("fused_apply_gram")
     if use_pallas:
         out = _batched(_fused_mod.fused_apply_gram, 2)(
             a, w, interpret=interpret, want_q=want_q
@@ -113,22 +134,85 @@ def fused_apply_gram(a, w, *, use_pallas: bool = False,
         out = (q, g) if want_q else g
     g_out = out[1] if want_q else out
     q_bytes = _nbytes(out[0]) if want_q else 0
-    _traffic.note("fused_apply_gram", sweeps=1,
-                  read_bytes=_nbytes(a) + _nbytes(w),
-                  write_bytes=q_bytes + _nbytes(g_out))
+    _note("fused_apply_gram", t0, sweeps=1,
+          read_bytes=_nbytes(a) + _nbytes(w),
+          write_bytes=q_bytes + _nbytes(g_out))
     return out
 
 
 def combine_gram(r1, r2, *, use_pallas: bool = False,
                  interpret: bool | None = None):
+    t0 = _pre("combine_gram")
     out = (
         _batched(_combine_mod.combine_gram, 2)(r1, r2, interpret=interpret)
         if use_pallas
         else _ref.combine_gram(r1, r2)
     )
-    _traffic.note("combine_gram", read_bytes=_nbytes(r1) + _nbytes(r2),
-                  write_bytes=_nbytes(out))
+    _note("combine_gram", t0, read_bytes=_nbytes(r1) + _nbytes(r2),
+          write_bytes=_nbytes(out))
     return out
+
+
+# -- raw dispatchers (no traffic/dispatch notes) ----------------------------
+#
+# The scan-compiled blocked-QR pipeline (repro.qr.blocked) traces these
+# *once* for all K panels, so noting at kernel-call time would undercount by
+# K−1 on the first call and by K on every warm call; the pipeline wrapper
+# notes its exact per-call totals itself instead.
+#
+# The jnp oracles are dispatched through module-level jits: the eager
+# driver then executes the *same compiled pattern* the pipeline traces into
+# its single program (XLA applies rewrites like fusing a width-1 panel's
+# degenerate product into the trailing subtraction's FMA only under jit —
+# op-by-op eager execution would differ from the pipeline in the last ulp),
+# and the jnp path stops re-dispatching op-by-op on every panel.  They note
+# traces under the same ``kernel:<op>`` keys as the Pallas kernels, so the
+# per-call trace deltas in ``_note`` are honest on both kernel paths.
+
+@functools.partial(jax.jit, static_argnames=("next_width",))
+def _ref_trailing_jit(a, q, w, *, next_width: int = 0):
+    _dispatch.note_trace("kernel:trailing_update")
+    return _ref.trailing_update(a, q, w, next_width=next_width)
+
+
+@functools.partial(jax.jit, static_argnames=("split",))
+def _ref_panel_cross_jit(a, *, split: int):
+    _dispatch.note_trace("kernel:panel_cross")
+    return _ref.panel_cross(a, split=split)
+
+
+@functools.partial(jax.jit, static_argnames=("split", "out_width"))
+def _ref_pad_cross_jit(a, *, split: int, out_width: int):
+    _dispatch.note_trace("kernel:pad_cross")
+    return _ref.pad_cross(a, split=split, out_width=out_width)
+
+
+def _trailing_update_raw(a, q, w, *, next_width: int = 0,
+                         use_pallas: bool = False,
+                         interpret: bool | None = None):
+    if use_pallas:
+        return _batched(_trailing_mod.trailing_update, 3)(
+            a, q, w, next_width=next_width, interpret=interpret
+        )
+    return _ref_trailing_jit(a, q, w, next_width=next_width)
+
+
+def _panel_cross_raw(a, *, split: int, use_pallas: bool = False,
+                     interpret: bool | None = None):
+    if use_pallas:
+        return _batched(_trailing_mod.panel_cross, 1)(
+            a, split=split, interpret=interpret
+        )
+    return _ref_panel_cross_jit(a, split=split)
+
+
+def _pad_cross_raw(a, *, split: int, out_width: int, use_pallas: bool = False,
+                   interpret: bool | None = None):
+    if use_pallas:
+        return _batched(_trailing_mod.pad_cross, 1)(
+            a, split=split, out_width=out_width, interpret=interpret
+        )
+    return _ref_pad_cross_jit(a, split=split, out_width=out_width)
 
 
 def trailing_update(a, q, w, *, next_width: int = 0, use_pallas: bool = False,
@@ -139,31 +223,43 @@ def trailing_update(a, q, w, *, next_width: int = 0, use_pallas: bool = False,
 
     Returns ``a_new`` — or ``(a_new, s)`` when ``next_width > 0``.
     """
-    if use_pallas:
-        out = _batched(_trailing_mod.trailing_update, 3)(
-            a, q, w, next_width=next_width, interpret=interpret
-        )
-    else:
-        out = _ref.trailing_update(a, q, w, next_width=next_width)
+    t0 = _pre("trailing_update")
+    out = _trailing_update_raw(
+        a, q, w, next_width=next_width, use_pallas=use_pallas,
+        interpret=interpret,
+    )
     a_new = out[0] if next_width else out
     s_bytes = _nbytes(out[1]) if next_width else 0
-    _traffic.note("trailing_update", sweeps=1,
-                  read_bytes=_nbytes(a) + _nbytes(q) + _nbytes(w),
-                  write_bytes=_nbytes(a_new) + s_bytes)
+    _note("trailing_update", t0, sweeps=1,
+          read_bytes=_nbytes(a) + _nbytes(q) + _nbytes(w),
+          write_bytes=_nbytes(a_new) + s_bytes)
     return out
 
 
 def panel_cross(a, *, split: int, use_pallas: bool = False,
                 interpret: bool | None = None):
     """Pipeline prime for blocked QR: ``S = A[:, :split]ᵀ A`` in one sweep."""
-    out = (
-        _batched(_trailing_mod.panel_cross, 1)(a, split=split,
-                                               interpret=interpret)
-        if use_pallas
-        else _ref.panel_cross(a, split=split)
+    t0 = _pre("panel_cross")
+    out = _panel_cross_raw(
+        a, split=split, use_pallas=use_pallas, interpret=interpret
     )
-    _traffic.note("panel_cross", sweeps=1, read_bytes=_nbytes(a),
-                  write_bytes=_nbytes(out))
+    _note("panel_cross", t0, sweeps=1, read_bytes=_nbytes(a),
+          write_bytes=_nbytes(out))
+    return out
+
+
+def pad_cross(a, *, split: int, out_width: int, use_pallas: bool = False,
+              interpret: bool | None = None):
+    """Fixed-shape pipeline prime: widen A to the padded trailing width and
+    compute ``S = A[:, :split]ᵀ A`` in the same single sweep.  Returns
+    ``(a_pad, s)`` — see :func:`repro.kernels.trailing_update.pad_cross`."""
+    t0 = _pre("pad_cross")
+    out = _pad_cross_raw(
+        a, split=split, out_width=out_width, use_pallas=use_pallas,
+        interpret=interpret,
+    )
+    _note("pad_cross", t0, sweeps=1, read_bytes=_nbytes(a),
+          write_bytes=_nbytes(out[0]) + _nbytes(out[1]))
     return out
 
 

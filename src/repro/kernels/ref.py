@@ -16,6 +16,7 @@ __all__ = [
     "cholesky_qr2",
     "trailing_update",
     "panel_cross",
+    "pad_cross",
 ]
 
 
@@ -40,13 +41,42 @@ def fused_apply_gram(
     return q, gram(q)
 
 
+# XLA CPU lowers dots with an output dimension this narrow to mat-vec
+# strategies whose accumulation order differs from the blocked GEMM used at
+# wider shapes.  The blocked-QR drivers need *width-stable* per-element
+# results (the fixed-shape pipeline computes at the padded maximal width,
+# the eager driver at the true shrinking width — bit-identity between them
+# is hypothesis-gated), so the two trailing-path oracles below pad narrow
+# operands with zero columns up to this floor and slice the result back:
+# values are unchanged, but every shape rides the same GEMM strategy.  The
+# ``optimization_barrier`` keeps XLA's algebraic simplifier from folding
+# the slice back into the dot (restoring the narrow strategy) when the
+# oracle is traced into a larger program such as the scan pipeline.
+_MIN_GEMM_WIDTH = 4
+
+
+def _pad_cols(x: jnp.ndarray, min_width: int) -> jnp.ndarray:
+    pad = min_width - x.shape[-1]
+    if pad <= 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
 def trailing_update(
     a: jnp.ndarray, q: jnp.ndarray, w: jnp.ndarray, *, next_width: int = 0
 ):
     """Oracle for the fused trailing update: ``A_new = A − Q W`` (f32 math,
     stored in A's dtype) and, when ``next_width > 0``, the lookahead
     ``S = A_new[:, :next_width]ᵀ A_new`` of the *stored* (cast) update."""
-    upd = q.astype(jnp.float32) @ w.astype(jnp.float32)
+    from repro.compat import optimization_barrier
+
+    nt = a.shape[-1]
+    w32 = w.astype(jnp.float32)
+    if nt < _MIN_GEMM_WIDTH:
+        wide = q.astype(jnp.float32) @ _pad_cols(w32, _MIN_GEMM_WIDTH)
+        upd = optimization_barrier(wide)[..., :nt]
+    else:
+        upd = q.astype(jnp.float32) @ w32
     a_new = (a.astype(jnp.float32) - upd).astype(a.dtype)
     if not next_width:
         return a_new
@@ -55,8 +85,25 @@ def trailing_update(
 
 def panel_cross(a: jnp.ndarray, *, split: int) -> jnp.ndarray:
     """S = A[:, :split]ᵀ A accumulated in float32.  a: (..., m, n)."""
+    from repro.compat import optimization_barrier
+
     a32 = a.astype(jnp.float32)
-    return jnp.einsum("...mi,...mj->...ij", a32[..., :split], a32)
+    n = a.shape[-1]
+    if split >= _MIN_GEMM_WIDTH and n >= _MIN_GEMM_WIDTH:
+        return jnp.einsum("...mi,...mj->...ij", a32[..., :split], a32)
+    left = _pad_cols(a32[..., :split], _MIN_GEMM_WIDTH)
+    right = _pad_cols(a32, _MIN_GEMM_WIDTH)
+    s = jnp.einsum("...mi,...mj->...ij", left, right)
+    return optimization_barrier(s)[..., :split, :n]
+
+
+def pad_cross(a: jnp.ndarray, *, split: int, out_width: int):
+    """Oracle for the fused pad+cross prime: widen A with zero columns to
+    ``out_width`` and compute the :func:`panel_cross` of the widened copy."""
+    pad = out_width - a.shape[-1]
+    widths = [(0, 0)] * (a.ndim - 1) + [(0, pad)]
+    a_pad = jnp.pad(a, widths)
+    return a_pad, panel_cross(a_pad, split=split)
 
 
 def combine_gram(r1: jnp.ndarray, r2: jnp.ndarray) -> jnp.ndarray:

@@ -20,13 +20,21 @@ Counting happens at Python call time in the ``ops`` wrappers (outside any
 ``jit``), so call the pipeline un-jitted when measuring; the model is the
 same traffic a compiled TPU execution commits to, since the block streaming
 is fixed by the BlockSpecs.
+
+Scope (DESIGN.md §9): per-call accounting is exact for the sim drivers
+(wrappers run per call) and for the scan-compiled blocked-QR pipeline
+(whose entry point notes its own K-sweep totals).  Kernel calls made
+*inside* a cached ``shard_map`` body note at trace time only — a warm
+repeat of those entry points records nothing, because the body never
+re-executes (that the seed noted per call there was an artifact of its
+per-call ``jax.jit(shard)`` rebuild, i.e. of the retrace bug itself).
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 
-__all__ = ["KernelTraffic", "note", "track_traffic"]
+__all__ = ["KernelTraffic", "note", "suppress", "track_traffic"]
 
 
 @dataclasses.dataclass
@@ -59,29 +67,52 @@ class KernelTraffic:
     def total_bytes(self) -> int:
         return self.read_bytes + self.write_bytes
 
+    @property
+    def dispatches(self) -> int:
+        """Compiled-program launches recorded alongside the bytes (each
+        eager kernel wrapper is one jitted call = one device dispatch; the
+        scan-compiled pipeline records 1 for the whole factorization)."""
+        return sum(r["dispatches"] for r in self.records)
+
+    @property
+    def traces(self) -> int:
+        """New jit traces the recorded calls caused (0 on warm calls)."""
+        return sum(r["traces"] for r in self.records)
+
     def as_dict(self) -> dict:
         return {
             "tall_sweeps": self.tall_sweeps,
             "read_bytes": self.read_bytes,
             "write_bytes": self.write_bytes,
+            "dispatches": self.dispatches,
+            "traces": self.traces,
             "ops": [r["op"] for r in self.records],
         }
 
 
 _ACTIVE: list[KernelTraffic] = []
+_SUPPRESS: list[bool] = []
 
 
 def note(op: str, *, sweeps: int = 0, read_bytes: int = 0,
-         write_bytes: int = 0) -> None:
+         write_bytes: int = 0, dispatches: int = 1, traces: int = 0) -> None:
     """Record one kernel invocation into every active tracker (no-op when
-    nothing is tracking — the hot path pays one list check)."""
-    if not _ACTIVE:
+    nothing is tracking — the hot path pays one list check).
+
+    ``dispatches``/``traces`` ride alongside the bytes: a plain wrapper call
+    is one compiled-program launch (default 1); callers that know better —
+    the scan pipeline records its K-panel traffic as several byte records
+    but a single dispatch — pass explicit counts.
+    """
+    if not _ACTIVE or _SUPPRESS:
         return
     rec = {
         "op": op,
         "sweeps": int(sweeps),
         "read_bytes": int(read_bytes),
         "write_bytes": int(write_bytes),
+        "dispatches": int(dispatches),
+        "traces": int(traces),
     }
     for t in _ACTIVE:
         t.records.append(rec)
@@ -97,3 +128,17 @@ def track_traffic():
         yield t
     finally:
         _ACTIVE.remove(t)
+
+
+@contextlib.contextmanager
+def suppress():
+    """Drop :func:`note` calls inside the block.  The scan-compiled pipeline
+    wraps its compiled-function invocation with this: any kernel wrapper
+    reached while *tracing* the body (e.g. a ``cqr2`` local QR) would note
+    once per trace instead of once per panel per call — the pipeline entry
+    point notes its own exact per-call totals instead."""
+    _SUPPRESS.append(True)
+    try:
+        yield
+    finally:
+        _SUPPRESS.pop()

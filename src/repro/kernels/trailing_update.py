@@ -16,6 +16,10 @@ it down to exactly **one** sweep per panel by a lookahead fusion:
     never has to re-read the trailing block at all.
   * :func:`panel_cross` primes the pipeline: one sweep over the initial
     matrix producing ``S = A[:, :split]ᵀ A`` for panel 0.
+  * :func:`pad_cross` is the fixed-shape (scan-compiled) driver's prime:
+    the same sweep additionally emits a copy of A widened to the padded
+    maximal trailing width with in-kernel zeroed pad columns — the column
+    extension of the row-iota edge masking (DESIGN.md §9).
 
 K panels therefore cost exactly K trailing-block sweeps — 1 per panel —
 which the ``general_qr`` bench case hard-gates through the
@@ -43,9 +47,10 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from .backend import resolve_interpret
-from .gram import DEFAULT_BLOCK_ROWS, mask_rows, pick_block_rows
+from .dispatch import note_trace
+from .gram import DEFAULT_BLOCK_ROWS, mask_cols, mask_rows, pick_block_rows
 
-__all__ = ["trailing_update", "panel_cross"]
+__all__ = ["trailing_update", "panel_cross", "pad_cross"]
 
 _CROSS_DIMS = (((0,), (0,)), ((), ()))   # (rows, b)ᵀ @ (rows, n) → (b, n)
 _APPLY_DIMS = (((1,), (0,)), ((), ()))   # (rows, b) @ (b, n) → (rows, n)
@@ -87,6 +92,7 @@ def trailing_update(a, q, w, *, next_width: int = 0,
     next panel's fused Gram + cross product.  ``interpret=None``
     auto-detects the backend.
     """
+    note_trace("kernel:trailing_update")
     interpret = resolve_interpret(interpret)
     m, nt = a.shape
     m2, b = q.shape
@@ -142,6 +148,7 @@ def panel_cross(a, *, split: int, block_rows: int = DEFAULT_BLOCK_ROWS,
     a: (m, n) → (split, n).  ``S[:, :split]`` is panel 0's Gram,
     ``S[:, split:]`` its cross product against the trailing block.
     """
+    note_trace("kernel:panel_cross")
     interpret = resolve_interpret(interpret)
     m, n = a.shape
     assert 0 < split <= n, (split, n)
@@ -154,5 +161,67 @@ def panel_cross(a, *, split: int, block_rows: int = DEFAULT_BLOCK_ROWS,
         in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((split, n), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((split, n), jnp.float32),
+        interpret=interpret,
+    )(a)
+
+
+def _pad_cross_kernel(a_ref, apad_ref, s_ref, *, block_rows: int, m: int,
+                      split: int, n: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    # The input block is read at the widened out_width: columns >= n are
+    # out-of-bounds garbage, zeroed against a column iota — the exact
+    # column analogue of the row-iota edge masking below.
+    a_p = mask_cols(a_ref[...], n)
+    apad_ref[...] = a_p                 # OOB rows dropped on the edge write
+    a_m = mask_rows(a_p, i, block_rows, m)
+    s_ref[...] += lax.dot_general(
+        a_m[:, :split], a_m, _CROSS_DIMS, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("split", "out_width", "block_rows", "interpret")
+)
+def pad_cross(a, *, split: int, out_width: int,
+              block_rows: int = DEFAULT_BLOCK_ROWS,
+              interpret: bool | None = None):
+    """Pipeline prime for the fixed-shape blocked QR: widen A to the padded
+    trailing width and compute ``S = A[:, :split]ᵀ A`` in the **same** sweep.
+
+    a: (m, n) → ``(a_pad (m, out_width) in a's dtype, s (split, out_width)
+    float32)``.  Columns ``>= n`` of both outputs are exact zeros (the
+    column extension of the row-iota edge masking): the scan-compiled
+    driver keeps its trailing block at the maximal width ``K·b``, and zero
+    pad columns ride every later sweep without perturbing the real columns
+    bit-for-bit.  Compared to ``jnp.pad`` + :func:`panel_cross` this saves
+    one full HBM read of the padded copy — A is streamed once, the padded
+    copy and the lookahead accumulator are produced together.
+    """
+    note_trace("kernel:pad_cross")
+    interpret = resolve_interpret(interpret)
+    m, n = a.shape
+    assert 0 < split <= n <= out_width, (split, n, out_width)
+    block_rows = pick_block_rows(m, block_rows)
+    return pl.pallas_call(
+        functools.partial(
+            _pad_cross_kernel, block_rows=block_rows, m=m, split=split, n=n
+        ),
+        grid=(pl.cdiv(m, block_rows),),
+        # the input block is read at the *widened* width: columns >= n are
+        # out-of-bounds and masked in-kernel (mask_cols), like edge rows
+        in_specs=[pl.BlockSpec((block_rows, out_width), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, out_width), lambda i: (i, 0)),
+            pl.BlockSpec((split, out_width), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, out_width), a.dtype),
+            jax.ShapeDtypeStruct((split, out_width), jnp.float32),
+        ],
         interpret=interpret,
     )(a)

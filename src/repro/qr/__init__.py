@@ -20,6 +20,7 @@ from .blocked import (
     BlockedQRResult,
     PanelFaultSchedule,
     PanelReport,
+    blocked_qr_batched,
     blocked_qr_shard_map,
     blocked_qr_sim,
     panel_widths,
@@ -33,6 +34,7 @@ __all__ = [
     "PanelFaultSchedule",
     "PanelReport",
     "TSQRResult",
+    "blocked_qr_batched",
     "blocked_qr_shard_map",
     "blocked_qr_sim",
     "chol_r",

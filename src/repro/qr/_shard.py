@@ -1,0 +1,43 @@
+"""Shared scaffold for the module-level cached ``shard_map`` compiles.
+
+The four compiled shard entry points (TSQR, Gram-butterfly TSQR, and the
+blocked driver's pipeline and general paths) wrap a per-rank body the same
+way: row-sharded input over one mesh axis, every output row-sharded over
+the same axis, optional ``jax.jit``.  Keeping the wrapper here means the
+spec plumbing changes in one place — the builders in :mod:`repro.qr.tsqr`
+and :mod:`repro.qr.blocked` contribute only their bodies and their
+hashable LRU keys.
+
+Traffic-accounting note (:mod:`repro.kernels.traffic`): kernel calls made
+*inside* a shard body note their bytes at trace time, so with these cached
+compiles a warm repeat call records nothing — exact per-call accounting is
+a property of the sim paths and of the pipeline wrapper (which notes its
+own totals); see DESIGN.md §9.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+
+__all__ = ["dummy_q", "shard_compile"]
+
+
+def dummy_q(a_blk) -> jnp.ndarray:
+    """Zero-row placeholder returned when the explicit Q is not wanted (the
+    out_specs arity must not depend on ``compute_q``)."""
+    return jnp.zeros((0, a_blk.shape[-1]), a_blk.dtype)
+
+
+def shard_compile(body, *, mesh, axis: str, n_outputs: int, jit: bool):
+    """``jit(shard_map(body))`` with one row-sharded input and ``n_outputs``
+    outputs sharded over the same axis."""
+    shard = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=P(axis),
+        out_specs=(P(axis),) * n_outputs,
+    )
+    return jax.jit(shard) if jit else shard

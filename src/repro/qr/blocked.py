@@ -37,24 +37,39 @@ the general-matrix paper needs a recovery story at all.  ``valid`` reports
 the *strict survivors* (ranks valid through every reduction with no
 replica fetch); ``reports`` carries the per-panel tolerance verdicts and
 recovery counts.
+
+**Compilation model** (DESIGN.md §9): the eager per-panel loop above is
+the *fault* path.  Fault-free runs auto-dispatch to the scan-compiled
+fixed-shape pipeline — padded maximal trailing width, shifted layout, one
+``lax.scan`` trace for all uniform panels plus a static ragged epilogue —
+which executes the whole factorization as ONE jitted device program,
+bit-identical to the eager driver, with module-level cached compiles
+(zero retrace on repeat calls) and a ``vmap``-batched B-matrix variant
+(:func:`blocked_qr_batched`).  Trace/dispatch counts are measured by
+:mod:`repro.kernels.dispatch` and hard-gated by the ``dispatch`` bench
+case.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from collections.abc import Mapping
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.collective.comm import Comm, ShardMapComm, SimComm
 from repro.collective.engine import ft_allreduce, replica_fetch
 from repro.collective.faults import FaultSpec, within_tolerance
 from repro.collective.plan import Plan, make_plan
-from repro.compat import shard_map
+from repro.kernels import dispatch as _dispatch
 from repro.kernels import ops as kops
+from repro.kernels import traffic as _traffic
 
+from ._shard import dummy_q, shard_compile
 from .panel import PanelFactorizer, chol_r
 
 __all__ = [
@@ -62,9 +77,12 @@ __all__ = [
     "PanelReport",
     "BlockedQRResult",
     "blocked_qr_sim",
+    "blocked_qr_batched",
     "blocked_qr_shard_map",
     "panel_widths",
 ]
+
+PIPELINE_NAME = "blocked_qr_pipeline"    # trace/dispatch counter key
 
 
 def panel_widths(n: int, panel_width: int) -> tuple[int, ...]:
@@ -153,6 +171,20 @@ class BlockedQRResult:
         return all(rep.recoverable for rep in self.reports)
 
 
+# Registered as a pytree (arrays as leaves, host reports as static aux) so
+# results flow through jax transformations — `jax.vmap(blocked_qr_sim …)`
+# batches B independent factorizations directly.
+jax.tree_util.register_pytree_node(
+    BlockedQRResult,
+    lambda res: (
+        (res.r, res.valid, res.q), (res.reports, res.panel_width)
+    ),
+    lambda aux, ch: BlockedQRResult(
+        r=ch[0], valid=ch[1], q=ch[2], reports=aux[0], panel_width=aux[1]
+    ),
+)
+
+
 # ---------------------------------------------------------------------------
 # Host-side planning
 # ---------------------------------------------------------------------------
@@ -219,13 +251,27 @@ def _build_reports(
 # under SimComm, or be per-rank local blocks under ShardMapComm)
 # ---------------------------------------------------------------------------
 
-def _solve_w(r_tot, c_sum):
-    """W = R_totᵀ⁻¹ C  (C = Σ A_panelᵀ A_trail, so W = Q_kᵀ A_trail)."""
+def _solve_w(r_tot, c_sum, pad_to: int | None = None):
+    """W = R_totᵀ⁻¹ C  (C = Σ A_panelᵀ A_trail, so W = Q_kᵀ A_trail).
+
+    ``pad_to`` right-pads the RHS with zero columns to a canonical width
+    before solving (and slices the result back).  XLA's *batched*
+    triangular solve picks its lowering by RHS shape, so per-column results
+    are not width-stable; both blocked drivers solve every panel at the
+    same padded maximal width ``n_pad − b``, which makes the eager driver
+    and the fixed-shape pipeline solve bit-identical by construction (the
+    appended zero columns solve to exact zeros).
+    """
     import jax.scipy.linalg as jsl
 
-    return jsl.solve_triangular(
+    nt = c_sum.shape[-1]
+    if pad_to is not None and pad_to > nt:
+        widths = [(0, 0)] * (c_sum.ndim - 1) + [(0, pad_to - nt)]
+        c_sum = jnp.pad(c_sum, widths)
+    w = jsl.solve_triangular(
         jnp.swapaxes(r_tot, -1, -2), c_sum, lower=True
     )
+    return w[..., :nt] if pad_to is not None and pad_to > nt else w
 
 
 def _blocked_body(
@@ -241,6 +287,7 @@ def _blocked_body(
     interpret: bool | None,
 ):
     m_local, n = a.shape[-2], a.shape[-1]
+    n_pad = widths[0] * len(widths)
     kw = dict(use_pallas=use_pallas, interpret=interpret)
     r_full = jnp.zeros(a.shape[:-2] + (n, n), jnp.float32)
     valid = comm.take(np.ones(comm.n_ranks, dtype=bool))
@@ -282,7 +329,7 @@ def _blocked_body(
             valid = valid & valid_w
             if rep.recovered_w:
                 c_sum = replica_fetch(c_sum, comm, rep.plan_w.final_valid)
-            w = _solve_w(r_tot, c_sum)
+            w = _solve_w(r_tot, c_sum, pad_to=n_pad - widths[0])
             r_full = r_full.at[..., c0:c0 + b, c0:].set(
                 jnp.concatenate([r_tot, w], axis=-1)
             )
@@ -296,6 +343,220 @@ def _blocked_body(
         c0 += b
     q = jnp.concatenate(q_cols, axis=-1) if compute_q else None
     return r_full, valid, q
+
+
+# ---------------------------------------------------------------------------
+# The scan-compiled fixed-shape pipeline (fault-free hot path)
+#
+# The eager driver above re-traces per panel: the trailing width shrinks, so
+# K panels mean K distinct shapes, K compilations, and O(K) device
+# dispatches.  The pipeline removes the shape dependence with a *shifted*
+# layout: the working matrix stays at the padded maximal width n_pad = K·b
+# (zero columns on the right, produced in-kernel by the column-masked
+# ``pad_cross`` prime), and after each panel the trailing block is shifted
+# left by b — the live panel is always columns [0, b), the trailing block
+# always columns [b, n_pad).  Every scan iteration therefore has identical
+# shapes, one ``lax.scan`` trace covers all K−1 uniform panels (the ragged
+# last panel is a static epilogue in the same program), and the whole
+# factorization compiles to ONE device program that never retraces.  Zero
+# pad columns ride every sweep without perturbing the real columns: the
+# results are bit-identical to the eager driver (hypothesis-swept).
+# ---------------------------------------------------------------------------
+
+def _plans_fault_free(reports: tuple[PanelReport, ...]) -> bool:
+    """Pipeline eligibility: every collective of every panel rides the
+    straight-line fast path (also excludes ``tree``, whose fault-free plans
+    leave non-root ranks invalid — the general driver handles it)."""
+    return all(
+        rep.plan_r.is_fault_free
+        and (rep.plan_w is None or rep.plan_w.is_fault_free)
+        for rep in reports
+    )
+
+
+def _resolve_pipeline(pipeline: str, reports) -> bool:
+    """Validate the ``pipeline`` mode and decide the path: True → the
+    scan-compiled single program, False → the eager general driver."""
+    if pipeline not in ("auto", "on", "off"):
+        raise ValueError(
+            f"pipeline must be 'auto', 'on' or 'off', got {pipeline!r}"
+        )
+    fault_free = _plans_fault_free(reports)
+    if pipeline == "on" and not fault_free:
+        raise ValueError(
+            "pipeline='on' requires fault-free plans (the scan-compiled "
+            "program has no validity machinery); faulty plans route to the "
+            "general driver under pipeline='auto'"
+        )
+    return fault_free and pipeline != "off"
+
+
+def _pipeline_body(
+    a,
+    comm: Comm,
+    plan: Plan,
+    widths: tuple[int, ...],
+    pf: PanelFactorizer,
+    *,
+    local_r: str,
+    compute_q: bool,
+    use_pallas: bool,
+    interpret: bool | None,
+):
+    """The traced single-program body (backend-agnostic like
+    :func:`_blocked_body`; ``plan`` is the one fault-free plan every
+    collective of every panel shares)."""
+    b, k_panels, b_last = widths[0], len(widths), widths[-1]
+    n = a.shape[-1]
+    n_pad = b * k_panels
+    kw = dict(use_pallas=use_pallas, interpret=interpret)
+
+    def panel_qr(panel, g):
+        if local_r == "chol":
+            r_loc = chol_r(g)
+        else:
+            r_loc = pf.local_fn()(panel.astype(jnp.float32))
+        r_kk, _ = pf.reduce_r_prepared(r_loc, comm, plan)
+        q_k, r_tot = pf.form_q(panel.astype(jnp.float32), r_kk, comm)
+        return q_k.astype(a.dtype), r_tot
+
+    # -- prime: padded working copy + panel-0 lookahead, one sweep ----------
+    if n_pad == n:
+        awork = a
+        s = kops._panel_cross_raw(a, split=b, **kw)
+    else:
+        awork, s = kops._pad_cross_raw(a, split=b, out_width=n_pad, **kw)
+
+    # -- K−1 uniform panels: one traced body, scanned -----------------------
+    def step(carry, _):
+        awork, s = carry
+        q_k, r_tot = panel_qr(awork[..., :, :b], s[..., :, :b])
+        c_sum, _ = ft_allreduce(s[..., :, b:], comm, op="sum", plan=plan)
+        w = _solve_w(r_tot, c_sum)
+        a_new, s_new = kops._trailing_update_raw(
+            awork[..., :, b:], q_k, w.astype(a.dtype), next_width=b, **kw
+        )
+        # shift left by b: drop the finished panel, keep the width with
+        # fresh zero columns (the pad stays exactly zero inductively).
+        carry = (
+            jnp.concatenate([a_new, jnp.zeros_like(awork[..., :, :b])], -1),
+            jnp.concatenate([s_new, jnp.zeros_like(s[..., :, :b])], -1),
+        )
+        r_row = jnp.concatenate([r_tot, w], axis=-1)       # (…, b, n_pad)
+        return carry, ((r_row, q_k) if compute_q else r_row)
+
+    if k_panels > 1:
+        (awork, s), ys = lax.scan(step, (awork, s), None, length=k_panels - 1)
+        r_rows = ys[0] if compute_q else ys
+        q_cols = ys[1] if compute_q else None
+
+    # -- ragged epilogue: the last panel (static, no trailing update) -------
+    q_last, r_last = panel_qr(
+        awork[..., :, :b_last], s[..., :b_last, :b_last]
+    )
+
+    # -- reassemble R (and Q) in original column coordinates ----------------
+    r_full = jnp.zeros(a.shape[:-2] + (n, n), jnp.float32)
+    for k in range(k_panels - 1):
+        c0 = k * b
+        r_full = r_full.at[..., c0:c0 + b, c0:].set(
+            r_rows[k][..., :, :n - c0]
+        )
+    c0 = (k_panels - 1) * b
+    r_full = r_full.at[..., c0:, c0:].set(r_last)
+    q = None
+    if compute_q:
+        q = jnp.concatenate(
+            [q_cols[k] for k in range(k_panels - 1)] + [q_last], axis=-1
+        )
+    valid = comm.take(np.ones(comm.n_ranks, dtype=bool))
+    return r_full, valid, q
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_sim_pipeline(
+    p: int,
+    variant: str,
+    widths: tuple[int, ...],
+    pf: PanelFactorizer,
+    local_r: str,
+    compute_q: bool,
+    use_pallas: bool,
+    interpret: bool | None,
+    batched: bool,
+):
+    """One compiled program per static configuration; the jit cache under it
+    keys on the payload's (treedef, shapes, dtypes) — repeat calls with
+    identical shapes perform zero new traces (CI retrace-guarded)."""
+    comm = SimComm(p)
+    plan = make_plan(variant, p)
+
+    def fn(a):
+        _dispatch.note_trace(PIPELINE_NAME)
+        return _pipeline_body(
+            a, comm, plan, widths, pf, local_r=local_r, compute_q=compute_q,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+
+    return jax.jit(jax.vmap(fn) if batched else fn)
+
+
+def _note_pipeline(shape, dtype, widths, traced: int) -> None:
+    """Per-call traffic/dispatch accounting for the pipeline (the kernels
+    inside the scan are traced once but *execute* once per panel, so the
+    wrapper records the exact per-call totals: K sweeps, 1 dispatch).  Only
+    the trailing path is modeled — a ``cqr2``/``cqr2_pallas`` local QR adds
+    narrow (m×b) panel-local sweeps that are not recorded (their wrappers'
+    own notes are suppressed at trace time; the eager driver remains the
+    reference for panel-local accounting)."""
+    _dispatch.note_dispatch(PIPELINE_NAME)
+    lead = int(np.prod(shape[:-2], dtype=np.int64))
+    m, n = shape[-2], shape[-1]
+    b, k_panels = widths[0], len(widths)
+    n_pad = b * k_panels
+    it = jnp.dtype(dtype).itemsize
+    if n_pad == n:
+        recs = [("panel_cross", lead * m * n * it, lead * b * n * 4)]
+    else:
+        recs = [(
+            "pad_cross",
+            lead * m * n * it,
+            lead * (m * n_pad * it + b * n_pad * 4),
+        )]
+    nt = n_pad - b
+    for _ in range(k_panels - 1):
+        recs.append((
+            "trailing_update",
+            lead * (m * nt * it + m * b * it + b * nt * it),
+            lead * (m * nt * it + b * nt * 4),
+        ))
+    first = True
+    for op, read, write in recs:
+        _traffic.note(
+            op, sweeps=1, read_bytes=read, write_bytes=write,
+            dispatches=1 if first else 0, traces=traced if first else 0,
+        )
+        first = False
+
+
+def _run_sim_pipeline(
+    a, variant, widths, pf, *,
+    local_r, compute_q, use_pallas, interpret, batched=False,
+):
+    fun = _compiled_sim_pipeline(
+        a.shape[-3], variant, widths, pf, local_r, compute_q,
+        use_pallas, interpret, batched,
+    )
+    t0 = _dispatch.trace_count(PIPELINE_NAME)
+    # suppress the wrappers' own notes while the body traces (a cqr2 local
+    # QR would otherwise record phantom once-per-trace kernel launches);
+    # _note_pipeline records the exact per-call totals below.
+    with _traffic.suppress(), _dispatch.suppress():
+        out = fun(a)
+    _note_pipeline(
+        a.shape, a.dtype, widths, _dispatch.trace_count(PIPELINE_NAME) - t0
+    )
+    return out
 
 
 def _setup(
@@ -351,21 +612,125 @@ def blocked_qr_sim(
     use_pallas: bool = False,
     interpret: bool | None = None,
     recover: str = "replica",
+    pipeline: str = "auto",
 ) -> BlockedQRResult:
     """Single-device simulation: ``a_blocks`` is (P, m_local, n) — the
-    general-matrix analogue of :func:`repro.qr.tsqr.tsqr_sim`."""
+    general-matrix analogue of :func:`repro.qr.tsqr.tsqr_sim`.
+
+    ``pipeline`` — ``"auto"`` (default) compiles fault-free runs into the
+    single-dispatch scan pipeline and falls back to the eager per-panel
+    driver whenever any plan carries faults (the host-replanned general
+    path); ``"on"`` demands the pipeline (raises on faulty plans);
+    ``"off"`` forces the eager driver (the bit-identity oracle).
+    """
     p, m_local, n = a_blocks.shape
     widths, reports, pf = _setup(
         m_local, n, panel_width, variant, p, faults, local_r, reorth, recover
     )
-    r, valid, q = _blocked_body(
-        a_blocks, SimComm(p), reports, widths, pf,
-        local_r=local_r, compute_q=compute_q, use_pallas=use_pallas,
-        interpret=interpret,
+    if _resolve_pipeline(pipeline, reports):
+        r, valid, q = _run_sim_pipeline(
+            a_blocks, variant, widths, pf, local_r=local_r,
+            compute_q=compute_q, use_pallas=use_pallas, interpret=interpret,
+        )
+    else:
+        r, valid, q = _blocked_body(
+            a_blocks, SimComm(p), reports, widths, pf,
+            local_r=local_r, compute_q=compute_q, use_pallas=use_pallas,
+            interpret=interpret,
+        )
+    return BlockedQRResult(
+        r=r, valid=valid, q=q, reports=reports, panel_width=panel_width
+    )
+
+
+def blocked_qr_batched(
+    a_batch,
+    *,
+    panel_width: int,
+    variant: str = "redundant",
+    compute_q: bool = False,
+    local_r: str = "chol",
+    reorth: int = 1,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> BlockedQRResult:
+    """B independent factorizations in **one** device dispatch.
+
+    ``a_batch`` is (B, P, m_local, n): B user matrices, each row-blocked
+    over the same P simulated ranks.  The scan pipeline is ``vmap``-ped
+    over the leading axis inside one compiled program, so serving B
+    requests costs one launch.  Each element matches
+    :func:`blocked_qr_sim` on that matrix to ~1 ulp of the triangular
+    solves (XLA's *batched* triangular-solve lowering reorders intra-solve
+    arithmetic, so the agreement is fp-tight rather than bitwise — the
+    ``dispatch`` bench case gates it hard; see DESIGN.md §9).  Fault-free
+    only (a real fleet replans at step boundaries; faulted batches go
+    matrix-by-matrix through the general driver).  Returns a result with
+    leading (B,) axes on ``r``/``valid`` (and ``q``).
+    """
+    if a_batch.ndim != 4:
+        raise ValueError(
+            f"a_batch must be (B, P, m_local, n), got shape {a_batch.shape}"
+        )
+    _, p, m_local, n = a_batch.shape
+    widths, reports, pf = _setup(
+        m_local, n, panel_width, variant, p, None, local_r, reorth, "replica"
+    )
+    if not _plans_fault_free(reports):
+        raise ValueError(
+            f"variant {variant!r} is not pipeline-eligible (its fault-free "
+            "plans leave ranks invalid, which the scan-compiled program has "
+            "no machinery to track); batch via jax.vmap over blocked_qr_sim "
+            "instead"
+        )
+    r, valid, q = _run_sim_pipeline(
+        a_batch, variant, widths, pf, local_r=local_r, compute_q=compute_q,
+        use_pallas=use_pallas, interpret=interpret, batched=True,
     )
     return BlockedQRResult(
         r=r, valid=valid, q=q, reports=reports, panel_width=panel_width
     )
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_shard_pipeline(
+    mesh, axis: str, p: int, variant: str, widths, pf,
+    local_r: str, want_q: bool, use_pallas: bool, interpret, jit: bool,
+):
+    comm = ShardMapComm(p, axis)
+    plan = make_plan(variant, p)
+
+    def body(a_blk):
+        _dispatch.note_trace(PIPELINE_NAME)
+        r, valid, q = _pipeline_body(
+            a_blk, comm, plan, widths, pf, local_r=local_r, compute_q=want_q,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+        return r[None], valid[None], q if want_q else dummy_q(a_blk)
+
+    return shard_compile(body, mesh=mesh, axis=axis, n_outputs=3, jit=jit)
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_shard_general(
+    mesh, axis: str, p: int, reports, widths, pf,
+    local_r: str, want_q: bool, use_pallas: bool, interpret, jit: bool,
+):
+    """The host-replanned general driver under ``shard_map`` — cached at
+    module level (the old per-call ``jax.jit(shard)`` rebuilt the wrapper
+    and discarded the compile cache on every invocation)."""
+    comm = ShardMapComm(p, axis)
+
+    def body(a_blk):
+        _dispatch.note_trace("blocked_qr_shard_map")
+        r, valid, q = _blocked_body(
+            a_blk, comm, reports, widths, pf,
+            local_r=local_r, compute_q=want_q, use_pallas=use_pallas,
+            interpret=interpret,
+        )
+        return r[None], valid[None], q if want_q else dummy_q(a_blk)
+
+    return shard_compile(body, mesh=mesh, axis=axis, n_outputs=3, jit=jit)
 
 
 def blocked_qr_shard_map(
@@ -383,42 +748,44 @@ def blocked_qr_shard_map(
     interpret: bool | None = None,
     recover: str = "replica",
     jit: bool = True,
+    pipeline: str = "auto",
 ) -> BlockedQRResult:
     """Production path: A (m, n) row-sharded over ``mesh`` axis ``axis``.
 
     Same body as :func:`blocked_qr_sim` under ``shard_map`` — exchanges
     lower to ``lax.ppermute``, replica fetches ride the same wires.
-    Returns r (P, n, n) (one copy per rank), valid (P,), q (m, n)
+    Fault-free runs compile into the single-dispatch scan pipeline
+    (``pipeline`` semantics as in :func:`blocked_qr_sim`); faulted plans
+    route to the general driver.  Both programs are cached at module level,
+    so repeat calls with identical statics and shapes perform zero new
+    traces.  Returns r (P, n, n) (one copy per rank), valid (P,), q (m, n)
     row-sharded or None.
     """
-    from jax.sharding import PartitionSpec as P
-
     p = mesh.shape[axis]
     m, n = a_global.shape
     widths, reports, pf = _setup(
         m // p, n, panel_width, variant, p, faults, local_r, reorth, recover
     )
-    comm = ShardMapComm(p, axis)
-    want_q = compute_q
-
-    def body(a_blk):
-        r, valid, q = _blocked_body(
-            a_blk, comm, reports, widths, pf,
-            local_r=local_r, compute_q=want_q, use_pallas=use_pallas,
-            interpret=interpret,
+    if _resolve_pipeline(pipeline, reports):
+        fun = _compiled_shard_pipeline(
+            mesh, axis, p, variant, widths, pf, local_r, compute_q,
+            use_pallas, interpret, jit,
         )
-        out_q = q if want_q else jnp.zeros((0, n), a_blk.dtype)
-        return r[None], valid[None], out_q
-
-    shard = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=P(axis),
-        out_specs=(P(axis), P(axis), P(axis)),
-    )
-    fun = jax.jit(shard) if jit else shard
-    r, valid, q = fun(a_global)
+        t0 = _dispatch.trace_count(PIPELINE_NAME)
+        with _traffic.suppress(), _dispatch.suppress():
+            r, valid, q = fun(a_global)
+        _note_pipeline(
+            (p, m // p, n), a_global.dtype, widths,
+            _dispatch.trace_count(PIPELINE_NAME) - t0,
+        )
+    else:
+        fun = _compiled_shard_general(
+            mesh, axis, p, reports, widths, pf, local_r, compute_q,
+            use_pallas, interpret, jit,
+        )
+        _dispatch.note_dispatch("blocked_qr_shard_map")
+        r, valid, q = fun(a_global)
     return BlockedQRResult(
-        r=r, valid=valid, q=(q if want_q else None),
+        r=r, valid=valid, q=(q if compute_q else None),
         reports=reports, panel_width=panel_width,
     )

@@ -26,23 +26,31 @@ Hot-path notes (DESIGN.md §7): fault-free plans ride the engine's
 straight-line fast path automatically, and the CQR2 local QRs use the
 fused 2-sweep R-only pipeline (``cholesky_qr2_r``) — the butterfly only
 carries R, so no tall intermediate is ever materialized.
+
+Compilation model (DESIGN.md §9): the ``shard_map`` entry points are
+module-level cached compiles keyed on ``(mesh, plan, factorizer, …)`` —
+the seed rebuilt ``jax.jit(shard)`` on every call, discarding the compile
+cache — so repeat calls with identical statics and shapes perform zero
+new traces (CI retrace-guarded).  :class:`TSQRResult` is a registered
+pytree, so ``jax.vmap(tsqr_sim …)`` batches B independent factorizations.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.collective.combiners import posdiag as _posdiag
 from repro.collective.comm import ShardMapComm, SimComm
 from repro.collective.engine import ft_allreduce
 from repro.collective.faults import FaultSpec
 from repro.collective.plan import Plan, make_plan
-from repro.compat import shard_map
+from repro.kernels import dispatch as _dispatch
 
+from ._shard import dummy_q, shard_compile
 from .panel import PanelFactorizer, form_q
 
 __all__ = [
@@ -71,6 +79,56 @@ class TSQRResult:
     valid: jax.Array
     q: jax.Array | None
     plan: Plan
+
+
+# Registered as a pytree (arrays as leaves, the host plan as static aux) so
+# results flow through jax transformations — `jax.vmap(tsqr_sim …)` batches
+# B independent tall-skinny factorizations directly.
+jax.tree_util.register_pytree_node(
+    TSQRResult,
+    lambda res: ((res.r, res.valid, res.q), (res.plan,)),
+    lambda aux, ch: TSQRResult(r=ch[0], valid=ch[1], q=ch[2], plan=aux[0]),
+)
+
+
+# ---------------------------------------------------------------------------
+# Module-level compiled programs (zero-retrace: the old per-call
+# ``jax.jit(shard)`` rebuilt the wrapper — and discarded the compile cache —
+# on every invocation; these builders key on the hashable statics and the
+# jit cache underneath keys on the payload shapes)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _compiled_tsqr_shard(mesh, axis: str, plan: Plan, pf: PanelFactorizer,
+                         want_q: bool, jit: bool):
+    comm = ShardMapComm(plan.n_ranks, axis)
+
+    def body(a_blk):
+        _dispatch.note_trace("tsqr_shard_map")
+        r, valid = pf.reduce_r(a_blk, comm, plan)
+        q = None
+        if want_q:
+            q, r = pf.form_q(a_blk, r, comm)
+        return r[None], valid[None], q if want_q else dummy_q(a_blk)
+
+    return shard_compile(body, mesh=mesh, axis=axis, n_outputs=3, jit=jit)
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_tsqr_gram_shard(mesh, axis: str, p: int, reorth: int,
+                              jit: bool):
+    comm = ShardMapComm(p, axis)
+
+    def body(a_blk):
+        _dispatch.note_trace("tsqr_gram_shard_map")
+        a32 = a_blk.astype(jnp.float32)
+        g = jnp.einsum("mi,mj->ij", a32, a32)
+        g, _ = ft_allreduce(g, comm, op="gram_sum")
+        r = _posdiag(jnp.swapaxes(jnp.linalg.cholesky(g), -1, -2))
+        q, r = form_q(a_blk, r, comm, reorth)
+        return r[None], q
+
+    return shard_compile(body, mesh=mesh, axis=axis, n_outputs=2, jit=jit)
 
 
 # ---------------------------------------------------------------------------
@@ -136,23 +194,8 @@ def tsqr_gram_shard_map(
     certified for κ(A) ≲ 1/√ε like CQR2.
     """
     p = mesh.shape[axis]
-    comm = ShardMapComm(p, axis)
-
-    def body(a_blk):
-        a32 = a_blk.astype(jnp.float32)
-        g = jnp.einsum("mi,mj->ij", a32, a32)
-        g, _ = ft_allreduce(g, comm, op="gram_sum")
-        r = _posdiag(jnp.swapaxes(jnp.linalg.cholesky(g), -1, -2))
-        q, r = form_q(a_blk, r, comm, reorth)
-        return r[None], q
-
-    shard = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=P(axis),
-        out_specs=(P(axis), P(axis)),
-    )
-    fun = jax.jit(shard) if jit else shard
+    fun = _compiled_tsqr_gram_shard(mesh, axis, p, reorth, jit)
+    _dispatch.note_dispatch("tsqr_gram_shard_map")
     r, q = fun(a_global)
     return TSQRResult(r=r, valid=jnp.ones((p,), bool), q=q,
                       plan=make_plan("redundant", p))
@@ -186,27 +229,10 @@ def tsqr_shard_map(
             "compute_q requires an all-valid plan (fault-free, or "
             "self-healing within tolerance)"
         )
-    comm = ShardMapComm(p, axis)
     pf = PanelFactorizer(local_qr=local_qr, reorth=reorth)
-    want_q = compute_q
-
-    def body(a_blk):
-        a = a_blk  # (m_local, n)
-        r, valid = pf.reduce_r(a, comm, plan)
-        q = None
-        if want_q:
-            q, r = pf.form_q(a, r, comm)
-        out_q = q if want_q else jnp.zeros((0, a.shape[-1]), a.dtype)
-        return r[None], valid[None], out_q
-
-    shard = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=P(axis),
-        out_specs=(P(axis), P(axis), P(axis)),
-    )
-    fun = jax.jit(shard) if jit else shard
+    fun = _compiled_tsqr_shard(mesh, axis, plan, pf, compute_q, jit)
+    _dispatch.note_dispatch("tsqr_shard_map")
     r, valid, q = fun(a_global)
     return TSQRResult(
-        r=r, valid=valid, q=(q if want_q else None), plan=plan
+        r=r, valid=valid, q=(q if compute_q else None), plan=plan
     )

@@ -88,17 +88,26 @@ def test_q_factor_orthonormal_and_reconstructs(rng):
 def test_one_trailing_sweep_per_panel(rng):
     """THE HBM claim: K panels cost exactly K trailing-block sweeps (the
     prime cross + one fused update per non-final panel), on both the jnp
-    and Pallas paths."""
+    and Pallas paths, for both the scan pipeline (whose prime is the
+    column-padded ``pad_cross``) and the eager driver."""
     blocks = _blocks(rng, 4, 32, 20)
     for use_pallas in (False, True):
-        with traffic.track_traffic() as t:
-            res = blocked_qr_sim(
-                jnp.asarray(blocks), panel_width=6, use_pallas=use_pallas
-            )
-        assert t.sweeps_of("panel_cross", "trailing_update") == res.n_panels
-        cross = [r for r in t.records if r["op"] == "panel_cross"]
-        upd = [r for r in t.records if r["op"] == "trailing_update"]
-        assert len(cross) == 1 and len(upd) == res.n_panels - 1
+        for pipeline in ("auto", "off"):
+            with traffic.track_traffic() as t:
+                res = blocked_qr_sim(
+                    jnp.asarray(blocks), panel_width=6,
+                    use_pallas=use_pallas, pipeline=pipeline,
+                )
+            assert t.sweeps_of(
+                "panel_cross", "pad_cross", "trailing_update"
+            ) == res.n_panels
+            cross = [r for r in t.records
+                     if r["op"] in ("panel_cross", "pad_cross")]
+            upd = [r for r in t.records if r["op"] == "trailing_update"]
+            assert len(cross) == 1 and len(upd) == res.n_panels - 1
+            # the pipeline is one compiled program: 1 dispatch total
+            expect_dispatch = 1 if pipeline == "auto" else res.n_panels
+            assert t.dispatches == expect_dispatch
 
 
 def test_pallas_matches_jnp_path(rng):
