@@ -1,0 +1,15 @@
+"""Thin shim — logic lives in :mod:`repro.bench.cases.overlap` and is
+registered as the ``overlap`` bench case (``python -m repro.bench run``),
+hard-gating the one-butterfly-per-panel claims: fused panel reductions
+spend exactly ``K·log2 P`` collective rounds (vs the two-butterfly
+driver's ``(2K−1)·log2 P``), the stacked wire bytes match
+``Plan.bytes_on_wire_stacked`` to the byte, all ``K−1`` steady-state
+panels overlap their reduction with the previous trailing sweep, and the
+fused pipeline stays one zero-retrace device program bit-compatible with
+the eager two-butterfly driver.
+
+Run with ``PYTHONPATH=src`` for the standalone numbers."""
+from repro.bench.cases.overlap import case, main, run  # noqa: F401
+
+if __name__ == "__main__":
+    raise SystemExit(main())

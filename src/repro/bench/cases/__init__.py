@@ -11,6 +11,7 @@ from . import (  # noqa: F401
     dispatch,
     general_qr,
     kernels,
+    overlap,
     powersgd,
     robustness,
     roofline,

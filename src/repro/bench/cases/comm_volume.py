@@ -128,6 +128,61 @@ def _observed_matches_plan(p: int, n_cols: int) -> bool:
         expect = plan.bytes_on_wire(n_cols, 4) + plan.message_count()
         if st.payload_bytes != expect:
             return False
+    return _observed_matches_plan_stacked(p, n_cols)
+
+
+def _observed_matches_plan_stacked(p: int, n_cols: int) -> bool:
+    """Stacked / mixed multi-leaf payloads: per-leaf wire packing.
+
+    A ``stacked("gram_sum", "sum")`` payload must ship its symmetric leaf
+    packed and its rectangular leaf dense in the *same* message — the old
+    all-or-nothing ``wire_symmetric`` rule shipped every leaf dense the
+    moment any leaf was rectangular.  Gated against
+    ``Plan.bytes_on_wire_stacked``, which prices exactly that per-leaf
+    encoding; ``gram_sum`` over a mixed pytree must also pack only the
+    leaves that qualify."""
+    import jax.numpy as jnp
+
+    from repro.collective import (
+        InstrumentedComm,
+        SimComm,
+        execute_plan,
+        plan_is_fault_free,
+        stacked,
+    )
+
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(p, n_cols, n_cols)).astype(np.float32))
+    sym = jnp.einsum("pmi,pmj->pij", x, x)
+    rect = jnp.asarray(
+        rng.normal(size=(p, n_cols, 2 * n_cols)).astype(np.float32)
+    )
+
+    def observed(payload, plan, op, fast):
+        ic = InstrumentedComm(SimComm(p))
+        execute_plan(payload, ic, plan, op, fast=fast)
+        return ic.stats
+
+    fused = stacked("gram_sum", "sum")
+    leaves = [(n_cols, n_cols, 4, True), (n_cols, 2 * n_cols, 4, False)]
+    for variant in ("tree", "redundant", "replace", "selfhealing"):
+        plan = make_plan(variant, p)
+        expect = plan.bytes_on_wire_stacked(leaves)
+        # stacked payload, auto dispatch (fast path for fault-free plans)
+        st = observed((sym, rect), plan, fused, None)
+        validity = 0 if plan_is_fault_free(plan) else plan.message_count()
+        if st.payload_bytes != expect + validity:
+            return False
+        if st.messages != plan.message_count():
+            return False
+        # forced general path: + 1 validity byte per message
+        st = observed((sym, rect), plan, fused, False)
+        if st.payload_bytes != expect + plan.message_count():
+            return False
+        # plain gram_sum over a mixed pytree packs exactly the square leaf
+        st = observed({"g": sym, "c": rect}, plan, "gram_sum", None)
+        if st.payload_bytes != expect + validity:
+            return False
     return True
 
 

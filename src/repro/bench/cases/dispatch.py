@@ -272,11 +272,22 @@ def guard() -> int:
     checks = [
         ("blocked_qr_pipeline",
          lambda: blocked_qr_sim(a, panel_width=12, pipeline="on")),
+        # fused (stacked-payload) and two-butterfly pipelines compile into
+        # distinct cached programs — guard both schedules
+        ("blocked_qr_pipeline",
+         lambda: blocked_qr_sim(a, panel_width=12, pipeline="on",
+                                fuse="on")),
+        ("blocked_qr_pipeline",
+         lambda: blocked_qr_sim(a, panel_width=12, pipeline="on",
+                                fuse="off")),
         ("blocked_qr_pipeline",
          lambda: blocked_qr_batched(ab, panel_width=12)),
         ("blocked_qr_pipeline",
          lambda: blocked_qr_shard_map(
              flat, mesh=mesh, axis="x", panel_width=8)),
+        ("blocked_qr_pipeline",
+         lambda: blocked_qr_shard_map(
+             flat, mesh=mesh, axis="x", panel_width=8, fuse="off")),
         ("tsqr_shard_map",
          lambda: tsqr_shard_map(flat, mesh=mesh, axis="x")),
         ("tsqr_gram_shard_map",

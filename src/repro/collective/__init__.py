@@ -13,7 +13,8 @@ into one subsystem:
   * :mod:`~repro.collective.plan`      — host-side routing for the four
     variants (tree / redundant / replace / selfhealing) + wire accounting;
   * :mod:`~repro.collective.combiners` — the pluggable combine algebra
-    (``qr_combine``, ``sum``, ``mean``, ``max``, ``gram_sum``);
+    (``qr_combine``, ``sum``, ``mean``, ``max``, ``gram_sum``, and the
+    ``stacked`` family fusing several reductions under one plan);
   * :mod:`~repro.collective.engine`    — ``execute_plan`` / ``ft_allreduce``,
     the plan executor with validity threading and self-healing restores.
 
@@ -30,10 +31,12 @@ from .combiners import (
     MaxCombiner,
     MeanCombiner,
     QRCombiner,
+    StackedCombiner,
     SumCombiner,
     get_combiner,
     posdiag,
     qr_r,
+    stacked,
 )
 from .comm import Comm, ShardMapComm, SimComm
 from .engine import (
@@ -46,7 +49,7 @@ from .engine import (
 from .faults import NEVER, FaultSpec, tolerance, total_tolerance, within_tolerance
 from .instrument import CommStats, InstrumentedComm
 from .packing import pack_sym, unpack_sym
-from .plan import VARIANTS, Plan, Step, ilog2, make_plan, payload_numel
+from .plan import VARIANTS, Plan, Step, ilog2, leaf_bytes, make_plan, payload_numel
 
 __all__ = [
     "COMBINERS",
@@ -63,6 +66,7 @@ __all__ = [
     "QRCombiner",
     "ShardMapComm",
     "SimComm",
+    "StackedCombiner",
     "Step",
     "SumCombiner",
     "VARIANTS",
@@ -71,12 +75,14 @@ __all__ = [
     "ft_allreduce_jit",
     "get_combiner",
     "ilog2",
+    "leaf_bytes",
     "make_plan",
     "pack_sym",
     "payload_numel",
     "plan_is_fault_free",
     "posdiag",
     "replica_fetch",
+    "stacked",
     "unpack_sym",
     "qr_r",
     "tolerance",

@@ -19,13 +19,30 @@ pieces the engine needs:
 ``wire_symmetric`` declares that payloads are symmetric matrices, enabling
 the n(n+1)/2 packed wire accounting in :meth:`repro.collective.plan.Plan.
 bytes_on_wire`.
+
+**Stacked payloads.**  :class:`StackedCombiner` bundles several combiners
+into one: the payload is a tuple with one sub-payload per part, each part's
+algebra applied to its own leaves under a *single* plan.  One butterfly
+then carries everything — the blocked-QR driver ships its panel-R leaf and
+its cross-product leaf together, halving the per-panel collective rounds
+from ``2·log P`` to ``log P`` while the replica copies of the stacked
+payload double as fault-tolerance copies for *both* results (the validity
+bit of the fused collective is exactly the AND of the per-part validities,
+which are identical because the routing is shared).  The engine calls the
+``tree_*`` methods, which plain combiners map leaf-wise and the stacked
+combiner routes per part; wire packing is decided per leaf
+(:meth:`Combiner.wire_pack_flags`), so a stacked payload with one
+symmetric-packable leaf and one dense leaf ships each optimally.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
+
+from .packing import packable
 
 __all__ = [
     "Combiner",
@@ -34,6 +51,8 @@ __all__ = [
     "MaxCombiner",
     "GramSumCombiner",
     "QRCombiner",
+    "StackedCombiner",
+    "stacked",
     "get_combiner",
     "COMBINERS",
     "posdiag",
@@ -75,6 +94,31 @@ class Combiner:
     def finalize(self, x, n_ranks: int):
         """Post-butterfly fixup (per payload leaf)."""
         return x
+
+    # -- tree-level protocol (what the engine actually calls) ---------------
+    # Plain combiners apply their per-leaf algebra across the whole payload
+    # pytree; StackedCombiner overrides these to route per part.
+
+    def tree_prepare(self, x):
+        return jax.tree.map(self.prepare, x)
+
+    def tree_combine(self, lo, hi):
+        return jax.tree.map(self.combine, lo, hi)
+
+    def tree_finalize(self, x, n_ranks: int):
+        return jax.tree.map(lambda leaf: self.finalize(leaf, n_ranks), x)
+
+    def wire_pack_flags(self, val) -> list[bool]:
+        """Per-leaf wire-packing decision, aligned with
+        ``jax.tree.leaves(val)``: a leaf ships packed iff its governing
+        combiner declares ``wire_symmetric`` *and* the leaf is a (batched)
+        square matrix — mixed payloads pack exactly the leaves that qualify
+        (the old all-or-nothing rule shipped everything square whenever any
+        leaf was rectangular)."""
+        return [
+            self.wire_symmetric and packable(leaf)
+            for leaf in jax.tree.leaves(val)
+        ]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,6 +176,79 @@ class QRCombiner(Combiner):
 
     def combine(self, lo, hi):
         return qr_r(jnp.concatenate([lo, hi], axis=-2))
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedCombiner(Combiner):
+    """Several combiners fused under one plan: the payload is a tuple with
+    one sub-payload (any pytree) per part.
+
+    The butterfly's redundancy argument only needs the combine to be
+    associative over contiguous index blocks; a product of associative
+    combines is associative, so a stacked payload inherits every variant's
+    guarantee unchanged — and because all parts share the routing, the
+    fused collective's validity bit equals each part's, making the fused
+    reduction bit-identical to running the parts as separate butterflies
+    over the same plan (hypothesis-swept).  Per-leaf wire packing is
+    delegated to each part, so e.g. ``stacked("gram_sum", "sum")`` ships a
+    packed symmetric leaf next to a dense rectangular one.
+    """
+
+    parts: tuple[Combiner, ...] = ()
+    name = "stacked"
+
+    def __post_init__(self):
+        if not self.parts:
+            raise ValueError("StackedCombiner needs at least one part")
+
+    def _subs(self, x) -> tuple:
+        if not isinstance(x, (tuple, list)) or len(x) != len(self.parts):
+            raise TypeError(
+                f"stacked payload must be a tuple of {len(self.parts)} "
+                f"sub-payloads (one per part), got {type(x).__name__}"
+            )
+        return tuple(x)
+
+    # The per-leaf protocol has no meaning here — which part's algebra a
+    # leaf belongs to is positional, so the engine must go through tree_*.
+    def prepare(self, x):
+        raise TypeError("StackedCombiner operates at tree level")
+
+    def combine(self, lo, hi):
+        raise TypeError("StackedCombiner operates at tree level")
+
+    def finalize(self, x, n_ranks: int):
+        raise TypeError("StackedCombiner operates at tree level")
+
+    def tree_prepare(self, x):
+        return tuple(
+            p.tree_prepare(s) for p, s in zip(self.parts, self._subs(x))
+        )
+
+    def tree_combine(self, lo, hi):
+        return tuple(
+            p.tree_combine(sl, sh)
+            for p, sl, sh in zip(self.parts, self._subs(lo), self._subs(hi))
+        )
+
+    def tree_finalize(self, x, n_ranks: int):
+        return tuple(
+            p.tree_finalize(s, n_ranks)
+            for p, s in zip(self.parts, self._subs(x))
+        )
+
+    def wire_pack_flags(self, val) -> list[bool]:
+        flags: list[bool] = []
+        for p, s in zip(self.parts, self._subs(val)):
+            flags.extend(p.wire_pack_flags(s))
+        return flags
+
+
+def stacked(*ops) -> StackedCombiner:
+    """Build a :class:`StackedCombiner` from combiner names or instances —
+    ``stacked("qr", "sum")`` is the blocked driver's one-butterfly-per-panel
+    payload (panel R leaf + cross-product leaf)."""
+    return StackedCombiner(parts=tuple(get_combiner(op) for op in ops))
 
 
 COMBINERS: dict[str, Callable[[], Combiner]] = {

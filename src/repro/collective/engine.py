@@ -35,7 +35,10 @@ executor.
 (``gram_sum``) carry symmetric (…, n, n) payloads; both executors pack them
 to the n(n+1)/2 upper triangle at the comm boundary
 (:mod:`repro.collective.packing`), so the wire carries exactly what
-``Plan.bytes_on_wire(symmetric=True)`` prices.
+``Plan.bytes_on_wire(symmetric=True)`` prices.  The decision is per leaf
+(:meth:`Combiner.wire_pack_flags`): a mixed payload — e.g. a stacked
+symmetric Gram leaf next to a dense rectangular cross leaf — packs exactly
+the leaves that qualify, priced by ``Plan.bytes_on_wire_stacked``.
 
 Validity semantics: a dead rank's contribution is zero-filled (XLA
 collective-permute semantics) and flagged invalid — the step-boundary
@@ -59,7 +62,7 @@ from repro.kernels import dispatch as _dispatch
 from .combiners import Combiner, get_combiner
 from .comm import Comm, SimComm
 from .faults import NEVER, FaultSpec
-from .packing import pack_sym, packable, unpack_sym
+from .packing import pack_sym, unpack_sym
 from .plan import Plan, _split_rounds, make_plan
 
 __all__ = ["execute_plan", "ft_allreduce", "ft_allreduce_jit",
@@ -81,35 +84,43 @@ def plan_is_fault_free(plan: Plan) -> bool:
 
 
 def _wire_codec(combiner: Combiner, val):
-    """(pack, unpack) applied at the comm boundary.  Symmetric payloads ship
-    the n(n+1)/2 upper triangle; everything else passes through."""
-    leaves = jax.tree.leaves(val)
-    if (
-        getattr(combiner, "wire_symmetric", False)
-        and leaves
-        and all(packable(leaf) for leaf in leaves)
-    ):
-        def pack(t):
-            return jax.tree.map(pack_sym, t)
+    """(pack, unpack) applied at the comm boundary, decided **per leaf**:
+    a leaf ships the n(n+1)/2 upper triangle iff its governing combiner
+    declares ``wire_symmetric`` and the leaf is square
+    (:meth:`Combiner.wire_pack_flags` — a stacked payload routes the
+    decision per part).  Everything else passes through dense, so a mixed
+    payload with one symmetric leaf and one rectangular leaf ships each
+    optimally instead of falling back to all-dense."""
+    flags = combiner.wire_pack_flags(val)
+    if not any(flags):
+        def ident(t):
+            return t
 
-        def unpack(t):
-            return jax.tree.map(
-                lambda leaf, orig: unpack_sym(leaf, orig.shape[-1]), t, val
-            )
+        return ident, ident
 
-        return pack, unpack
+    treedef = jax.tree.structure(val)
+    ns = [leaf.shape[-1] for leaf in jax.tree.leaves(val)]
 
-    def ident(t):
-        return t
+    def pack(t):
+        return treedef.unflatten([
+            pack_sym(leaf) if f else leaf
+            for leaf, f in zip(jax.tree.leaves(t), flags)
+        ])
 
-    return ident, ident
+    def unpack(t):
+        return treedef.unflatten([
+            unpack_sym(leaf, n) if f else leaf
+            for leaf, f, n in zip(jax.tree.leaves(t), flags, ns)
+        ])
+
+    return pack, unpack
 
 
 def _execute_fast(x, comm: Comm, plan: Plan, combiner: Combiner):
     """Straight-line fault-free butterfly: no receive staging, no validity
     bit on the wire, no poison writes.  Requires :func:`plan_is_fault_free`;
     bit-identical to the general executor on such plans."""
-    val = jax.tree.map(combiner.prepare, x)
+    val = combiner.tree_prepare(x)
     pack, unpack = _wire_codec(combiner, val)
     my = comm.ranks()
     for step in plan.steps:
@@ -117,7 +128,7 @@ def _execute_fast(x, comm: Comm, plan: Plan, combiner: Combiner):
         mine_first = ((my >> step.level) & 1) == 0
         lo = jax.tree.map(lambda m, o: comm.bwhere(mine_first, m, o), val, recv)
         hi = jax.tree.map(lambda m, o: comm.bwhere(mine_first, o, m), val, recv)
-        val = jax.tree.map(combiner.combine, lo, hi)
+        val = combiner.tree_combine(lo, hi)
     return val, comm.take(plan.final_valid)
 
 
@@ -151,7 +162,7 @@ def execute_plan(
     if fault_free and fast is not False:
         return _execute_fast(x, comm, plan, combiner)
 
-    val = jax.tree.map(combiner.prepare, x)
+    val = combiner.tree_prepare(x)
     pack, unpack = _wire_codec(combiner, val)
     d = comm.take(plan.death)
     my = comm.ranks()
@@ -172,7 +183,7 @@ def execute_plan(
         mine_first = ((my >> s) & 1) == 0
         lo = jax.tree.map(lambda m, o: comm.bwhere(mine_first, m, o), val, recv)
         hi = jax.tree.map(lambda m, o: comm.bwhere(mine_first, o, m), val, recv)
-        new = jax.tree.map(combiner.combine, lo, hi)
+        new = combiner.tree_combine(lo, hi)
         valid = can & recv_v
         val = jax.tree.map(lambda nv: comm.bwhere(valid, nv, _poison(nv)), new)
         # ---- Self-Healing: respawn dead ranks from a replica ---------------
@@ -252,7 +263,7 @@ def ft_allreduce(
         plan = make_plan(variant, comm.n_ranks, fault_spec)
     combiner = get_combiner(op)
     val, valid = execute_plan(x, comm, plan, combiner, fast=fast)
-    val = jax.tree.map(lambda leaf: combiner.finalize(leaf, plan.n_ranks), val)
+    val = combiner.tree_finalize(val, plan.n_ranks)
     return val, valid
 
 

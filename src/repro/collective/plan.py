@@ -31,7 +31,15 @@ import numpy as np
 
 from .faults import NEVER, FaultSpec
 
-__all__ = ["Step", "Plan", "make_plan", "ilog2", "payload_numel", "VARIANTS"]
+__all__ = [
+    "Step",
+    "Plan",
+    "make_plan",
+    "ilog2",
+    "leaf_bytes",
+    "payload_numel",
+    "VARIANTS",
+]
 
 Pair = tuple[int, int]
 
@@ -58,6 +66,21 @@ def payload_numel(n_cols: int, symmetric: bool = False) -> int:
     if symmetric:
         return n_cols * (n_cols + 1) // 2
     return n_cols * n_cols
+
+
+def leaf_bytes(
+    rows: int, cols: int, itemsize: int = 4, symmetric: bool = False
+) -> int:
+    """Wire bytes of one payload leaf.  Rectangular leaves ship dense
+    (rows × cols); symmetric leaves (which must be square) ship the
+    n(n+1)/2 packed triangle the engine's per-leaf codec produces."""
+    if symmetric:
+        if rows != cols:
+            raise ValueError(
+                f"symmetric leaves must be square, got ({rows}, {cols})"
+            )
+        return payload_numel(cols, symmetric=True) * itemsize
+    return rows * cols * itemsize
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -163,6 +186,21 @@ class Plan:
         """
         payload = payload_numel(n_cols, symmetric) * itemsize
         return self.message_count() * payload
+
+    def bytes_on_wire_stacked(self, leaves) -> int:
+        """Exact wire bytes for a stacked / multi-leaf payload.
+
+        ``leaves`` is a sequence of per-leaf specs ``(rows, cols, itemsize,
+        symmetric)``; each message carries every leaf, with symmetric leaves
+        priced packed and rectangular leaves dense — what the engine's
+        per-leaf codec actually ships for a
+        :class:`~repro.collective.combiners.StackedCombiner` payload (the
+        ``comm_volume`` and ``overlap`` bench cases hard-gate the observed
+        agreement).  The single-leaf square case reduces to
+        :meth:`bytes_on_wire`.
+        """
+        per_message = sum(leaf_bytes(*spec) for spec in leaves)
+        return self.message_count() * per_message
 
 
 # ---------------------------------------------------------------------------

@@ -9,11 +9,11 @@ QR-combiner instantiation and the numpy ground truth:
     replace / self-healing) on sim and shard_map backends, plus Q formation;
   * :mod:`repro.core.ref`    — numpy ground truth.
 
-``repro.core.plan`` / ``repro.core.faults`` / ``repro.core.comm`` are now
-*deprecated* stubs (they warn on import and will be removed next release);
-the names below are re-exported unchanged so existing imports keep working.
-The implementation itself lives in :mod:`repro.qr` (panel pipeline layer)
-— ``repro.core.tsqr`` is a thin facade over it.
+The ``repro.core.plan`` / ``repro.core.faults`` / ``repro.core.comm``
+deprecation stubs have been **removed** — import those names from
+:mod:`repro.collective` (or from this package, which re-exports them
+below).  The implementation itself lives in :mod:`repro.qr` (panel
+pipeline layer) — ``repro.core.tsqr`` is a thin facade over it.
 """
 from repro.collective import (
     NEVER,

@@ -42,6 +42,8 @@ import dataclasses
 __all__ = [
     "DispatchStats",
     "note_dispatch",
+    "note_overlap",
+    "note_rounds",
     "note_trace",
     "suppress",
     "trace_count",
@@ -63,6 +65,14 @@ class DispatchStats:
     dispatches: collections.Counter = dataclasses.field(
         default_factory=collections.Counter
     )
+    # Serial butterfly rounds per entry point (the collective latency
+    # proxy) and how many of its reductions were overlapped with compute.
+    rounds: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter
+    )
+    overlapped: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter
+    )
 
     @property
     def n_traces(self) -> int:
@@ -72,10 +82,20 @@ class DispatchStats:
     def n_dispatches(self) -> int:
         return sum(self.dispatches.values())
 
+    @property
+    def n_rounds(self) -> int:
+        return sum(self.rounds.values())
+
+    @property
+    def n_overlapped(self) -> int:
+        return sum(self.overlapped.values())
+
     def as_dict(self) -> dict:
         return {
             "traces": dict(self.traces),
             "dispatches": dict(self.dispatches),
+            "rounds": dict(self.rounds),
+            "overlapped": dict(self.overlapped),
         }
 
 
@@ -100,6 +120,26 @@ def note_dispatch(name: str, n: int = 1) -> None:
         return
     for t in _ACTIVE:
         t.dispatches[name] += n
+
+
+def note_rounds(name: str, n: int = 1) -> None:
+    """Record ``n`` serial collective (butterfly) rounds committed by the
+    named entry point — one per exchange level, priced from the host plan
+    (no-op when nothing is tracking or inside :func:`suppress`)."""
+    if not _ACTIVE or _SUPPRESS:
+        return
+    for t in _ACTIVE:
+        t.rounds[name] += n
+
+
+def note_overlap(name: str, n: int = 1) -> None:
+    """Record ``n`` reductions issued against lookahead accumulators while
+    the previous panel's trailing sweep runs (the double-buffered pipeline's
+    comm/compute overlap depth)."""
+    if not _ACTIVE or _SUPPRESS:
+        return
+    for t in _ACTIVE:
+        t.overlapped[name] += n
 
 
 def trace_count(name: str | None = None) -> int:

@@ -79,6 +79,41 @@ class KernelTraffic:
         """New jit traces the recorded calls caused (0 on warm calls)."""
         return sum(r["traces"] for r in self.records)
 
+    @property
+    def collective_rounds(self) -> int:
+        """Serial butterfly rounds committed by the recorded collectives —
+        the latency proxy (one record per butterfly; the blocked drivers
+        note one ``panel_reduce`` per panel plus ``reorth_reduce`` polish
+        rounds, priced from the host plans)."""
+        return sum(r["rounds"] for r in self.records)
+
+    def rounds_of(self, *ops: str) -> int:
+        """Collective rounds attributed to the named ops only — the
+        ``overlap`` bench case gates ``rounds_of("panel_reduce")`` at
+        exactly ``log P`` per panel on the fused path."""
+        wanted = set(ops)
+        return sum(r["rounds"] for r in self.records if r["op"] in wanted)
+
+    @property
+    def wire_bytes(self) -> int:
+        """Collective payload bytes committed by the recorded reductions
+        (plan-priced: packed symmetric leaves, dense rectangular leaves)."""
+        return sum(r["wire_bytes"] for r in self.records)
+
+    def wire_bytes_of(self, *ops: str) -> int:
+        wanted = set(ops)
+        return sum(
+            r["wire_bytes"] for r in self.records if r["op"] in wanted
+        )
+
+    @property
+    def overlapped(self) -> int:
+        """Reductions issued against lookahead accumulators *during* the
+        previous panel's trailing sweep (the double-buffered pipeline's
+        comm/compute overlap depth — K−1 for a K-panel fused run, 0 for the
+        serialized two-butterfly schedule)."""
+        return sum(r["overlapped"] for r in self.records)
+
     def as_dict(self) -> dict:
         return {
             "tall_sweeps": self.tall_sweeps,
@@ -86,6 +121,9 @@ class KernelTraffic:
             "write_bytes": self.write_bytes,
             "dispatches": self.dispatches,
             "traces": self.traces,
+            "collective_rounds": self.collective_rounds,
+            "wire_bytes": self.wire_bytes,
+            "overlapped": self.overlapped,
             "ops": [r["op"] for r in self.records],
         }
 
@@ -95,7 +133,8 @@ _SUPPRESS: list[bool] = []
 
 
 def note(op: str, *, sweeps: int = 0, read_bytes: int = 0,
-         write_bytes: int = 0, dispatches: int = 1, traces: int = 0) -> None:
+         write_bytes: int = 0, dispatches: int = 1, traces: int = 0,
+         rounds: int = 0, wire_bytes: int = 0, overlapped: int = 0) -> None:
     """Record one kernel invocation into every active tracker (no-op when
     nothing is tracking — the hot path pays one list check).
 
@@ -103,6 +142,14 @@ def note(op: str, *, sweeps: int = 0, read_bytes: int = 0,
     is one compiled-program launch (default 1); callers that know better —
     the scan pipeline records its K-panel traffic as several byte records
     but a single dispatch — pass explicit counts.
+
+    ``rounds``/``wire_bytes``/``overlapped`` account collectives: serial
+    butterfly rounds the record commits, plan-priced payload bytes on the
+    wire, and whether the reduction was issued against lookahead
+    accumulators under the previous panel's trailing sweep.  The blocked
+    drivers note one ``panel_reduce`` record per butterfly with
+    ``dispatches=0, sweeps=0`` so the collective accounting never perturbs
+    the HBM-sweep and single-dispatch gates.
     """
     if not _ACTIVE or _SUPPRESS:
         return
@@ -113,6 +160,9 @@ def note(op: str, *, sweeps: int = 0, read_bytes: int = 0,
         "write_bytes": int(write_bytes),
         "dispatches": int(dispatches),
         "traces": int(traces),
+        "rounds": int(rounds),
+        "wire_bytes": int(wire_bytes),
+        "overlapped": int(overlapped),
     }
     for t in _ACTIVE:
         t.records.append(rec)

@@ -16,8 +16,15 @@ that on the repo's collective engine:
     2. **Explicit panel Q** — ``Q_k = A_panel R_kk⁻¹`` locally (plus
        ``reorth`` CholeskyQR polish passes over the same butterfly).
     3. **Block row of R** — ``W = R_totᵀ⁻¹ · Σ_ranks A_panelᵀ A_trail``:
-       the cross products are summed by a second fault-tolerant butterfly
-       (``sum`` combiner), so ``W = Q_kᵀ A_trail`` is replicated too.
+       the cross products ride the *same* butterfly as the panel R by
+       default (``fuse="auto"``): a stacked ``(R, Σ AᵖᵀAᵗ)`` payload under
+       one plan costs ``log P`` rounds per panel instead of the ``2·log P``
+       of two serialized butterflies, and the replica copies of the stacked
+       tuple double as fault-tolerance copies for *both* leaves (one
+       :func:`~repro.collective.engine.replica_fetch` restores R and the
+       cross products together).  ``fuse="off"`` restores the split
+       schedule — a second ``sum`` butterfly after Q formation —
+       bit-identical results either way (DESIGN.md §10).
     4. **Trailing update** — ``A_trail ← A_trail − Q_k W`` by the fused
        Pallas kernel (:mod:`repro.kernels.trailing_update`), which also
        accumulates the *next* panel's Gram + cross products in the same
@@ -45,9 +52,15 @@ fixed-shape pipeline — padded maximal trailing width, shifted layout, one
 which executes the whole factorization as ONE jitted device program,
 bit-identical to the eager driver, with module-level cached compiles
 (zero retrace on repeat calls) and a ``vmap``-batched B-matrix variant
-(:func:`blocked_qr_batched`).  Trace/dispatch counts are measured by
-:mod:`repro.kernels.dispatch` and hard-gated by the ``dispatch`` bench
-case.
+(:func:`blocked_qr_batched`).  Under the default fused schedule the
+pipeline is *double-buffered*: each panel's single stacked butterfly is
+issued the moment the producing trailing sweep lands its lookahead
+accumulators and consumed one scan stage later (the pending reduction
+rides the carry), decoupling every collective from its consumer by a full
+stage.  Trace/dispatch counts, per-panel collective rounds and overlap
+depth are measured by :mod:`repro.kernels.dispatch` /
+:mod:`repro.kernels.traffic` and hard-gated by the ``dispatch`` and
+``overlap`` bench cases.
 """
 from __future__ import annotations
 
@@ -128,7 +141,18 @@ class PanelFaultSchedule:
 
 @dataclasses.dataclass(frozen=True)
 class PanelReport:
-    """Host-side verdicts for one panel (the guarantee bookkeeping)."""
+    """Host-side verdicts for one panel (the guarantee bookkeeping).
+
+    ``fused`` — this panel rides the single-butterfly double-buffered
+    schedule: its R and cross-product leaves ship as one stacked payload
+    over ``plan_r`` (``log P`` rounds instead of ``2·log P``), issued the
+    moment the producing trailing sweep lands its lookahead accumulators
+    and consumed one pipeline stage later.  The last panel has no cross
+    leaf; its ``fused`` bit records that its R-only reduction is issued
+    ahead on the same schedule.  A panel with an update-phase fault cannot
+    fuse — the scheduled death indexes the second butterfly's exchanges,
+    so that butterfly must exist (the split schedule).
+    """
 
     panel: int
     plan_r: Plan
@@ -138,6 +162,7 @@ class PanelReport:
     recovered_r: int          # ranks restored from a replica after phase 1
     recovered_w: int          # …after phase 3
     recoverable: bool         # some rank held every replicated factor
+    fused: bool = False       # one stacked butterfly, issued one stage ahead
 
     @property
     def within_tolerance(self) -> bool:
@@ -195,6 +220,7 @@ def _build_reports(
     widths: tuple[int, ...],
     faults: PanelFaultSchedule,
     recover: str,
+    fuse: str,
 ) -> tuple[PanelReport, ...]:
     n_panels = len(widths)
     for key in set(faults.panel) | set(faults.update):
@@ -216,6 +242,12 @@ def _build_reports(
         last = k == n_panels - 1
         plan_w = None
         tol_w = True
+        # A panel fuses its two reductions into one stacked butterfly
+        # unless the schedule pins a death to the *second* butterfly
+        # specifically — panel-phase faults ride the fused plan_r (a
+        # mid-reduction death strikes both leaves at once, and the one
+        # replica fetch restores both).
+        fused = fuse != "off" and (last or k not in faults.update)
         if not last:
             spec_w = faults.update.get(k, FaultSpec.none())
             plan_w = make_plan(variant, p, spec_w)
@@ -226,6 +258,14 @@ def _build_reports(
         # recovered_* counts ranks replica_fetch actually restores — zero
         # when recovery is disabled (the ranks stay poisoned).
         fetching = recover == "replica" and recoverable
+        rec_r = int((~plan_r.final_valid).sum()) if fetching else 0
+        if fused and plan_w is not None:
+            rec_w = rec_r      # the one stacked fetch restores both leaves
+        else:
+            rec_w = (
+                int((~plan_w.final_valid).sum())
+                if fetching and plan_w is not None else 0
+            )
         reports.append(
             PanelReport(
                 panel=k,
@@ -233,16 +273,20 @@ def _build_reports(
                 plan_w=plan_w,
                 within_tolerance_r=tol_r,
                 within_tolerance_w=tol_w,
-                recovered_r=(
-                    int((~plan_r.final_valid).sum()) if fetching else 0
-                ),
-                recovered_w=(
-                    int((~plan_w.final_valid).sum())
-                    if fetching and plan_w is not None else 0
-                ),
+                recovered_r=rec_r,
+                recovered_w=rec_w,
                 recoverable=recoverable,
+                fused=fused,
             )
         )
+    if fuse == "on":
+        bad = [r.panel for r in reports if not r.fused]
+        if bad:
+            raise ValueError(
+                f"fuse='on' but panels {bad} carry update-phase faults, "
+                "which require the split two-butterfly schedule; schedule "
+                "the death on the panel phase or use fuse='auto'"
+            )
     return tuple(reports)
 
 
@@ -294,22 +338,57 @@ def _blocked_body(
     q_cols = []
     trail = a
     s = kops.panel_cross(a, split=widths[0], **kw)          # pipeline prime
+
+    def local_r_of(panel, g):
+        if local_r == "chol":
+            return chol_r(g)                      # free: lookahead Gram
+        return pf.local_fn()(panel.astype(jnp.float32))
+
+    def issue(rep, panel, g_loc, c_loc):
+        """Put a fused panel's single butterfly on the wire: the stacked
+        (R, Σ AᵖᵀAᵗ) payload over ``plan_r`` (the last panel's payload is
+        R-only).  Called right after the trailing sweep that produced the
+        lookahead accumulators — one pipeline stage ahead of consumption,
+        so the collective is in flight while the panel's bookkeeping and
+        the next consume stage run."""
+        r_loc = local_r_of(panel, g_loc)
+        if rep.plan_w is None:
+            r_kk, valid_r = pf.reduce_r_prepared(r_loc, comm, rep.plan_r)
+            return r_kk, None, valid_r, None
+        (r_kk, c_sum), v = pf.reduce_panel_fused(r_loc, c_loc, comm,
+                                                 rep.plan_r)
+        return r_kk, c_sum, v, v
+
+    pending = None
+    if reports[0].fused:
+        b0 = widths[0]
+        pending = issue(
+            reports[0], trail[..., :, :b0], s[..., :, :b0], s[..., :, b0:]
+        )
     c0 = 0
     for rep, b in zip(reports, widths):
         nt = n - c0 - b
         panel = trail[..., :, :b]
-        g_loc = s[..., :, :b]
-        c_loc = s[..., :, b:]
-        # -- phase 1: panel TSQR over the butterfly -------------------------
-        if local_r == "chol":
-            r_loc = chol_r(g_loc)                 # free: lookahead Gram
+        # -- phase 1: panel reduction(s) over the butterfly -----------------
+        if rep.fused:
+            r_kk, c_sum, valid_r, valid_w = pending
+            pending = None
         else:
-            r_loc = pf.local_fn()(panel.astype(jnp.float32))
-        r_kk, valid_r = pf.reduce_r_prepared(r_loc, comm, rep.plan_r)
+            r_loc = local_r_of(panel, s[..., :, :b])
+            r_kk, valid_r = pf.reduce_r_prepared(r_loc, comm, rep.plan_r)
+            c_sum = valid_w = None
         valid = valid & valid_r
         all_valid_r = bool(rep.plan_r.final_valid.all())
         if rep.recovered_r:
-            r_kk = replica_fetch(r_kk, comm, rep.plan_r.final_valid)
+            if rep.fused and c_sum is not None:
+                # ONE fetch restores both stacked leaves — the replica
+                # copies of the fused payload double as FT copies for R
+                # and the cross products alike.
+                r_kk, c_sum = replica_fetch(
+                    (r_kk, c_sum), comm, rep.plan_r.final_valid
+                )
+            else:
+                r_kk = replica_fetch(r_kk, comm, rep.plan_r.final_valid)
         # -- phase 2: explicit panel Q (+ reorth polish) --------------------
         # The polish's gram all-reduce mixes every rank's contribution, so
         # it needs every rank to hold a finite r_kk; when a no-recovery run
@@ -321,23 +400,37 @@ def _blocked_body(
         q_k = q_k.astype(a.dtype)
         if compute_q:
             q_cols.append(q_k)
-        # -- phase 3: block row of R via the sum butterfly ------------------
+        # -- phase 3: block row of R ----------------------------------------
         if nt:
-            c_sum, valid_w = ft_allreduce(
-                c_loc, comm, op="sum", plan=rep.plan_w
-            )
-            valid = valid & valid_w
-            if rep.recovered_w:
-                c_sum = replica_fetch(c_sum, comm, rep.plan_w.final_valid)
+            if not rep.fused:
+                # split schedule: the cross products ride a second,
+                # serialized sum butterfly (its own plan — update-phase
+                # deaths strike here)
+                c_sum, valid_w = ft_allreduce(
+                    s[..., :, b:], comm, op="sum", plan=rep.plan_w
+                )
+                valid = valid & valid_w
+                if rep.recovered_w:
+                    c_sum = replica_fetch(
+                        c_sum, comm, rep.plan_w.final_valid
+                    )
             w = _solve_w(r_tot, c_sum, pad_to=n_pad - widths[0])
             r_full = r_full.at[..., c0:c0 + b, c0:].set(
                 jnp.concatenate([r_tot, w], axis=-1)
             )
             # -- phase 4: one-sweep trailing update + lookahead -------------
+            b2 = widths[rep.panel + 1]
             trail, s = kops.trailing_update(
                 trail[..., :, b:], q_k, w.astype(a.dtype),
-                next_width=widths[rep.panel + 1], **kw
+                next_width=b2, **kw
             )
+            nxt = reports[rep.panel + 1]
+            if nxt.fused:
+                # double-buffer: the next panel's butterfly launches as
+                # soon as the sweep lands its lookahead accumulators
+                pending = issue(
+                    nxt, trail[..., :, :b2], s[..., :, :b2], s[..., :, b2:]
+                )
         else:
             r_full = r_full.at[..., c0:c0 + b, c0:].set(r_tot)
         c0 += b
@@ -402,10 +495,18 @@ def _pipeline_body(
     compute_q: bool,
     use_pallas: bool,
     interpret: bool | None,
+    fused: bool = True,
 ):
     """The traced single-program body (backend-agnostic like
     :func:`_blocked_body`; ``plan`` is the one fault-free plan every
-    collective of every panel shares)."""
+    collective of every panel shares).  ``fused=True`` (the default path)
+    runs the double-buffered one-butterfly-per-panel schedule; ``False``
+    the split two-butterfly baseline — bit-identical results either way."""
+    if fused:
+        return _pipeline_body_fused(
+            a, comm, plan, widths, pf, local_r=local_r, compute_q=compute_q,
+            use_pallas=use_pallas, interpret=interpret,
+        )
     b, k_panels, b_last = widths[0], len(widths), widths[-1]
     n = a.shape[-1]
     n_pad = b * k_panels
@@ -473,6 +574,135 @@ def _pipeline_body(
     return r_full, valid, q
 
 
+def _pipeline_body_fused(
+    a,
+    comm: Comm,
+    plan: Plan,
+    widths: tuple[int, ...],
+    pf: PanelFactorizer,
+    *,
+    local_r: str,
+    compute_q: bool,
+    use_pallas: bool,
+    interpret: bool | None,
+):
+    """The double-buffered single-program body: ONE stacked butterfly per
+    panel instead of two (``log P`` rounds per panel), issued the moment
+    the producing sweep lands its lookahead accumulators and consumed one
+    pipeline stage later — the pending reduction rides the ``lax.scan``
+    carry, so the issue and use sites are decoupled by a full stage and an
+    async-collective runtime overlaps each butterfly with the surrounding
+    panel bookkeeping instead of paying two serialized collectives per
+    panel.  Per-leaf bit-identical to the split schedule (the stacked
+    engine runs the same combines over the same plan; only the messages
+    are batched), hence bit-identical to the eager driver too."""
+    b, k_panels, b_last = widths[0], len(widths), widths[-1]
+    n = a.shape[-1]
+    n_pad = b * k_panels
+    kw = dict(use_pallas=use_pallas, interpret=interpret)
+
+    def local_r_of(panel, g):
+        if local_r == "chol":
+            return chol_r(g)
+        return pf.local_fn()(panel.astype(jnp.float32))
+
+    def issue(awork, s):
+        # stacked (R, cross) payload of the live panel, one butterfly;
+        # the zero pad columns of the cross leaf reduce to exact zeros
+        r_loc = local_r_of(awork[..., :, :b], s[..., :, :b])
+        (r_red, c_red), _ = pf.reduce_panel_fused(
+            r_loc, s[..., :, b:], comm, plan
+        )
+        return r_red, c_red
+
+    def issue_last(panel, g):
+        # the last panel has no cross leaf; reduce at the exact ragged
+        # width — a width-b issue would Cholesky the zero-padded
+        # (singular) Gram
+        r_red, _ = pf.reduce_r_prepared(local_r_of(panel, g), comm, plan)
+        return r_red
+
+    def consume(panel, r_red):
+        q_k, r_tot = pf.form_q(panel.astype(jnp.float32), r_red, comm)
+        return q_k.astype(a.dtype), r_tot
+
+    # -- prime: padded working copy + panel-0 lookahead + first issue -------
+    if n_pad == n:
+        awork = a
+        s = kops._panel_cross_raw(a, split=b, **kw)
+    else:
+        awork, s = kops._pad_cross_raw(a, split=b, out_width=n_pad, **kw)
+
+    rows: list = []           # per-panel (…, b, n_pad) R rows, panels 0..K−2
+    qs: list = []
+    if k_panels == 1:
+        r_red = issue_last(awork[..., :, :b_last], s[..., :b_last, :b_last])
+    else:
+        r_red, c_red = issue(awork, s)
+
+        # -- K−2 uniform stages: consume the carried reduction, sweep, and
+        # put the next panel's butterfly on the wire before the scan yields
+        def step(carry, _):
+            awork, s, r_red, c_red = carry
+            q_k, r_tot = consume(awork[..., :, :b], r_red)
+            w = _solve_w(r_tot, c_red)
+            a_new, s_new = kops._trailing_update_raw(
+                awork[..., :, b:], q_k, w.astype(a.dtype), next_width=b, **kw
+            )
+            # shift left by b: drop the finished panel, keep the width with
+            # fresh zero columns (the pad stays exactly zero inductively)
+            awork = jnp.concatenate(
+                [a_new, jnp.zeros_like(awork[..., :, :b])], -1
+            )
+            s = jnp.concatenate([s_new, jnp.zeros_like(s[..., :, :b])], -1)
+            r_red, c_red = issue(awork, s)
+            r_row = jnp.concatenate([r_tot, w], axis=-1)
+            return (awork, s, r_red, c_red), (
+                (r_row, q_k) if compute_q else r_row
+            )
+
+        if k_panels > 2:
+            (awork, s, r_red, c_red), ys = lax.scan(
+                step, (awork, s, r_red, c_red), None, length=k_panels - 2
+            )
+            r_rows = ys[0] if compute_q else ys
+            rows = [r_rows[k] for k in range(k_panels - 2)]
+            if compute_q:
+                qs = [ys[1][k] for k in range(k_panels - 2)]
+
+        # -- static penultimate stage: the ragged last panel needs an
+        # R-only issue at width b_last, so its producing sweep sits outside
+        # the scan ------------------------------------------------------
+        q_k, r_tot = consume(awork[..., :, :b], r_red)
+        w = _solve_w(r_tot, c_red)
+        a_new, s_new = kops._trailing_update_raw(
+            awork[..., :, b:], q_k, w.astype(a.dtype), next_width=b, **kw
+        )
+        r_red = issue_last(
+            a_new[..., :, :b_last], s_new[..., :b_last, :b_last]
+        )
+        rows.append(jnp.concatenate([r_tot, w], axis=-1))
+        if compute_q:
+            qs.append(q_k)
+        awork = a_new             # last panel lives in columns [0, b_last)
+
+    # -- epilogue: consume the last carried reduction -----------------------
+    q_last, r_last = consume(awork[..., :, :b_last], r_red)
+
+    # -- reassemble R (and Q) in original column coordinates ----------------
+    r_full = jnp.zeros(a.shape[:-2] + (n, n), jnp.float32)
+    for k in range(k_panels - 1):
+        c0 = k * b
+        r_full = r_full.at[..., c0:c0 + b, c0:].set(rows[k][..., :, :n - c0])
+    c0 = (k_panels - 1) * b
+    r_full = r_full.at[..., c0:, c0:].set(r_last)
+    q = None
+    if compute_q:
+        q = jnp.concatenate(qs + [q_last], axis=-1)
+    valid = comm.take(np.ones(comm.n_ranks, dtype=bool))
+    return r_full, valid, q
+
+
 @functools.lru_cache(maxsize=64)
 def _compiled_sim_pipeline(
     p: int,
@@ -484,6 +714,7 @@ def _compiled_sim_pipeline(
     use_pallas: bool,
     interpret: bool | None,
     batched: bool,
+    fused: bool,
 ):
     """One compiled program per static configuration; the jit cache under it
     keys on the payload's (treedef, shapes, dtypes) — repeat calls with
@@ -495,20 +726,103 @@ def _compiled_sim_pipeline(
         _dispatch.note_trace(PIPELINE_NAME)
         return _pipeline_body(
             a, comm, plan, widths, pf, local_r=local_r, compute_q=compute_q,
-            use_pallas=use_pallas, interpret=interpret,
+            use_pallas=use_pallas, interpret=interpret, fused=fused,
         )
 
     return jax.jit(jax.vmap(fn) if batched else fn)
 
 
-def _note_pipeline(shape, dtype, widths, traced: int) -> None:
+def _note_reductions(
+    name: str,
+    reports: tuple[PanelReport, ...],
+    widths: tuple[int, ...],
+    c_widths: tuple[int, ...],
+    reorth_counts: tuple[int, ...],
+    reorth_plan: Plan,
+    wire_scale: int = 1,
+) -> None:
+    """Per-butterfly collective accounting: serial rounds, plan-priced wire
+    bytes (packed symmetric leaves, dense rectangular leaves), and the
+    overlap flag.  One ``panel_reduce`` record per butterfly — a fused
+    panel is ONE record carrying the stacked payload, a split panel two —
+    plus a ``reorth_reduce`` record for the polish passes.  Every record
+    has ``dispatches=0, sweeps=0`` so the HBM-sweep and single-dispatch
+    gates never see the collective accounting.
+
+    ``c_widths`` is the cross-leaf width each panel actually reduces (the
+    padded ``n_pad − b`` in the pipeline, the live trailing width in the
+    eager driver); ``reorth_counts`` the polish passes each panel's
+    ``form_q`` ran (0 when a no-recovery fault skipped the polish);
+    ``wire_scale`` the batch factor (B matrices ride each message)."""
+    for rep, b, cw, n_reorth in zip(reports, widths, c_widths, reorth_counts):
+        overlapped = 1 if rep.fused and rep.panel > 0 else 0
+        if rep.fused or rep.plan_w is None:
+            leaves = [(b, b, 4, False)]
+            if rep.plan_w is not None:
+                leaves.append((b, cw, 4, False))
+            recs = [(rep.plan_r, leaves, overlapped)]
+        else:
+            recs = [
+                (rep.plan_r, [(b, b, 4, False)], 0),
+                (rep.plan_w, [(b, cw, 4, False)], 0),
+            ]
+        for plan, leaves, ov in recs:
+            rounds = plan.round_count()
+            _traffic.note(
+                "panel_reduce", dispatches=0, rounds=rounds,
+                wire_bytes=wire_scale * plan.bytes_on_wire_stacked(leaves),
+                overlapped=ov,
+            )
+            _dispatch.note_rounds(name, rounds)
+            if ov:
+                _dispatch.note_overlap(name, ov)
+        if n_reorth:
+            rounds = n_reorth * reorth_plan.round_count()
+            _traffic.note(
+                "reorth_reduce", dispatches=0, rounds=rounds,
+                wire_bytes=wire_scale * n_reorth
+                * reorth_plan.bytes_on_wire_stacked([(b, b, 4, True)]),
+            )
+            _dispatch.note_rounds(name, rounds)
+
+
+def _note_eager_reductions(
+    name: str,
+    reports: tuple[PanelReport, ...],
+    widths: tuple[int, ...],
+    n: int,
+    pf: PanelFactorizer,
+) -> None:
+    """Collective accounting for one eager (general-driver) factorization:
+    cross leaves at their live trailing widths, polish skipped on panels a
+    no-recovery fault left unclean."""
+    c0 = 0
+    c_widths = []
+    for b in widths:
+        c_widths.append(n - c0 - b)
+        c0 += b
+    reorth_counts = tuple(
+        pf.reorth
+        if bool(rep.plan_r.final_valid.all()) or rep.recovered_r else 0
+        for rep in reports
+    )
+    _note_reductions(
+        name, reports, widths, tuple(c_widths), reorth_counts,
+        make_plan("redundant", reports[0].plan_r.n_ranks),
+    )
+
+
+def _note_pipeline(shape, dtype, widths, traced: int,
+                   reports: tuple[PanelReport, ...], reorth: int) -> None:
     """Per-call traffic/dispatch accounting for the pipeline (the kernels
     inside the scan are traced once but *execute* once per panel, so the
     wrapper records the exact per-call totals: K sweeps, 1 dispatch).  Only
     the trailing path is modeled — a ``cqr2``/``cqr2_pallas`` local QR adds
     narrow (m×b) panel-local sweeps that are not recorded (their wrappers'
     own notes are suppressed at trace time; the eager driver remains the
-    reference for panel-local accounting)."""
+    reference for panel-local accounting).  Collective records ride along:
+    one ``panel_reduce`` per butterfly (fused panels: one stacked record at
+    the padded cross width) plus the ``reorth_reduce`` polish."""
     _dispatch.note_dispatch(PIPELINE_NAME)
     lead = int(np.prod(shape[:-2], dtype=np.int64))
     m, n = shape[-2], shape[-1]
@@ -537,15 +851,24 @@ def _note_pipeline(shape, dtype, widths, traced: int) -> None:
             dispatches=1 if first else 0, traces=traced if first else 0,
         )
         first = False
+    p = reports[0].plan_r.n_ranks
+    c_widths = tuple(
+        n_pad - b if k < k_panels - 1 else 0 for k in range(k_panels)
+    )
+    _note_reductions(
+        PIPELINE_NAME, reports, widths, c_widths, (reorth,) * k_panels,
+        make_plan("redundant", p),
+        wire_scale=int(np.prod(shape[:-3], dtype=np.int64)),
+    )
 
 
 def _run_sim_pipeline(
-    a, variant, widths, pf, *,
-    local_r, compute_q, use_pallas, interpret, batched=False,
+    a, variant, widths, pf, reports, *,
+    local_r, compute_q, use_pallas, interpret, fused, batched=False,
 ):
     fun = _compiled_sim_pipeline(
         a.shape[-3], variant, widths, pf, local_r, compute_q,
-        use_pallas, interpret, batched,
+        use_pallas, interpret, batched, fused,
     )
     t0 = _dispatch.trace_count(PIPELINE_NAME)
     # suppress the wrappers' own notes while the body traces (a cqr2 local
@@ -554,7 +877,8 @@ def _run_sim_pipeline(
     with _traffic.suppress(), _dispatch.suppress():
         out = fun(a)
     _note_pipeline(
-        a.shape, a.dtype, widths, _dispatch.trace_count(PIPELINE_NAME) - t0
+        a.shape, a.dtype, widths,
+        _dispatch.trace_count(PIPELINE_NAME) - t0, reports, pf.reorth,
     )
     return out
 
@@ -569,10 +893,13 @@ def _setup(
     local_r: str,
     reorth: int,
     recover: str,
+    fuse: str = "auto",
 ) -> tuple[tuple[int, ...], tuple[PanelReport, ...], PanelFactorizer]:
     """Shared entry-point validation + host planning (sim and shard_map)."""
     if recover not in ("replica", "off"):
         raise ValueError(f"recover must be 'replica' or 'off', got {recover!r}")
+    if fuse not in ("auto", "on", "off"):
+        raise ValueError(f"fuse must be 'auto', 'on' or 'off', got {fuse!r}")
     widths = panel_widths(n, panel_width)
     if m_local < max(widths):
         raise ValueError(
@@ -588,7 +915,7 @@ def _setup(
             f"lookahead Gram) or one of {sorted(local_qr_fns)}"
         )
     reports = _build_reports(
-        variant, p, widths, faults or PanelFaultSchedule(), recover
+        variant, p, widths, faults or PanelFaultSchedule(), recover, fuse
     )
     pf = PanelFactorizer(
         local_qr="jnp" if local_r == "chol" else local_r, reorth=reorth
@@ -613,6 +940,7 @@ def blocked_qr_sim(
     interpret: bool | None = None,
     recover: str = "replica",
     pipeline: str = "auto",
+    fuse: str = "auto",
 ) -> BlockedQRResult:
     """Single-device simulation: ``a_blocks`` is (P, m_local, n) — the
     general-matrix analogue of :func:`repro.qr.tsqr.tsqr_sim`.
@@ -622,15 +950,27 @@ def blocked_qr_sim(
     driver whenever any plan carries faults (the host-replanned general
     path); ``"on"`` demands the pipeline (raises on faulty plans);
     ``"off"`` forces the eager driver (the bit-identity oracle).
+
+    ``fuse`` — ``"auto"`` (default) ships each panel's R and cross-product
+    leaves as ONE stacked butterfly (``log P`` rounds per panel instead of
+    ``2·log P``, issued one pipeline stage ahead of consumption) on every
+    panel the schedule allows — only panels with update-phase faults fall
+    back to the split schedule, since the scheduled death indexes the
+    second butterfly's exchanges; ``"on"`` demands fusion everywhere
+    (raises when update-phase faults are scheduled); ``"off"`` restores
+    the serialized two-butterfly schedule (the pre-fusion oracle —
+    bit-identical results either way).
     """
     p, m_local, n = a_blocks.shape
     widths, reports, pf = _setup(
-        m_local, n, panel_width, variant, p, faults, local_r, reorth, recover
+        m_local, n, panel_width, variant, p, faults, local_r, reorth,
+        recover, fuse,
     )
     if _resolve_pipeline(pipeline, reports):
         r, valid, q = _run_sim_pipeline(
-            a_blocks, variant, widths, pf, local_r=local_r,
+            a_blocks, variant, widths, pf, reports, local_r=local_r,
             compute_q=compute_q, use_pallas=use_pallas, interpret=interpret,
+            fused=fuse != "off",
         )
     else:
         r, valid, q = _blocked_body(
@@ -638,6 +978,7 @@ def blocked_qr_sim(
             local_r=local_r, compute_q=compute_q, use_pallas=use_pallas,
             interpret=interpret,
         )
+        _note_eager_reductions("blocked_qr_sim", reports, widths, n, pf)
     return BlockedQRResult(
         r=r, valid=valid, q=q, reports=reports, panel_width=panel_width
     )
@@ -653,6 +994,7 @@ def blocked_qr_batched(
     reorth: int = 1,
     use_pallas: bool = False,
     interpret: bool | None = None,
+    fuse: str = "auto",
 ) -> BlockedQRResult:
     """B independent factorizations in **one** device dispatch.
 
@@ -674,7 +1016,8 @@ def blocked_qr_batched(
         )
     _, p, m_local, n = a_batch.shape
     widths, reports, pf = _setup(
-        m_local, n, panel_width, variant, p, None, local_r, reorth, "replica"
+        m_local, n, panel_width, variant, p, None, local_r, reorth,
+        "replica", fuse,
     )
     if not _plans_fault_free(reports):
         raise ValueError(
@@ -684,8 +1027,9 @@ def blocked_qr_batched(
             "instead"
         )
     r, valid, q = _run_sim_pipeline(
-        a_batch, variant, widths, pf, local_r=local_r, compute_q=compute_q,
-        use_pallas=use_pallas, interpret=interpret, batched=True,
+        a_batch, variant, widths, pf, reports, local_r=local_r,
+        compute_q=compute_q, use_pallas=use_pallas, interpret=interpret,
+        fused=fuse != "off", batched=True,
     )
     return BlockedQRResult(
         r=r, valid=valid, q=q, reports=reports, panel_width=panel_width
@@ -696,6 +1040,7 @@ def blocked_qr_batched(
 def _compiled_shard_pipeline(
     mesh, axis: str, p: int, variant: str, widths, pf,
     local_r: str, want_q: bool, use_pallas: bool, interpret, jit: bool,
+    fused: bool,
 ):
     comm = ShardMapComm(p, axis)
     plan = make_plan(variant, p)
@@ -704,7 +1049,7 @@ def _compiled_shard_pipeline(
         _dispatch.note_trace(PIPELINE_NAME)
         r, valid, q = _pipeline_body(
             a_blk, comm, plan, widths, pf, local_r=local_r, compute_q=want_q,
-            use_pallas=use_pallas, interpret=interpret,
+            use_pallas=use_pallas, interpret=interpret, fused=fused,
         )
         return r[None], valid[None], q if want_q else dummy_q(a_blk)
 
@@ -749,34 +1094,39 @@ def blocked_qr_shard_map(
     recover: str = "replica",
     jit: bool = True,
     pipeline: str = "auto",
+    fuse: str = "auto",
 ) -> BlockedQRResult:
     """Production path: A (m, n) row-sharded over ``mesh`` axis ``axis``.
 
     Same body as :func:`blocked_qr_sim` under ``shard_map`` — exchanges
     lower to ``lax.ppermute``, replica fetches ride the same wires.
     Fault-free runs compile into the single-dispatch scan pipeline
-    (``pipeline`` semantics as in :func:`blocked_qr_sim`); faulted plans
-    route to the general driver.  Both programs are cached at module level,
-    so repeat calls with identical statics and shapes perform zero new
-    traces.  Returns r (P, n, n) (one copy per rank), valid (P,), q (m, n)
-    row-sharded or None.
+    (``pipeline``/``fuse`` semantics as in :func:`blocked_qr_sim`; the
+    fused schedule's one-butterfly-per-panel issue sites give XLA's async
+    collective scheduler a full pipeline stage between each ``ppermute``
+    chain and its consumer); faulted plans route to the general driver.
+    Both programs are cached at module level, so repeat calls with
+    identical statics and shapes perform zero new traces.  Returns r
+    (P, n, n) (one copy per rank), valid (P,), q (m, n) row-sharded or
+    None.
     """
     p = mesh.shape[axis]
     m, n = a_global.shape
     widths, reports, pf = _setup(
-        m // p, n, panel_width, variant, p, faults, local_r, reorth, recover
+        m // p, n, panel_width, variant, p, faults, local_r, reorth,
+        recover, fuse,
     )
     if _resolve_pipeline(pipeline, reports):
         fun = _compiled_shard_pipeline(
             mesh, axis, p, variant, widths, pf, local_r, compute_q,
-            use_pallas, interpret, jit,
+            use_pallas, interpret, jit, fuse != "off",
         )
         t0 = _dispatch.trace_count(PIPELINE_NAME)
         with _traffic.suppress(), _dispatch.suppress():
             r, valid, q = fun(a_global)
         _note_pipeline(
             (p, m // p, n), a_global.dtype, widths,
-            _dispatch.trace_count(PIPELINE_NAME) - t0,
+            _dispatch.trace_count(PIPELINE_NAME) - t0, reports, pf.reorth,
         )
     else:
         fun = _compiled_shard_general(
@@ -785,6 +1135,9 @@ def blocked_qr_shard_map(
         )
         _dispatch.note_dispatch("blocked_qr_shard_map")
         r, valid, q = fun(a_global)
+        _note_eager_reductions(
+            "blocked_qr_shard_map", reports, widths, n, pf
+        )
     return BlockedQRResult(
         r=r, valid=valid, q=(q if compute_q else None),
         reports=reports, panel_width=panel_width,

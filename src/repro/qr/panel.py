@@ -29,12 +29,19 @@ from typing import Callable
 
 import jax.numpy as jnp
 
-from repro.collective.combiners import QRCombiner, posdiag as _posdiag, qr_r
+from repro.collective.combiners import (
+    QRCombiner,
+    StackedCombiner,
+    SumCombiner,
+    posdiag as _posdiag,
+    qr_r,
+)
 from repro.collective.comm import Comm
 from repro.collective.engine import execute_plan, ft_allreduce
 from repro.collective.plan import Plan
 
 __all__ = [
+    "FUSED_PANEL_COMBINER",
     "PanelFactorizer",
     "chol_r",
     "form_q",
@@ -94,6 +101,15 @@ def chol_r(g):
 
 def _identity(x):
     return x
+
+
+# The blocked driver's one-butterfly-per-panel payload (DESIGN.md §10):
+# leaf 0 is the panel's local R (QR combine), leaf 1 the local cross
+# products A_panelᵀ A_trail (sum combine).  Module-level so every jit/LRU
+# cache keyed on the combiner shares one hashable instance.
+FUSED_PANEL_COMBINER = StackedCombiner(
+    (QRCombiner(local_qr=_identity), SumCombiner())
+)
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +178,21 @@ class PanelFactorizer:
         (the blocked driver derives them from the lookahead Gram)."""
         return execute_plan(
             r_local, comm, plan, QRCombiner(local_qr=_identity), fast=fast
+        )
+
+    def reduce_panel_fused(
+        self, r_local, c_local, comm: Comm, plan: Plan, *, fast=None
+    ):
+        """ONE butterfly for both panel results: the stacked
+        ``(R, Σ AᵖᵀAᵗ)`` payload rides a single plan — ``log P`` rounds
+        instead of the ``2·log P`` of two serialized butterflies, and the
+        replica copies of the stacked tuple double as fault-tolerance
+        copies for *both* leaves.  Returns ``((r, c_sum), valid)``;
+        per-leaf bit-identical to :meth:`reduce_r_prepared` followed by the
+        ``sum`` all-reduce over the same plan (same combine order, same
+        exchanges — only the messages are batched)."""
+        return execute_plan(
+            (r_local, c_local), comm, plan, FUSED_PANEL_COMBINER, fast=fast
         )
 
     def form_q(self, a_panel, r, comm: Comm):

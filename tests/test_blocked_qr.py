@@ -2,8 +2,6 @@
 numpy oracle, per-panel failure guarantees across variants, replica
 recovery vs honest corruption, the one-trailing-sweep-per-panel traffic
 model, and the 4096×512 acceptance shape."""
-import warnings
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -300,15 +298,17 @@ def test_panel_factorizer_backend_agnostic(rng):
     )
 
 
-def test_core_submodule_shims_warn():
+def test_core_submodule_shims_removed():
+    """The deprecated re-export stubs are gone; the canonical homes serve
+    the same names."""
     import importlib
     import sys
 
     for mod in ("repro.core.plan", "repro.core.faults", "repro.core.comm"):
         sys.modules.pop(mod, None)
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
+        with pytest.raises(ModuleNotFoundError):
             importlib.import_module(mod)
-        assert any(
-            issubclass(x.category, DeprecationWarning) for x in w
-        ), mod
+    core = importlib.import_module("repro.core")
+    collective = importlib.import_module("repro.collective")
+    for name in ("Plan", "FaultSpec", "SimComm", "make_plan"):
+        assert getattr(core, name) is getattr(collective, name)

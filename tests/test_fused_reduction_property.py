@@ -1,0 +1,251 @@
+"""Property-based coverage (hypothesis) for the fused stacked-payload
+reduction — the one-butterfly-per-panel collective behind DESIGN.md §10:
+
+  * a ``stacked(op1, op2)`` collective over a two-leaf payload is
+    bit-identical to composing the two single-payload collectives over the
+    *same plan* — values and validity — on both the fault-free fast path
+    and the forced general executor, for every plan variant, combiner
+    pairing (square QR leaves, packed symmetric Gram leaves, rectangular
+    sum leaves), and dtype;
+  * under mid-reduction deaths the stacked butterfly degrades exactly like
+    its per-leaf composition, and ONE ``replica_fetch`` of the stacked
+    tuple restores both leaves bit-identically to per-leaf fetches;
+  * at the driver level, ``blocked_qr_sim(fuse="auto")`` is bit-identical
+    to the serialized two-butterfly schedule (``fuse="off"``) — pipeline
+    and eager, fault-free and with panel-phase fault schedules that
+    exercise stacked recovery.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based sweeps need the hypothesis extra "
+    "(pip install -r requirements-dev.txt)"
+)
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.collective import (  # noqa: E402
+    FaultSpec,
+    SimComm,
+    execute_plan,
+    make_plan,
+    replica_fetch,
+    stacked,
+)
+from repro.qr.blocked import PanelFaultSchedule, blocked_qr_sim  # noqa: E402
+
+SET = settings(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+VARIANTS = ["tree", "redundant", "replace", "selfhealing"]
+# leaf kinds: how the payload for one stacked part is built
+PAIRS = [
+    ("qr", "sum"),          # the driver's panel payload: R leaf + C leaf
+    ("qr", "gram_sum"),     # square + packed-symmetric wire in one message
+    ("gram_sum", "sum"),
+    ("sum", "max"),
+]
+
+
+def _leaf(kind, p, rows, n, dt, seed):
+    rng = np.random.default_rng(seed)
+    if kind == "qr":
+        # tall f32 blocks — QR combines stay f32 in the driver too
+        return jnp.asarray(
+            rng.standard_normal((p, max(rows, n) + n, n)).astype(np.float32)
+        )
+    if kind == "gram_sum":
+        base = rng.standard_normal((p, max(rows, 2), n))
+        return jnp.asarray(
+            np.einsum("pmi,pmj->pij", base, base).astype(np.float32)
+        ).astype(dt)
+    return jnp.asarray(rng.standard_normal((p, rows, n))).astype(dt)
+
+
+def _bitwise_tree(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(
+        np.array_equal(
+            np.asarray(x, np.float32), np.asarray(y, np.float32),
+            equal_nan=True,
+        )
+        for x, y in zip(la, lb)
+    )
+
+
+# ---------------------------------------------------------------------------
+# stacked == composed per-part collectives, bit for bit
+# ---------------------------------------------------------------------------
+
+@given(
+    log_p=st.integers(1, 3),
+    variant=st.sampled_from(VARIANTS),
+    pair=st.sampled_from(PAIRS),
+    dt=st.sampled_from(DTYPES),
+    rows=st.integers(1, 10),
+    n=st.integers(1, 8),
+    fast=st.sampled_from([None, False]),
+    seed=st.integers(0, 2**16),
+)
+@SET
+def test_stacked_bit_identical_to_composed(log_p, variant, pair, dt, rows,
+                                           n, fast, seed):
+    p = 1 << log_p
+    op1, op2 = pair
+    x1 = _leaf(op1, p, rows, n, dt, seed)
+    x2 = _leaf(op2, p, rows, n, dt, seed + 1)
+    plan = make_plan(variant, p)
+    v_st, ok_st = execute_plan(
+        (x1, x2), SimComm(p), plan, stacked(op1, op2), fast=fast
+    )
+    v1, ok1 = execute_plan(x1, SimComm(p), plan, op1, fast=fast)
+    v2, ok2 = execute_plan(x2, SimComm(p), plan, op2, fast=fast)
+    assert np.array_equal(np.asarray(ok_st), np.asarray(ok1))
+    assert np.array_equal(np.asarray(ok_st), np.asarray(ok2))
+    assert _bitwise_tree(v_st, (v1, v2)), (variant, pair, dt, fast)
+
+
+@given(
+    log_p=st.integers(1, 3),
+    variant=st.sampled_from(["redundant", "replace", "selfhealing"]),
+    pair=st.sampled_from(PAIRS),
+    dt=st.sampled_from(DTYPES),
+    rows=st.integers(1, 8),
+    n=st.integers(1, 6),
+    step=st.integers(0, 2),
+    dead=st.integers(0, 7),
+    seed=st.integers(0, 2**16),
+)
+@SET
+def test_stacked_under_mid_reduction_death(log_p, variant, pair, dt, rows,
+                                           n, step, dead, seed):
+    """A rank dying mid-butterfly degrades the stacked reduction exactly
+    like its per-leaf composition — same survivor values, same validity."""
+    p = 1 << log_p
+    spec = FaultSpec.of({dead % p: min(step, log_p - 1)})
+    plan = make_plan(variant, p, spec)
+    op1, op2 = pair
+    x1 = _leaf(op1, p, rows, n, dt, seed)
+    x2 = _leaf(op2, p, rows, n, dt, seed + 1)
+    v_st, ok_st = execute_plan((x1, x2), SimComm(p), plan, stacked(op1, op2))
+    v1, ok1 = execute_plan(x1, SimComm(p), plan, op1)
+    v2, ok2 = execute_plan(x2, SimComm(p), plan, op2)
+    assert np.array_equal(np.asarray(ok_st), np.asarray(ok1))
+    assert np.array_equal(np.asarray(ok_st), np.asarray(ok2))
+    assert _bitwise_tree(v_st, (v1, v2)), (variant, pair, dt)
+    # the planner's host-side verdict is what the engine delivered
+    assert np.array_equal(np.asarray(ok_st), np.asarray(plan.final_valid))
+
+
+@given(
+    log_p=st.integers(1, 3),
+    variant=st.sampled_from(["redundant", "selfhealing"]),
+    dt=st.sampled_from(DTYPES),
+    n=st.integers(1, 6),
+    dead=st.integers(0, 7),
+    seed=st.integers(0, 2**16),
+)
+@SET
+def test_one_stacked_fetch_restores_both_leaves(log_p, variant, dt, n, dead,
+                                                seed):
+    """The replica copies double as FT copies for BOTH stacked results:
+    one pytree ``replica_fetch`` restores the pair bit-identically to two
+    per-leaf fetches, and every rank ends with a surviving rank's copy."""
+    p = 1 << log_p
+    spec = FaultSpec.of({dead % p: 0})
+    plan = make_plan(variant, p, spec)
+    if not np.asarray(plan.final_valid).any():
+        return                      # extinct: nothing to fetch (p == 2 tree)
+    x1 = _leaf("qr", p, 6, n, dt, seed)
+    x2 = _leaf("sum", p, 6, n, dt, seed + 1)
+    (r, c), ok = execute_plan((x1, x2), SimComm(p), plan, stacked("qr", "sum"))
+    valid = plan.final_valid
+    r_f, c_f = replica_fetch((r, c), SimComm(p), valid)
+    r_1 = replica_fetch(r, SimComm(p), valid)
+    c_1 = replica_fetch(c, SimComm(p), valid)
+    assert _bitwise_tree((r_f, c_f), (r_1, c_1))
+    donor = int(np.flatnonzero(np.asarray(valid))[0])
+    for rank in range(p):
+        assert _bitwise_tree(
+            (np.asarray(r_f)[rank], np.asarray(c_f)[rank]),
+            (np.asarray(r_f)[donor], np.asarray(c_f)[donor]),
+        )
+
+
+# ---------------------------------------------------------------------------
+# driver level: fuse="auto" == fuse="off", pipeline and eager, with faults
+# ---------------------------------------------------------------------------
+
+@given(
+    variant=st.sampled_from(["redundant", "replace", "selfhealing"]),
+    m_local=st.integers(24, 48),
+    n=st.integers(6, 20),
+    panel_width=st.sampled_from([4, 8]),
+    compute_q=st.booleans(),
+    pipeline=st.sampled_from(["on", "off"]),
+    seed=st.integers(0, 2**16),
+)
+@SET
+def test_driver_fused_bit_identical_to_two_butterfly(variant, m_local, n,
+                                                     panel_width, compute_q,
+                                                     pipeline, seed):
+    p = 4
+    m_local = max(m_local, 2 * n)
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((p, m_local, n)).astype(np.float32))
+    kw = dict(panel_width=panel_width, variant=variant, compute_q=compute_q,
+              pipeline=pipeline)
+    fused = blocked_qr_sim(a, fuse="auto", **kw)
+    split = blocked_qr_sim(a, fuse="off", **kw)
+    assert np.array_equal(np.asarray(fused.r), np.asarray(split.r))
+    assert np.array_equal(np.asarray(fused.valid), np.asarray(split.valid))
+    if compute_q:
+        assert np.array_equal(np.asarray(fused.q), np.asarray(split.q))
+
+
+@given(
+    variant=st.sampled_from(["redundant", "selfhealing"]),
+    n=st.integers(8, 16),
+    fault_panel=st.integers(0, 3),
+    dead=st.integers(0, 3),
+    step=st.integers(0, 1),
+    seed=st.integers(0, 2**16),
+)
+@SET
+def test_driver_fused_recovery_bit_identical(variant, n, fault_panel, dead,
+                                             step, seed):
+    """Panel-phase deaths ride the fused plan: the stacked fetch restores
+    R and W together, bit-identical to the split driver's two fetches."""
+    p = 4
+    k_panels = -(-n // 4)
+    fault_panel %= k_panels
+    faults = PanelFaultSchedule.of(panel={fault_panel: {dead: step}})
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((p, 4 * n, n)).astype(np.float32))
+    kw = dict(panel_width=4, variant=variant, faults=faults, compute_q=True)
+    fused = blocked_qr_sim(a, fuse="auto", **kw)
+    split = blocked_qr_sim(a, fuse="off", **kw)
+    assert np.array_equal(np.asarray(fused.valid), np.asarray(split.valid))
+    assert fused.recoverable == split.recoverable
+    if not fused.recoverable:
+        # beyond tolerance (e.g. a step-0 death in the redundant butterfly
+        # poisons every rank): both schedules NaN-poison — nothing left to
+        # compare bit for bit
+        return
+    assert np.array_equal(np.asarray(fused.r), np.asarray(split.r))
+    assert np.array_equal(np.asarray(fused.q), np.asarray(split.q))
+    # recovery happened through the stacked payload on the fused run: one
+    # fetch restores both leaves, so the counts agree (last panel has no
+    # cross-product leaf — nothing for recovered_w to count)
+    rep = fused.reports[fault_panel]
+    assert rep.fused
+    if rep.plan_w is not None:
+        assert rep.recovered_r == rep.recovered_w

@@ -356,16 +356,32 @@ def test_dispatch_counters(rng):
     with dispatch.track_dispatch() as d:
         dispatch.note_dispatch("x")
         dispatch.note_trace("y")
+        dispatch.note_rounds("x", 3)
+        dispatch.note_overlap("x", 2)
     assert d.n_dispatches == 1 and d.n_traces == 1
-    assert d.as_dict() == {"traces": {"y": 1}, "dispatches": {"x": 1}}
+    assert d.n_rounds == 3 and d.n_overlapped == 2
+    assert d.as_dict() == {
+        "traces": {"y": 1},
+        "dispatches": {"x": 1},
+        "rounds": {"x": 3},
+        "overlapped": {"x": 2},
+    }
     # traffic records carry dispatches/traces alongside bytes
     a = jnp.asarray(rng.standard_normal((32, 8)).astype(np.float32))
     with traffic.track_traffic() as t:
         kops.gram(a, use_pallas=True)
         kops.gram(a, use_pallas=True)
+        traffic.note(
+            "panel_reduce", dispatches=0, rounds=2, wire_bytes=64,
+            overlapped=1,
+        )
     assert t.dispatches == 2
-    assert {"dispatches", "traces"} <= set(t.records[0])
+    assert {"dispatches", "traces", "rounds", "wire_bytes"} <= set(
+        t.records[0]
+    )
     assert t.as_dict()["dispatches"] == 2
+    assert t.collective_rounds == 2 and t.rounds_of("panel_reduce") == 2
+    assert t.wire_bytes == 64 and t.overlapped == 1
 
 
 def test_dispatch_bench_case_runs():
