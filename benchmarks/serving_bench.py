@@ -1,0 +1,11 @@
+"""Shim — the serving benchmark lives in :mod:`repro.bench.cases.serving`.
+
+QR-as-a-service over shape-bucketed continuous batching: sustained
+mixed-shape throughput, p50/p99 latency, one batched dispatch per drained
+bucket, zero warm retraces after pre-warm, and bitwise fault re-serve.
+Run the gated version via ``python -m repro.bench run --case serving``.
+"""
+from repro.bench.cases.serving import case, main, run  # noqa: F401
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,7 +18,7 @@ import numpy as np
 from repro.collective import FaultSpec, make_plan, total_tolerance
 from repro.core import ref
 from repro.kernels import traffic
-from repro.qr import PanelFaultSchedule, blocked_qr_sim, tsqr_sim
+from repro.qr import PanelFaultSchedule, QRConfig, factorize
 
 VARIANTS = ("tree", "redundant", "replace", "selfhealing")
 
@@ -30,7 +30,9 @@ def banner(msg):
 def run(p, spec, blocks, truth):
     for variant in VARIANTS:
         plan = make_plan(variant, p, spec)
-        res = tsqr_sim(jnp.asarray(blocks), variant=variant, fault_spec=spec)
+        res = factorize(
+            jnp.asarray(blocks), QRConfig(variant=variant), faults=spec
+        )
         valid = np.asarray(res.valid)
         ok = all(
             np.allclose(np.asarray(res.r)[r], truth, atol=1e-3)
@@ -70,8 +72,11 @@ def tall_skinny():
     run(16, spec, blocks, truth)
 
     banner("Q factor via self-healing under failures")
-    res = tsqr_sim(jnp.asarray(blocks), variant="selfhealing",
-                   fault_spec=spec, compute_q=True)
+    res = factorize(
+        jnp.asarray(blocks),
+        QRConfig(variant="selfhealing", compute_q=True),
+        faults=spec,
+    )
     q = np.asarray(res.q).reshape(-1, 8)
     ortho = np.abs(q.T @ q - np.eye(8)).max()
     recon = np.abs(q @ np.asarray(res.r)[0] - blocks.reshape(-1, 8)).max()
@@ -92,7 +97,7 @@ def general_matrix():
 
     banner(f"General matrix {p * m_local}x{n}, panel width {pw}: fault-free")
     with traffic.track_traffic() as t:
-        res = blocked_qr_sim(a, panel_width=pw, compute_q=True)
+        res = factorize(a, QRConfig(panel_width=pw, compute_q=True))
     sweeps = t.sweeps_of("panel_cross", "trailing_update")
     r_err = np.abs(np.asarray(res.r)[0] - truth).max() / scale
     q = np.asarray(res.q).reshape(-1, n)
@@ -110,7 +115,9 @@ def general_matrix():
 
     banner("Deaths mid-factorization: panel 1's TSQR and panel 0's update")
     sched = PanelFaultSchedule.of(panel={1: {2: 1}}, update={0: {5: 1}})
-    res = blocked_qr_sim(a, panel_width=pw, variant="replace", faults=sched)
+    res = factorize(
+        a, QRConfig(panel_width=pw, variant="replace"), faults=sched
+    )
     valid = np.asarray(res.valid)
     print("  strict survivors:",
           "".join("1" if v else "0" for v in valid),

@@ -9,8 +9,9 @@ survivors still hold the correct R.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FaultSpec, tsqr_sim
+from repro.core import FaultSpec
 from repro.core import ref
+from repro.qr import QRConfig, factorize
 
 
 def main():
@@ -20,10 +21,10 @@ def main():
     truth = ref.qr_r(blocks.reshape(-1, n).astype(np.float64))
 
     # rank 5 dies at the entry of butterfly exchange 1
-    res = tsqr_sim(
+    res = factorize(
         jnp.asarray(blocks),
-        variant="redundant",
-        fault_spec=FaultSpec.of({5: 1}),
+        QRConfig(variant="redundant"),        # panel_width=None: TSQR
+        faults=FaultSpec.of({5: 1}),
     )
     valid = np.asarray(res.valid)
     print(f"ranks holding the final R after the failure: {np.nonzero(valid)[0]}")

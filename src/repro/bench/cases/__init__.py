@@ -16,5 +16,6 @@ from . import (  # noqa: F401
     robustness,
     roofline,
     semantics,
+    serving,
     tsqr_scaling,
 )

@@ -308,6 +308,38 @@ def guard() -> int:
         status = "ok" if delta == 0 else f"RETRACED x{delta}"
         print(f"[retrace-guard] {name}: {status}")
         failures += delta != 0
+
+    # Serving warm path: after prewarm + one mixed-shape pass (batched
+    # drains AND the fault re-serve fallback), a second pass over the whole
+    # bucket set must add zero traces of ANY kind — the shape buckets are
+    # the complete set of compile classes.
+    from repro.serve import (
+        BucketSpec,
+        CostModel,
+        PeriodicFaultInjector,
+        QRServer,
+    )
+
+    server = QRServer(
+        (BucketSpec(64, 8), BucketSpec(128, 16)),
+        p=4,
+        model=CostModel(max_batch_cap=2),
+        fault_injector=PeriodicFaultInjector.sampled(
+            2, variant="redundant", p=4
+        ),
+    )
+    server.prewarm()
+    mats = [
+        rng.standard_normal(s).astype(np.float32)
+        for s in ((40, 6), (120, 14), (56, 8), (96, 12))
+    ]
+    server.serve(mats)                           # warm (may trace)
+    before = disp.trace_count()
+    server.serve(mats)                           # must not trace again
+    delta = disp.trace_count() - before
+    status = "ok" if delta == 0 else f"RETRACED x{delta}"
+    print(f"[retrace-guard] serving:warm_stream: {status}")
+    failures += delta != 0
     return failures
 
 

@@ -18,7 +18,8 @@ import numpy as np
 
 from repro.bench.registry import bench_case
 from repro.bench.schema import Metric
-from repro.core import ref, tsqr_sim
+from repro.core import ref
+from repro.qr import QRConfig, factorize
 
 __all__ = ["bench_one", "case_local_qr", "case_scaling", "main"]
 
@@ -27,7 +28,8 @@ def bench_one(variant: str, p: int, m_loc: int, n: int, local_qr: str,
               iters: int = 5) -> float:
     rng = np.random.default_rng(0)
     blocks = jnp.asarray(ref.random_tall_skinny(rng, p, m_loc, n))
-    fn = jax.jit(lambda a: tsqr_sim(a, variant=variant, local_qr=local_qr).r)
+    cfg = QRConfig(variant=variant, local_r=local_qr)
+    fn = jax.jit(lambda a: factorize(a, cfg).r)
     fn(blocks).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):

@@ -195,7 +195,7 @@ def run_blocked_qr_scenario(sc: BlockedQRScenario, seed: int = 0) -> dict:
     import jax.numpy as jnp
 
     from repro.kernels import traffic
-    from repro.qr import PanelFaultSchedule, blocked_qr_sim
+    from repro.qr import PanelFaultSchedule, QRConfig, factorize
 
     rng = np.random.default_rng(seed)
     blocks = rng.standard_normal((sc.p, sc.m_local, sc.n)).astype(np.float32)
@@ -204,9 +204,10 @@ def run_blocked_qr_scenario(sc: BlockedQRScenario, seed: int = 0) -> dict:
         update={k: dict(deaths) for k, deaths in sc.update_deaths},
     )
     with traffic.track_traffic() as t:
-        res = blocked_qr_sim(
-            jnp.asarray(blocks), panel_width=sc.panel_width,
-            variant=sc.variant, faults=sched,
+        res = factorize(
+            jnp.asarray(blocks),
+            QRConfig(panel_width=sc.panel_width, variant=sc.variant),
+            faults=sched,
         )
     in_tol = all(rep.within_tolerance for rep in res.reports)
     valid = np.asarray(res.valid)

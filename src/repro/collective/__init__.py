@@ -46,7 +46,14 @@ from .engine import (
     plan_is_fault_free,
     replica_fetch,
 )
-from .faults import NEVER, FaultSpec, tolerance, total_tolerance, within_tolerance
+from .faults import (
+    NEVER,
+    FaultSpec,
+    sample_within_tolerance,
+    tolerance,
+    total_tolerance,
+    within_tolerance,
+)
 from .instrument import CommStats, InstrumentedComm
 from .packing import pack_sym, unpack_sym
 from .plan import VARIANTS, Plan, Step, ilog2, leaf_bytes, make_plan, payload_numel
@@ -85,6 +92,7 @@ __all__ = [
     "stacked",
     "unpack_sym",
     "qr_r",
+    "sample_within_tolerance",
     "tolerance",
     "total_tolerance",
     "within_tolerance",

@@ -31,6 +31,7 @@ NEVER: int = 1 << 30
 __all__ = [
     "NEVER",
     "FaultSpec",
+    "sample_within_tolerance",
     "tolerance",
     "total_tolerance",
     "within_tolerance",
@@ -164,3 +165,34 @@ def within_tolerance(variant: str, spec: FaultSpec, n_steps: int) -> bool:
     if variant == "selfhealing":
         return all(spec.new_at(s) <= tolerance(variant, s) for s in range(n_steps))
     raise ValueError(f"unknown variant {variant!r}")
+
+
+def sample_within_tolerance(
+    variant: str, n_ranks: int, n_steps: int, rng: np.random.Generator
+) -> FaultSpec:
+    """One random single-rank fail-stop death guaranteed within ``variant``'s
+    survival bound — the serving layer's mid-flight fault injector draws from
+    this so every injected death is *recoverable* (a batch whose fault
+    exceeded tolerance could not be re-served from replicas at all).
+
+    For ``redundant`` the union-bound measure ``2^{-s} < 1`` forces the death
+    to strike at exchange entry ``s ≥ 1`` (at entry of exchange 0 only one
+    copy of each local factor exists); ``replace``/``selfhealing`` tolerate
+    ``2^s − 1 ≥ 1`` deaths from step 1 as well.  ``tree`` tolerates nothing —
+    asking for a tolerable death is a caller error.
+    """
+    if variant == "tree":
+        raise ValueError(
+            "variant 'tree' has zero fault tolerance; there is no "
+            "within-tolerance death to sample"
+        )
+    if n_steps < 2:
+        raise ValueError(
+            f"n_steps={n_steps}: a single-exchange butterfly has no step "
+            "with a replica to recover from (need P >= 4)"
+        )
+    rank = int(rng.integers(0, n_ranks))
+    step = int(rng.integers(1, n_steps))
+    spec = FaultSpec.of({rank: step})
+    assert within_tolerance(variant, spec, n_steps)
+    return spec

@@ -237,8 +237,8 @@ def run_model_cell(arch: str, shape_name: str, multi_pod: bool,
 
 def run_tsqr_cell(workload_name: str, multi_pod: bool) -> dict:
     from repro.configs.tsqr_paper import WORKLOADS
-    from repro.core import tsqr_shard_map
     from repro.launch.mesh import make_tsqr_mesh
+    from repro.qr import QRConfig, factorize
     import jax.numpy as jnp
 
     w = WORKLOADS[workload_name]
@@ -251,9 +251,9 @@ def run_tsqr_cell(workload_name: str, multi_pod: bool) -> dict:
     compute_q = w.variant != "tree"     # tree: only rank 0 holds R (no Q)
 
     def run(a_):
-        res = tsqr_shard_map(
-            a_, mesh=mesh, axis="rows", variant=w.variant,
-            compute_q=compute_q, jit=False,
+        res = factorize(
+            a_, QRConfig(variant=w.variant, compute_q=compute_q),
+            mesh=mesh, axis="rows", jit=False,
         )
         return res.r, res.valid, res.q
 

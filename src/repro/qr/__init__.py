@@ -14,8 +14,15 @@ Built in three tiers (DESIGN.md §8):
     replicas, and the one-sweep-per-panel fused trailing update
     (:mod:`repro.kernels.trailing_update`).
 
+The unified entry facade lives in :mod:`repro.qr.api`: a frozen hashable
+:class:`~repro.qr.api.QRConfig` (doubling as the jit-cache key) plus one
+:func:`~repro.qr.api.factorize` call that routes sim / batched / shard_map
+by input rank and mesh presence.  The per-driver kwarg entry points below
+remain as deprecated delegating shims.
+
 ``repro.core.tsqr`` remains as a thin back-compat facade over this package.
 """
+from .api import Fuse, Pipeline, QRConfig, Recover, factorize
 from .blocked import (
     BlockedQRResult,
     PanelFaultSchedule,
@@ -30,14 +37,19 @@ from .tsqr import TSQRResult, tsqr_gram_shard_map, tsqr_shard_map, tsqr_sim
 
 __all__ = [
     "BlockedQRResult",
+    "Fuse",
     "PanelFactorizer",
     "PanelFaultSchedule",
     "PanelReport",
+    "Pipeline",
+    "QRConfig",
+    "Recover",
     "TSQRResult",
     "blocked_qr_batched",
     "blocked_qr_shard_map",
     "blocked_qr_sim",
     "chol_r",
+    "factorize",
     "form_q",
     "local_qr_fns",
     "panel_widths",

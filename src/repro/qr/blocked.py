@@ -83,6 +83,7 @@ from repro.kernels import ops as kops
 from repro.kernels import traffic as _traffic
 
 from ._shard import dummy_q, shard_compile
+from .api import Fuse, Pipeline, QRConfig, Recover, warn_deprecated_entry
 from .panel import PanelFactorizer, chol_r
 
 __all__ = [
@@ -219,8 +220,8 @@ def _build_reports(
     p: int,
     widths: tuple[int, ...],
     faults: PanelFaultSchedule,
-    recover: str,
-    fuse: str,
+    recover: Recover,
+    fuse: Fuse,
 ) -> tuple[PanelReport, ...]:
     n_panels = len(widths)
     for key in set(faults.panel) | set(faults.update):
@@ -247,7 +248,7 @@ def _build_reports(
         # specifically — panel-phase faults ride the fused plan_r (a
         # mid-reduction death strikes both leaves at once, and the one
         # replica fetch restores both).
-        fused = fuse != "off" and (last or k not in faults.update)
+        fused = fuse is not Fuse.OFF and (last or k not in faults.update)
         if not last:
             spec_w = faults.update.get(k, FaultSpec.none())
             plan_w = make_plan(variant, p, spec_w)
@@ -257,7 +258,7 @@ def _build_reports(
         )
         # recovered_* counts ranks replica_fetch actually restores — zero
         # when recovery is disabled (the ranks stay poisoned).
-        fetching = recover == "replica" and recoverable
+        fetching = recover is Recover.REPLICA and recoverable
         rec_r = int((~plan_r.final_valid).sum()) if fetching else 0
         if fused and plan_w is not None:
             rec_w = rec_r      # the one stacked fetch restores both leaves
@@ -279,13 +280,13 @@ def _build_reports(
                 fused=fused,
             )
         )
-    if fuse == "on":
+    if fuse is Fuse.ON:
         bad = [r.panel for r in reports if not r.fused]
         if bad:
             raise ValueError(
-                f"fuse='on' but panels {bad} carry update-phase faults, "
+                f"fuse=Fuse.ON but panels {bad} carry update-phase faults, "
                 "which require the split two-butterfly schedule; schedule "
-                "the death on the panel phase or use fuse='auto'"
+                "the death on the panel phase or use Fuse.AUTO"
             )
     return tuple(reports)
 
@@ -467,21 +468,17 @@ def _plans_fault_free(reports: tuple[PanelReport, ...]) -> bool:
     )
 
 
-def _resolve_pipeline(pipeline: str, reports) -> bool:
-    """Validate the ``pipeline`` mode and decide the path: True → the
-    scan-compiled single program, False → the eager general driver."""
-    if pipeline not in ("auto", "on", "off"):
-        raise ValueError(
-            f"pipeline must be 'auto', 'on' or 'off', got {pipeline!r}"
-        )
+def _resolve_pipeline(pipeline: Pipeline, reports) -> bool:
+    """Decide the path for a validated mode: True → the scan-compiled
+    single program, False → the eager general driver."""
     fault_free = _plans_fault_free(reports)
-    if pipeline == "on" and not fault_free:
+    if pipeline is Pipeline.ON and not fault_free:
         raise ValueError(
-            "pipeline='on' requires fault-free plans (the scan-compiled "
-            "program has no validity machinery); faulty plans route to the "
-            "general driver under pipeline='auto'"
+            "pipeline=Pipeline.ON requires fault-free plans (the "
+            "scan-compiled program has no validity machinery); faulty plans "
+            "route to the general driver under Pipeline.AUTO"
         )
-    return fault_free and pipeline != "off"
+    return fault_free and pipeline is not Pipeline.OFF
 
 
 def _pipeline_body(
@@ -706,27 +703,27 @@ def _pipeline_body_fused(
 @functools.lru_cache(maxsize=64)
 def _compiled_sim_pipeline(
     p: int,
-    variant: str,
     widths: tuple[int, ...],
-    pf: PanelFactorizer,
-    local_r: str,
-    compute_q: bool,
-    use_pallas: bool,
-    interpret: bool | None,
+    config: QRConfig,
     batched: bool,
-    fused: bool,
 ):
-    """One compiled program per static configuration; the jit cache under it
-    keys on the payload's (treedef, shapes, dtypes) — repeat calls with
-    identical shapes perform zero new traces (CI retrace-guarded)."""
+    """One compiled program per ``(geometry, canonical config)``; the jit
+    cache under it keys on the payload's (treedef, shapes, dtypes) — repeat
+    calls with identical shapes perform zero new traces (CI
+    retrace-guarded).  ``config`` must be :meth:`QRConfig.canonical` so
+    policy knobs that do not change the traced program never split the
+    cache (the old builder keyed on an ad-hoc 10-tuple of loose kwargs)."""
     comm = SimComm(p)
-    plan = make_plan(variant, p)
+    plan = make_plan(config.variant, p)
+    pf = config.factorizer()
 
     def fn(a):
         _dispatch.note_trace(PIPELINE_NAME)
         return _pipeline_body(
-            a, comm, plan, widths, pf, local_r=local_r, compute_q=compute_q,
-            use_pallas=use_pallas, interpret=interpret, fused=fused,
+            a, comm, plan, widths, pf,
+            local_r=config.resolved_local_r(), compute_q=config.compute_q,
+            use_pallas=config.use_pallas, interpret=config.interpret,
+            fused=config.fuse is not Fuse.OFF,
         )
 
     return jax.jit(jax.vmap(fn) if batched else fn)
@@ -862,13 +859,9 @@ def _note_pipeline(shape, dtype, widths, traced: int,
     )
 
 
-def _run_sim_pipeline(
-    a, variant, widths, pf, reports, *,
-    local_r, compute_q, use_pallas, interpret, fused, batched=False,
-):
+def _run_sim_pipeline(a, widths, config: QRConfig, reports, *, batched=False):
     fun = _compiled_sim_pipeline(
-        a.shape[-3], variant, widths, pf, local_r, compute_q,
-        use_pallas, interpret, batched, fused,
+        a.shape[-3], widths, config.canonical(), batched
     )
     t0 = _dispatch.trace_count(PIPELINE_NAME)
     # suppress the wrappers' own notes while the body traces (a cqr2 local
@@ -878,7 +871,7 @@ def _run_sim_pipeline(
         out = fun(a)
     _note_pipeline(
         a.shape, a.dtype, widths,
-        _dispatch.trace_count(PIPELINE_NAME) - t0, reports, pf.reorth,
+        _dispatch.trace_count(PIPELINE_NAME) - t0, reports, config.reorth,
     )
     return out
 
@@ -886,45 +879,198 @@ def _run_sim_pipeline(
 def _setup(
     m_local: int,
     n: int,
-    panel_width: int,
-    variant: str,
     p: int,
+    config: QRConfig,
     faults: PanelFaultSchedule | None,
-    local_r: str,
-    reorth: int,
-    recover: str,
-    fuse: str = "auto",
 ) -> tuple[tuple[int, ...], tuple[PanelReport, ...], PanelFactorizer]:
-    """Shared entry-point validation + host planning (sim and shard_map)."""
-    if recover not in ("replica", "off"):
-        raise ValueError(f"recover must be 'replica' or 'off', got {recover!r}")
-    if fuse not in ("auto", "on", "off"):
-        raise ValueError(f"fuse must be 'auto', 'on' or 'off', got {fuse!r}")
-    widths = panel_widths(n, panel_width)
+    """Shared entry-point geometry validation + host planning (sim and
+    shard_map).  Policy validation already happened in ``QRConfig``."""
+    if config.panel_width is None:
+        raise ValueError(
+            "the blocked driver needs panel_width; panel_width=None selects "
+            "the single-panel TSQR workload (route through "
+            "repro.qr.api.factorize)"
+        )
+    widths = panel_widths(n, config.panel_width)
     if m_local < max(widths):
         raise ValueError(
             f"each rank's row block ({m_local} rows) must be at least as "
             f"tall as the widest panel ({max(widths)}); shrink panel_width "
             "or use fewer ranks"
         )
-    from .panel import local_qr_fns
-
-    if local_r != "chol" and local_r not in local_qr_fns:
-        raise ValueError(
-            f"unknown local_r {local_r!r}; choose 'chol' (zero-extra-sweep "
-            f"lookahead Gram) or one of {sorted(local_qr_fns)}"
-        )
     reports = _build_reports(
-        variant, p, widths, faults or PanelFaultSchedule(), recover, fuse
+        config.variant, p, widths, faults or PanelFaultSchedule(),
+        config.recover, config.fuse,
     )
-    pf = PanelFactorizer(
-        local_qr="jnp" if local_r == "chol" else local_r, reorth=reorth
-    )
-    return widths, reports, pf
+    return widths, reports, config.factorizer()
 
 
 # ---------------------------------------------------------------------------
-# Entry points
+# factorize() implementations (routed to by repro.qr.api.factorize)
+# ---------------------------------------------------------------------------
+
+def _factorize_sim(
+    a_blocks, config: QRConfig, *, faults: PanelFaultSchedule | None = None
+) -> BlockedQRResult:
+    """Single-device simulation: ``a_blocks`` is (P, m_local, n) — the
+    general-matrix analogue of the TSQR sim driver.  Fault-free runs
+    compile into the single-dispatch scan pipeline per ``config.pipeline``;
+    faulty plans route to the eager host-replanned general driver."""
+    p, m_local, n = a_blocks.shape
+    widths, reports, pf = _setup(m_local, n, p, config, faults)
+    if _resolve_pipeline(config.pipeline, reports):
+        r, valid, q = _run_sim_pipeline(a_blocks, widths, config, reports)
+    else:
+        r, valid, q = _blocked_body(
+            a_blocks, SimComm(p), reports, widths, pf,
+            local_r=config.resolved_local_r(), compute_q=config.compute_q,
+            use_pallas=config.use_pallas, interpret=config.interpret,
+        )
+        _note_eager_reductions("blocked_qr_sim", reports, widths, n, pf)
+    return BlockedQRResult(
+        r=r, valid=valid, q=q, reports=reports,
+        panel_width=config.panel_width,
+    )
+
+
+def _factorize_batched(a_batch, config: QRConfig) -> BlockedQRResult:
+    """B independent factorizations in **one** device dispatch.
+
+    ``a_batch`` is (B, P, m_local, n): B user matrices, each row-blocked
+    over the same P simulated ranks.  The scan pipeline is ``vmap``-ped
+    over the leading axis inside one compiled program, so serving B
+    requests costs one launch.  Each element matches the 3-D sim driver on
+    that matrix to ~1 ulp of the triangular solves (XLA's *batched*
+    triangular-solve lowering reorders intra-solve arithmetic, so the
+    agreement is fp-tight rather than bitwise — the ``dispatch`` bench
+    case gates it hard; see DESIGN.md §9).  Fault-free only (a real fleet
+    replans at step boundaries; faulted batches go matrix-by-matrix
+    through the general driver — :mod:`repro.serve` automates exactly
+    that).  Returns a result with leading (B,) axes on ``r``/``valid``
+    (and ``q``).
+    """
+    if a_batch.ndim != 4:
+        raise ValueError(
+            f"a_batch must be (B, P, m_local, n), got shape {a_batch.shape}"
+        )
+    _, p, m_local, n = a_batch.shape
+    widths, reports, _ = _setup(m_local, n, p, config, None)
+    if not _plans_fault_free(reports):
+        raise ValueError(
+            f"variant {config.variant!r} is not pipeline-eligible (its "
+            "fault-free plans leave ranks invalid, which the scan-compiled "
+            "program has no machinery to track); batch via jax.vmap over "
+            "the 3-D sim entry instead"
+        )
+    r, valid, q = _run_sim_pipeline(
+        a_batch, widths, config, reports, batched=True
+    )
+    return BlockedQRResult(
+        r=r, valid=valid, q=q, reports=reports,
+        panel_width=config.panel_width,
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_shard_pipeline(
+    mesh, axis: str, p: int, widths, config: QRConfig, jit: bool
+):
+    """One compiled shard_map pipeline per ``(mesh geometry, canonical
+    config)`` — ``config`` must be :meth:`QRConfig.canonical` so policy
+    knobs that don't change the traced program never split the cache."""
+    comm = ShardMapComm(p, axis)
+    plan = make_plan(config.variant, p)
+    pf = config.factorizer()
+    want_q = config.compute_q
+
+    def body(a_blk):
+        _dispatch.note_trace(PIPELINE_NAME)
+        r, valid, q = _pipeline_body(
+            a_blk, comm, plan, widths, pf,
+            local_r=config.resolved_local_r(), compute_q=want_q,
+            use_pallas=config.use_pallas, interpret=config.interpret,
+            fused=config.fuse is not Fuse.OFF,
+        )
+        return r[None], valid[None], q if want_q else dummy_q(a_blk)
+
+    return shard_compile(body, mesh=mesh, axis=axis, n_outputs=3, jit=jit)
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_shard_general(
+    mesh, axis: str, p: int, reports, widths, config: QRConfig, jit: bool
+):
+    """The host-replanned general driver under ``shard_map`` — cached at
+    module level (the old per-call ``jax.jit(shard)`` rebuilt the wrapper
+    and discarded the compile cache on every invocation).  Keyed on the
+    fault-bearing ``reports`` (they alter the traced collective schedule)
+    plus the canonical config."""
+    comm = ShardMapComm(p, axis)
+    pf = config.factorizer()
+    want_q = config.compute_q
+
+    def body(a_blk):
+        _dispatch.note_trace("blocked_qr_shard_map")
+        r, valid, q = _blocked_body(
+            a_blk, comm, reports, widths, pf,
+            local_r=config.resolved_local_r(), compute_q=want_q,
+            use_pallas=config.use_pallas, interpret=config.interpret,
+        )
+        return r[None], valid[None], q if want_q else dummy_q(a_blk)
+
+    return shard_compile(body, mesh=mesh, axis=axis, n_outputs=3, jit=jit)
+
+
+def _factorize_shard_map(
+    a_global,
+    config: QRConfig,
+    *,
+    mesh,
+    axis: str,
+    faults: PanelFaultSchedule | None = None,
+    jit: bool = True,
+) -> BlockedQRResult:
+    """Production path: A (m, n) row-sharded over ``mesh`` axis ``axis``.
+
+    Same body as the sim driver under ``shard_map`` — exchanges lower to
+    ``lax.ppermute``, replica fetches ride the same wires.  Fault-free
+    runs compile into the single-dispatch scan pipeline; faulted plans
+    route to the general driver.  Both programs are cached at module
+    level, so repeat calls with identical statics and shapes perform zero
+    new traces.  Returns r (P, n, n) (one copy per rank), valid (P,),
+    q (m, n) row-sharded or None.
+    """
+    p = mesh.shape[axis]
+    m, n = a_global.shape
+    widths, reports, pf = _setup(m // p, n, p, config, faults)
+    if _resolve_pipeline(config.pipeline, reports):
+        fun = _compiled_shard_pipeline(
+            mesh, axis, p, widths, config.canonical(), jit
+        )
+        t0 = _dispatch.trace_count(PIPELINE_NAME)
+        with _traffic.suppress(), _dispatch.suppress():
+            r, valid, q = fun(a_global)
+        _note_pipeline(
+            (p, m // p, n), a_global.dtype, widths,
+            _dispatch.trace_count(PIPELINE_NAME) - t0, reports, pf.reorth,
+        )
+    else:
+        fun = _compiled_shard_general(
+            mesh, axis, p, reports, widths, config.canonical(), jit
+        )
+        _dispatch.note_dispatch("blocked_qr_shard_map")
+        r, valid, q = fun(a_global)
+        _note_eager_reductions(
+            "blocked_qr_shard_map", reports, widths, n, pf
+        )
+    return BlockedQRResult(
+        r=r, valid=valid, q=(q if config.compute_q else None),
+        reports=reports, panel_width=config.panel_width,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Legacy kwarg entry points (deprecated shims over the implementations)
 # ---------------------------------------------------------------------------
 
 def blocked_qr_sim(
@@ -942,46 +1088,17 @@ def blocked_qr_sim(
     pipeline: str = "auto",
     fuse: str = "auto",
 ) -> BlockedQRResult:
-    """Single-device simulation: ``a_blocks`` is (P, m_local, n) — the
-    general-matrix analogue of :func:`repro.qr.tsqr.tsqr_sim`.
-
-    ``pipeline`` — ``"auto"`` (default) compiles fault-free runs into the
-    single-dispatch scan pipeline and falls back to the eager per-panel
-    driver whenever any plan carries faults (the host-replanned general
-    path); ``"on"`` demands the pipeline (raises on faulty plans);
-    ``"off"`` forces the eager driver (the bit-identity oracle).
-
-    ``fuse`` — ``"auto"`` (default) ships each panel's R and cross-product
-    leaves as ONE stacked butterfly (``log P`` rounds per panel instead of
-    ``2·log P``, issued one pipeline stage ahead of consumption) on every
-    panel the schedule allows — only panels with update-phase faults fall
-    back to the split schedule, since the scheduled death indexes the
-    second butterfly's exchanges; ``"on"`` demands fusion everywhere
-    (raises when update-phase faults are scheduled); ``"off"`` restores
-    the serialized two-butterfly schedule (the pre-fusion oracle —
-    bit-identical results either way).
-    """
-    p, m_local, n = a_blocks.shape
-    widths, reports, pf = _setup(
-        m_local, n, panel_width, variant, p, faults, local_r, reorth,
-        recover, fuse,
+    """Deprecated kwarg shim — build a :class:`~repro.qr.api.QRConfig` and
+    call :func:`repro.qr.api.factorize` on the (P, m_local, n) row blocks
+    instead.  The kwargs map 1:1 onto config fields; results are
+    bit-identical (this shim delegates to the same implementation)."""
+    warn_deprecated_entry("blocked_qr_sim")
+    config = QRConfig(
+        panel_width=panel_width, variant=variant, local_r=local_r,
+        reorth=reorth, compute_q=compute_q, use_pallas=use_pallas,
+        interpret=interpret, pipeline=pipeline, fuse=fuse, recover=recover,
     )
-    if _resolve_pipeline(pipeline, reports):
-        r, valid, q = _run_sim_pipeline(
-            a_blocks, variant, widths, pf, reports, local_r=local_r,
-            compute_q=compute_q, use_pallas=use_pallas, interpret=interpret,
-            fused=fuse != "off",
-        )
-    else:
-        r, valid, q = _blocked_body(
-            a_blocks, SimComm(p), reports, widths, pf,
-            local_r=local_r, compute_q=compute_q, use_pallas=use_pallas,
-            interpret=interpret,
-        )
-        _note_eager_reductions("blocked_qr_sim", reports, widths, n, pf)
-    return BlockedQRResult(
-        r=r, valid=valid, q=q, reports=reports, panel_width=panel_width
-    )
+    return _factorize_sim(a_blocks, config, faults=faults)
 
 
 def blocked_qr_batched(
@@ -996,86 +1113,16 @@ def blocked_qr_batched(
     interpret: bool | None = None,
     fuse: str = "auto",
 ) -> BlockedQRResult:
-    """B independent factorizations in **one** device dispatch.
-
-    ``a_batch`` is (B, P, m_local, n): B user matrices, each row-blocked
-    over the same P simulated ranks.  The scan pipeline is ``vmap``-ped
-    over the leading axis inside one compiled program, so serving B
-    requests costs one launch.  Each element matches
-    :func:`blocked_qr_sim` on that matrix to ~1 ulp of the triangular
-    solves (XLA's *batched* triangular-solve lowering reorders intra-solve
-    arithmetic, so the agreement is fp-tight rather than bitwise — the
-    ``dispatch`` bench case gates it hard; see DESIGN.md §9).  Fault-free
-    only (a real fleet replans at step boundaries; faulted batches go
-    matrix-by-matrix through the general driver).  Returns a result with
-    leading (B,) axes on ``r``/``valid`` (and ``q``).
-    """
-    if a_batch.ndim != 4:
-        raise ValueError(
-            f"a_batch must be (B, P, m_local, n), got shape {a_batch.shape}"
-        )
-    _, p, m_local, n = a_batch.shape
-    widths, reports, pf = _setup(
-        m_local, n, panel_width, variant, p, None, local_r, reorth,
-        "replica", fuse,
+    """Deprecated kwarg shim — build a :class:`~repro.qr.api.QRConfig` and
+    call :func:`repro.qr.api.factorize` on the (B, P, m_local, n) batch
+    instead (one device dispatch either way, bit-identical results)."""
+    warn_deprecated_entry("blocked_qr_batched")
+    config = QRConfig(
+        panel_width=panel_width, variant=variant, local_r=local_r,
+        reorth=reorth, compute_q=compute_q, use_pallas=use_pallas,
+        interpret=interpret, fuse=fuse,
     )
-    if not _plans_fault_free(reports):
-        raise ValueError(
-            f"variant {variant!r} is not pipeline-eligible (its fault-free "
-            "plans leave ranks invalid, which the scan-compiled program has "
-            "no machinery to track); batch via jax.vmap over blocked_qr_sim "
-            "instead"
-        )
-    r, valid, q = _run_sim_pipeline(
-        a_batch, variant, widths, pf, reports, local_r=local_r,
-        compute_q=compute_q, use_pallas=use_pallas, interpret=interpret,
-        fused=fuse != "off", batched=True,
-    )
-    return BlockedQRResult(
-        r=r, valid=valid, q=q, reports=reports, panel_width=panel_width
-    )
-
-
-@functools.lru_cache(maxsize=64)
-def _compiled_shard_pipeline(
-    mesh, axis: str, p: int, variant: str, widths, pf,
-    local_r: str, want_q: bool, use_pallas: bool, interpret, jit: bool,
-    fused: bool,
-):
-    comm = ShardMapComm(p, axis)
-    plan = make_plan(variant, p)
-
-    def body(a_blk):
-        _dispatch.note_trace(PIPELINE_NAME)
-        r, valid, q = _pipeline_body(
-            a_blk, comm, plan, widths, pf, local_r=local_r, compute_q=want_q,
-            use_pallas=use_pallas, interpret=interpret, fused=fused,
-        )
-        return r[None], valid[None], q if want_q else dummy_q(a_blk)
-
-    return shard_compile(body, mesh=mesh, axis=axis, n_outputs=3, jit=jit)
-
-
-@functools.lru_cache(maxsize=64)
-def _compiled_shard_general(
-    mesh, axis: str, p: int, reports, widths, pf,
-    local_r: str, want_q: bool, use_pallas: bool, interpret, jit: bool,
-):
-    """The host-replanned general driver under ``shard_map`` — cached at
-    module level (the old per-call ``jax.jit(shard)`` rebuilt the wrapper
-    and discarded the compile cache on every invocation)."""
-    comm = ShardMapComm(p, axis)
-
-    def body(a_blk):
-        _dispatch.note_trace("blocked_qr_shard_map")
-        r, valid, q = _blocked_body(
-            a_blk, comm, reports, widths, pf,
-            local_r=local_r, compute_q=want_q, use_pallas=use_pallas,
-            interpret=interpret,
-        )
-        return r[None], valid[None], q if want_q else dummy_q(a_blk)
-
-    return shard_compile(body, mesh=mesh, axis=axis, n_outputs=3, jit=jit)
+    return _factorize_batched(a_batch, config)
 
 
 def blocked_qr_shard_map(
@@ -1096,49 +1143,15 @@ def blocked_qr_shard_map(
     pipeline: str = "auto",
     fuse: str = "auto",
 ) -> BlockedQRResult:
-    """Production path: A (m, n) row-sharded over ``mesh`` axis ``axis``.
-
-    Same body as :func:`blocked_qr_sim` under ``shard_map`` — exchanges
-    lower to ``lax.ppermute``, replica fetches ride the same wires.
-    Fault-free runs compile into the single-dispatch scan pipeline
-    (``pipeline``/``fuse`` semantics as in :func:`blocked_qr_sim`; the
-    fused schedule's one-butterfly-per-panel issue sites give XLA's async
-    collective scheduler a full pipeline stage between each ``ppermute``
-    chain and its consumer); faulted plans route to the general driver.
-    Both programs are cached at module level, so repeat calls with
-    identical statics and shapes perform zero new traces.  Returns r
-    (P, n, n) (one copy per rank), valid (P,), q (m, n) row-sharded or
-    None.
-    """
-    p = mesh.shape[axis]
-    m, n = a_global.shape
-    widths, reports, pf = _setup(
-        m // p, n, panel_width, variant, p, faults, local_r, reorth,
-        recover, fuse,
+    """Deprecated kwarg shim — build a :class:`~repro.qr.api.QRConfig` and
+    call :func:`repro.qr.api.factorize` with ``mesh=``/``axis=`` instead
+    (same shard_map drivers, bit-identical results)."""
+    warn_deprecated_entry("blocked_qr_shard_map")
+    config = QRConfig(
+        panel_width=panel_width, variant=variant, local_r=local_r,
+        reorth=reorth, compute_q=compute_q, use_pallas=use_pallas,
+        interpret=interpret, pipeline=pipeline, fuse=fuse, recover=recover,
     )
-    if _resolve_pipeline(pipeline, reports):
-        fun = _compiled_shard_pipeline(
-            mesh, axis, p, variant, widths, pf, local_r, compute_q,
-            use_pallas, interpret, jit, fuse != "off",
-        )
-        t0 = _dispatch.trace_count(PIPELINE_NAME)
-        with _traffic.suppress(), _dispatch.suppress():
-            r, valid, q = fun(a_global)
-        _note_pipeline(
-            (p, m // p, n), a_global.dtype, widths,
-            _dispatch.trace_count(PIPELINE_NAME) - t0, reports, pf.reorth,
-        )
-    else:
-        fun = _compiled_shard_general(
-            mesh, axis, p, reports, widths, pf, local_r, compute_q,
-            use_pallas, interpret, jit,
-        )
-        _dispatch.note_dispatch("blocked_qr_shard_map")
-        r, valid, q = fun(a_global)
-        _note_eager_reductions(
-            "blocked_qr_shard_map", reports, widths, n, pf
-        )
-    return BlockedQRResult(
-        r=r, valid=valid, q=(q if compute_q else None),
-        reports=reports, panel_width=panel_width,
+    return _factorize_shard_map(
+        a_global, config, mesh=mesh, axis=axis, faults=faults, jit=jit
     )

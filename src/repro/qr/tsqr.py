@@ -51,6 +51,7 @@ from repro.collective.plan import Plan, make_plan
 from repro.kernels import dispatch as _dispatch
 
 from ._shard import dummy_q, shard_compile
+from .api import QRConfig, warn_deprecated_entry
 from .panel import PanelFactorizer, form_q
 
 __all__ = [
@@ -132,48 +133,75 @@ def _compiled_tsqr_gram_shard(mesh, axis: str, p: int, reorth: int,
 
 
 # ---------------------------------------------------------------------------
-# Public entry points
+# factorize() implementations (routed to by repro.qr.api.factorize)
 # ---------------------------------------------------------------------------
 
-def tsqr_sim(
-    a_blocks,
-    *,
-    variant: str = "redundant",
-    fault_spec: FaultSpec | None = None,
-    compute_q: bool = False,
-    reorth: int = 1,
-    local_qr: str | Callable = "jnp",
+def _factorize_sim(
+    a_blocks, config: QRConfig, *, fault_spec: FaultSpec | None = None
 ) -> TSQRResult:
     """Single-device simulation: ``a_blocks`` is (P, m_local, n).
 
     This is the backend the test-suite and the hypothesis robustness sweeps
-    drive; the algorithm body is shared with :func:`tsqr_shard_map`.
+    drive; the algorithm body is shared with the shard_map driver.
     """
     p = a_blocks.shape[0]
-    plan = make_plan(variant, p, fault_spec)
-    if compute_q and not plan.final_valid.all():
+    plan = make_plan(config.variant, p, fault_spec)
+    if config.compute_q and not plan.final_valid.all():
         raise ValueError(
             "compute_q requires an all-valid plan (fault-free, or "
             "self-healing within tolerance); got final_valid="
             f"{plan.final_valid}"
         )
     comm = SimComm(p)
-    pf = PanelFactorizer(local_qr=local_qr, reorth=reorth)
+    pf = config.factorizer()
     r, valid = pf.reduce_r(a_blocks, comm, plan)
     q = None
-    if compute_q:
+    if config.compute_q:
         q, r = pf.form_q(a_blocks, r, comm)
     return TSQRResult(r=r, valid=valid, q=q, plan=plan)
 
 
-def tsqr_gram_shard_map(
-    a_global,
-    *,
-    mesh,
-    axis: str,
-    reorth: int = 1,
-    jit: bool = True,
-):
+@functools.lru_cache(maxsize=64)
+def _compiled_tsqr_batched(p: int, config: QRConfig):
+    """One compiled vmap-batched TSQR per ``(P, canonical config)``: B
+    independent tall-skinny factorizations in one device dispatch (the
+    single-panel analogue of the blocked batched pipeline)."""
+    comm = SimComm(p)
+    plan = make_plan(config.variant, p)
+    pf = config.factorizer()
+
+    def fn(a):
+        _dispatch.note_trace("tsqr_batched")
+        r, valid = pf.reduce_r(a, comm, plan)
+        q = None
+        if config.compute_q:
+            q, r = pf.form_q(a, r, comm)
+        return r, valid, q
+    return jax.jit(jax.vmap(fn)), plan
+
+
+def _factorize_batched(a_batch, config: QRConfig) -> TSQRResult:
+    """B independent TSQRs in one device dispatch; ``a_batch`` is
+    (B, P, m_local, n).  Fault-free only, like the blocked batched path."""
+    if a_batch.ndim != 4:
+        raise ValueError(
+            f"a_batch must be (B, P, m_local, n), got shape {a_batch.shape}"
+        )
+    p = a_batch.shape[1]
+    fun, plan = _compiled_tsqr_batched(p, config.canonical())
+    if config.compute_q and not plan.final_valid.all():
+        raise ValueError(
+            "compute_q requires an all-valid plan; variant "
+            f"{config.variant!r} leaves ranks invalid even fault-free"
+        )
+    _dispatch.note_dispatch("tsqr_batched")
+    r, valid, q = fun(a_batch)
+    return TSQRResult(r=r, valid=valid, q=q, plan=plan)
+
+
+def _factorize_gram_shard(
+    a_global, config: QRConfig, *, mesh, axis: str, jit: bool = True
+) -> TSQRResult:
     """Beyond-paper optimized TSQR: the **Gram butterfly** (EXPERIMENTS.md
     §Perf, cell C).
 
@@ -194,11 +222,95 @@ def tsqr_gram_shard_map(
     certified for κ(A) ≲ 1/√ε like CQR2.
     """
     p = mesh.shape[axis]
-    fun = _compiled_tsqr_gram_shard(mesh, axis, p, reorth, jit)
+    fun = _compiled_tsqr_gram_shard(mesh, axis, p, config.reorth, jit)
     _dispatch.note_dispatch("tsqr_gram_shard_map")
     r, q = fun(a_global)
     return TSQRResult(r=r, valid=jnp.ones((p,), bool), q=q,
                       plan=make_plan("redundant", p))
+
+
+def _factorize_shard(
+    a_global,
+    config: QRConfig,
+    *,
+    mesh,
+    axis: str,
+    fault_spec: FaultSpec | None = None,
+    jit: bool = True,
+) -> TSQRResult:
+    """Production path: A (m, n) row-sharded over ``mesh`` axis ``axis``.
+
+    Returns r (P, n, n) — one (replicated-if-valid) copy per rank — valid
+    (P,) and q (m, n) row-sharded (or None).
+
+    The permutation plan is host-computed from ``fault_spec``; on a real
+    fleet the runtime re-invokes this with a fresh plan after each health
+    change (step-boundary replanning, DESIGN.md §2).
+    """
+    p = mesh.shape[axis]
+    plan = make_plan(config.variant, p, fault_spec)
+    if config.compute_q and not plan.final_valid.all():
+        raise ValueError(
+            "compute_q requires an all-valid plan (fault-free, or "
+            "self-healing within tolerance)"
+        )
+    pf = config.factorizer()
+    fun = _compiled_tsqr_shard(mesh, axis, plan, pf, config.compute_q, jit)
+    _dispatch.note_dispatch("tsqr_shard_map")
+    r, valid, q = fun(a_global)
+    return TSQRResult(
+        r=r, valid=valid, q=(q if config.compute_q else None), plan=plan
+    )
+
+
+# ---------------------------------------------------------------------------
+# Legacy kwarg entry points (deprecated shims over the implementations)
+# ---------------------------------------------------------------------------
+
+def _config_of(compute_q, reorth, local_qr) -> QRConfig:
+    return QRConfig(
+        panel_width=None, local_r=local_qr, reorth=reorth,
+        compute_q=compute_q,
+    )
+
+
+def tsqr_sim(
+    a_blocks,
+    *,
+    variant: str = "redundant",
+    fault_spec: FaultSpec | None = None,
+    compute_q: bool = False,
+    reorth: int = 1,
+    local_qr: str | Callable = "jnp",
+) -> TSQRResult:
+    """Deprecated kwarg shim — build a :class:`~repro.qr.api.QRConfig`
+    (``panel_width=None`` selects TSQR) and call
+    :func:`repro.qr.api.factorize` on the (P, m_local, n) row blocks
+    instead; results are bit-identical (this delegates to the same
+    implementation)."""
+    warn_deprecated_entry("tsqr_sim")
+    config = dataclasses.replace(
+        _config_of(compute_q, reorth, local_qr), variant=variant
+    )
+    return _factorize_sim(a_blocks, config, fault_spec=fault_spec)
+
+
+def tsqr_gram_shard_map(
+    a_global,
+    *,
+    mesh,
+    axis: str,
+    reorth: int = 1,
+    jit: bool = True,
+):
+    """Deprecated kwarg shim — build a :class:`~repro.qr.api.QRConfig` with
+    ``gram=True`` and call :func:`repro.qr.api.factorize` with ``mesh=``
+    instead (same Gram-butterfly driver, bit-identical results)."""
+    warn_deprecated_entry("tsqr_gram_shard_map")
+    config = QRConfig(panel_width=None, gram=True, reorth=reorth)
+    return _factorize_gram_shard(
+        a_global, config, mesh=mesh, axis=axis, jit=jit
+    )
 
 
 def tsqr_shard_map(
@@ -213,26 +325,15 @@ def tsqr_shard_map(
     local_qr: str | Callable = "jnp",
     jit: bool = True,
 ):
-    """Production path: A (m, n) row-sharded over ``mesh`` axis ``axis``.
-
-    Returns ``(r, valid, q)`` with r (P, n, n) — one (replicated-if-valid)
-    copy per rank — valid (P,) and q (m, n) row-sharded (or None).
-
-    The permutation plan is host-computed from ``fault_spec``; on a real
-    fleet the runtime re-invokes this with a fresh plan after each health
-    change (step-boundary replanning, DESIGN.md §2).
-    """
-    p = mesh.shape[axis]
-    plan = make_plan(variant, p, fault_spec)
-    if compute_q and not plan.final_valid.all():
-        raise ValueError(
-            "compute_q requires an all-valid plan (fault-free, or "
-            "self-healing within tolerance)"
-        )
-    pf = PanelFactorizer(local_qr=local_qr, reorth=reorth)
-    fun = _compiled_tsqr_shard(mesh, axis, plan, pf, compute_q, jit)
-    _dispatch.note_dispatch("tsqr_shard_map")
-    r, valid, q = fun(a_global)
-    return TSQRResult(
-        r=r, valid=valid, q=(q if compute_q else None), plan=plan
+    """Deprecated kwarg shim — build a :class:`~repro.qr.api.QRConfig`
+    (``panel_width=None``) and call :func:`repro.qr.api.factorize` with
+    ``mesh=``/``axis=`` instead (same compiled driver, bit-identical
+    results)."""
+    warn_deprecated_entry("tsqr_shard_map")
+    config = dataclasses.replace(
+        _config_of(compute_q, reorth, local_qr), variant=variant
+    )
+    return _factorize_shard(
+        a_global, config, mesh=mesh, axis=axis, fault_spec=fault_spec,
+        jit=jit,
     )

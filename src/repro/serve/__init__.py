@@ -1,0 +1,54 @@
+"""QR-as-a-service: shape-bucketed continuous batching over the repo's
+fault-tolerant factorization pipelines (DESIGN.md §11).
+
+The ROADMAP's north star is serving heavy traffic, and PR 5/6 built the
+machinery a serving path needs — the one-dispatch batched scan pipeline,
+zero-retrace cached compiles, and replica-fetch recovery.  This package
+drives them under load:
+
+  * :mod:`repro.serve.buckets`  — shape buckets (compile classes) and the
+    identity-extension request padding.
+  * :mod:`repro.serve.planner`  — the deterministic cost model picking
+    panel width, local-R variant and max batch size per bucket.
+  * :mod:`repro.serve.frontend` — :class:`QRServer`: async intake,
+    continuous batching, pre-warm, and fault re-serve (requests whose
+    batch hits an injected mid-flight death are re-served through the
+    replica-recovering general driver, never dropped).
+
+The hard-gated ``serving`` bench case measures throughput, p50/p99
+latency, one dispatch per drain, zero warm retraces, and bitwise
+re-serve fidelity over a mixed-shape stream with injected deaths.
+"""
+from .buckets import (
+    BucketSpec,
+    bucket_for,
+    default_buckets,
+    extract_r,
+    filler_matrix,
+    pad_request,
+)
+from .frontend import (
+    PeriodicFaultInjector,
+    QRRequest,
+    QRResponse,
+    QRServer,
+    ServerStats,
+)
+from .planner import BucketPlan, CostModel, plan_bucket
+
+__all__ = [
+    "BucketPlan",
+    "BucketSpec",
+    "CostModel",
+    "PeriodicFaultInjector",
+    "QRRequest",
+    "QRResponse",
+    "QRServer",
+    "ServerStats",
+    "bucket_for",
+    "default_buckets",
+    "extract_r",
+    "filler_matrix",
+    "pad_request",
+    "plan_bucket",
+]

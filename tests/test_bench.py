@@ -20,12 +20,12 @@ def test_registered_cases_cover_migrated_benchmarks():
     assert {
         "robustness", "comm_volume", "semantics", "tsqr_scaling",
         "tsqr_local_qr", "powersgd", "roofline", "fault_scenarios",
-        "kernels", "general_qr",
+        "kernels", "general_qr", "serving",
     } <= names
     smoke = {c.name for c in cases_for("smoke")}
     assert {
         "robustness", "comm_volume", "semantics", "fault_scenarios", "kernels",
-        "general_qr",
+        "general_qr", "serving",
     } <= smoke
 
 

@@ -1,0 +1,201 @@
+"""The unified ``repro.qr.api`` facade: enum coercion and validation,
+``QRConfig`` hashability / canonicalization (the jit-cache key), routing by
+input rank, bit-identity of ``factorize`` against every legacy entry point,
+and the deprecation contract of the old kwarg signatures."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.qr import (
+    Fuse,
+    Pipeline,
+    QRConfig,
+    Recover,
+    blocked_qr_batched,
+    blocked_qr_sim,
+    factorize,
+    tsqr_sim,
+)
+
+
+def _blocks(rng, p, m_local, n):
+    return rng.standard_normal((p, m_local, n)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Enums: coercion and actionable validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("enum,raw,want", [
+    (Pipeline, "auto", Pipeline.AUTO),
+    (Pipeline, "ON", Pipeline.ON),
+    (Pipeline, Pipeline.OFF, Pipeline.OFF),
+    (Fuse, "off", Fuse.OFF),
+    (Recover, "replica", Recover.REPLICA),
+    (Recover, "OFF", Recover.OFF),
+])
+def test_enum_coercion(enum, raw, want):
+    assert enum.coerce(raw) is want
+
+
+@pytest.mark.parametrize("enum,bad", [
+    (Pipeline, "maybe"),
+    (Fuse, "fused"),
+    (Recover, "retry"),
+    (Recover, 3),
+])
+def test_enum_rejects_unknown_with_choices_listed(enum, bad):
+    with pytest.raises((ValueError, TypeError)) as exc:
+        enum.coerce(bad)
+    # the error must tell the caller what IS accepted
+    assert any(m.name.lower() in str(exc.value).lower() for m in enum)
+
+
+def test_config_coerces_enum_strings():
+    cfg = QRConfig(panel_width=8, pipeline="on", fuse="off", recover="off")
+    assert cfg.pipeline is Pipeline.ON
+    assert cfg.fuse is Fuse.OFF
+    assert cfg.recover is Recover.OFF
+
+
+@pytest.mark.parametrize("kwargs,match", [
+    ({"panel_width": 0}, "panel_width"),
+    ({"panel_width": 8, "variant": "quorum"}, "variant"),
+    ({"panel_width": 8, "local_r": "magic"}, "local_r"),
+    ({"panel_width": 8, "reorth": -1}, "reorth"),
+    ({"panel_width": 8, "gram": True}, "gram"),        # gram is TSQR-only
+    ({"panel_width": None, "local_r": "chol"}, "chol"),  # chol is blocked-only
+])
+def test_config_validation_errors(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        QRConfig(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# QRConfig as the jit-cache key
+# ---------------------------------------------------------------------------
+
+def test_config_hashable_and_canonical_collapses_policy_knobs():
+    a = QRConfig(panel_width=8)
+    b = QRConfig(panel_width=8)
+    assert a == b and hash(a) == hash(b)
+    assert len({a, b}) == 1
+    # AUTO and ON trace the same program; canonical() must agree so the
+    # compile cache is not split by a policy spelling
+    on = QRConfig(panel_width=8, pipeline="on", fuse="on")
+    auto = QRConfig(panel_width=8, pipeline="auto", fuse="auto")
+    assert on.canonical() == auto.canonical()
+    # OFF is a genuinely different compiled schedule — must NOT collapse
+    off = QRConfig(panel_width=8, fuse="off")
+    assert off.canonical() != auto.canonical()
+    # local_r="auto" resolves per entry point
+    assert QRConfig(panel_width=8).canonical().local_r == "chol"
+    assert QRConfig(panel_width=None).canonical().local_r == "jnp"
+
+
+# ---------------------------------------------------------------------------
+# factorize(): routing + bit-identity against the legacy entry points
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("p,m_local,n,pw", [(4, 32, 12, 4), (4, 48, 17, 5)])
+def test_factorize_bit_identical_to_blocked_qr_sim(seed, p, m_local, n, pw):
+    blocks = jnp.asarray(
+        _blocks(np.random.default_rng(seed), p, m_local, n)
+    )
+    new = factorize(blocks, QRConfig(panel_width=pw))
+    with pytest.deprecated_call():
+        old = blocked_qr_sim(blocks, panel_width=pw)
+    assert np.array_equal(np.asarray(new.r), np.asarray(old.r))
+    assert np.array_equal(np.asarray(new.valid), np.asarray(old.valid))
+
+
+@pytest.mark.parametrize("variant", ["tree", "redundant", "selfhealing"])
+def test_factorize_bit_identical_to_tsqr_sim(rng, variant):
+    blocks = jnp.asarray(_blocks(rng, 4, 32, 8))
+    new = factorize(blocks, QRConfig(panel_width=None, variant=variant))
+    with pytest.deprecated_call():
+        old = tsqr_sim(blocks, variant=variant)
+    # equal_nan: tree leaves non-root ranks NaN by design
+    assert np.array_equal(
+        np.asarray(new.r), np.asarray(old.r), equal_nan=True
+    )
+
+
+def test_factorize_routes_rank4_to_batched(rng):
+    batch = jnp.asarray(
+        rng.standard_normal((2, 4, 32, 12)).astype(np.float32)
+    )
+    new = factorize(batch, QRConfig(panel_width=4))
+    with pytest.deprecated_call():
+        old = blocked_qr_batched(batch, panel_width=4)
+    assert np.array_equal(np.asarray(new.r), np.asarray(old.r))
+
+
+def test_factorize_with_faults_recovers(rng):
+    from repro.qr import PanelFaultSchedule
+
+    blocks = _blocks(rng, 4, 32, 12)
+    faults = PanelFaultSchedule.of(panel={0: {1: 1}})
+    res = factorize(jnp.asarray(blocks), QRConfig(panel_width=4),
+                    faults=faults)
+    assert res.recoverable
+    ref = factorize(jnp.asarray(blocks), QRConfig(panel_width=4))
+    np.testing.assert_allclose(
+        np.asarray(res.r)[0], np.asarray(ref.r)[0], rtol=5e-4, atol=5e-4
+    )
+
+
+def test_factorize_rejects_faults_on_batched_path(rng):
+    from repro.qr import PanelFaultSchedule
+
+    batch = jnp.asarray(
+        rng.standard_normal((2, 4, 32, 12)).astype(np.float32)
+    )
+    faults = PanelFaultSchedule.of(panel={0: {1: 1}})
+    with pytest.raises(ValueError, match="serve"):
+        factorize(batch, QRConfig(panel_width=4), faults=faults)
+
+
+def test_factorize_rejects_bad_rank(rng):
+    with pytest.raises(ValueError):
+        factorize(jnp.zeros((8, 4), jnp.float32), QRConfig(panel_width=4))
+
+
+def test_default_config_is_tsqr(rng):
+    blocks = jnp.asarray(_blocks(rng, 4, 32, 8))
+    res = factorize(blocks)                      # config defaults to TSQR
+    with pytest.deprecated_call():
+        old = tsqr_sim(blocks)
+    assert np.array_equal(np.asarray(res.r), np.asarray(old.r))
+
+
+# ---------------------------------------------------------------------------
+# Deprecation contract of the legacy entry points
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("call", [
+    lambda a: blocked_qr_sim(a, panel_width=4),
+    lambda a: tsqr_sim(a),
+])
+def test_legacy_entry_points_warn(rng, call):
+    blocks = jnp.asarray(_blocks(rng, 4, 32, 8))
+    with pytest.deprecated_call() as record:
+        call(blocks)
+    assert any("factorize" in str(w.message) for w in record)
+
+
+def test_legacy_string_flags_still_coerce(rng):
+    """Old call sites passed pipeline='on'/'off' strings; the shims (and
+    QRConfig) must keep accepting them."""
+    blocks = jnp.asarray(_blocks(rng, 4, 32, 12))
+    with pytest.deprecated_call():
+        res = blocked_qr_sim(blocks, panel_width=4, pipeline="off",
+                             fuse="off", recover="replica")
+    np.testing.assert_allclose(
+        np.asarray(res.r)[0],
+        np.asarray(factorize(blocks, QRConfig(panel_width=4)).r)[0],
+        rtol=5e-4, atol=5e-4,
+    )

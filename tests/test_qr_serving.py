@@ -1,0 +1,272 @@
+"""The serving layer (``repro.serve``): bucket routing and identity-extension
+padding, planner determinism and Cholesky inadmissibility, fault re-serve
+bitwise fidelity, the one-dispatch drain, zero warm retraces, and the async
+front-end."""
+import asyncio
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import (
+    BucketSpec,
+    CostModel,
+    PeriodicFaultInjector,
+    QRServer,
+    bucket_for,
+    default_buckets,
+    extract_r,
+    filler_matrix,
+    pad_request,
+    plan_bucket,
+)
+from repro.serve.buckets import block_rows, validate_buckets
+
+# Small geometry shared by every server in this module: the compile builders
+# are process-global lru_caches, so all tests reuse the same two programs.
+BUCKETS = (BucketSpec(64, 8), BucketSpec(128, 16))
+P = 4
+MODEL = CostModel(max_batch_cap=2)
+
+
+def _server(**kw):
+    return QRServer(BUCKETS, p=P, model=MODEL, **kw)
+
+
+def _sign_normalized_r(a):
+    r = np.linalg.qr(a, mode="r")
+    sign = np.sign(np.diag(r))
+    sign[sign == 0] = 1.0
+    return (r.T * sign).T
+
+
+# ---------------------------------------------------------------------------
+# Buckets and padding (pure host logic)
+# ---------------------------------------------------------------------------
+
+def test_mixed_shapes_land_in_expected_buckets():
+    server = _server()
+    assert server.bucket_of(40, 6) == BucketSpec(64, 8)
+    assert server.bucket_of(56, 8) == BucketSpec(64, 8)    # exact width
+    assert server.bucket_of(120, 14) == BucketSpec(128, 16)
+    assert server.bucket_of(96, 8) == BucketSpec(128, 16)  # too tall for b0
+    # (64, 8) admits (62, 6) exactly: 62 real + 2 identity rows = 64 …
+    assert server.bucket_of(62, 6) == BucketSpec(64, 8)
+    # … but NOT (63, 6): 63 + 2 > 64
+    assert server.bucket_of(63, 6) == BucketSpec(128, 16)
+    with pytest.raises(ValueError, match="no bucket admits"):
+        server.bucket_of(256, 8)
+    with pytest.raises(ValueError, match="no bucket admits"):
+        server.bucket_of(64, 20)
+
+
+def test_default_buckets_cover_ladder():
+    buckets = default_buckets()
+    assert bucket_for(buckets, 200, 30) == BucketSpec(256, 32)
+    assert bucket_for(buckets, 900, 100) == BucketSpec(1024, 128)
+
+
+def test_pad_request_identity_extension():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((40, 6)).astype(np.float32)
+    spec = BucketSpec(64, 8)
+    padded = pad_request(a, spec)
+    assert padded.shape == (64, 8)
+    np.testing.assert_array_equal(padded[:40, :6], a)
+    np.testing.assert_array_equal(padded[40:42, 6:], np.eye(2))
+    assert not padded[40:, :6].any()     # pad rows touch only pad columns
+    assert not padded[:40, 6:].any()     # pad columns touch only pad rows
+    assert not padded[42:].any()
+    # the padded R is [[R_A, 0], [0, I]] ⇒ the request's factor is the
+    # top-left block, untouched by the pad beyond fp reassociation
+    r_pad = _sign_normalized_r(padded.astype(np.float64))
+    np.testing.assert_allclose(
+        extract_r(r_pad, 6), _sign_normalized_r(a.astype(np.float64)),
+        rtol=1e-10, atol=1e-10,
+    )
+    np.testing.assert_allclose(r_pad[6:, 6:], np.eye(2), atol=1e-12)
+
+
+def test_filler_matrix_is_orthonormal():
+    fill = filler_matrix(BucketSpec(64, 8))
+    np.testing.assert_array_equal(fill.T @ fill, np.eye(8))
+
+
+def test_bucket_validation():
+    with pytest.raises(ValueError, match="tall-or-square"):
+        BucketSpec(8, 64)
+    with pytest.raises(ValueError, match="divisible"):
+        validate_buckets((BucketSpec(66, 8),), 4)
+    with pytest.raises(ValueError, match="duplicate"):
+        validate_buckets((BucketSpec(64, 8), BucketSpec(64, 8)), 4)
+    with pytest.raises(ValueError, match="not divisible"):
+        block_rows(np.zeros((66, 8), np.float32), 4)
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+def test_planner_is_deterministic():
+    a = plan_bucket(BucketSpec(256, 32), 4)
+    b = plan_bucket(BucketSpec(256, 32), 4)
+    assert a == b
+
+
+def test_planner_marks_chol_inadmissible_for_serving():
+    """Identity-extension padding leaves pad columns exactly zero on most
+    ranks → a per-rank local Gram is singular and its Cholesky NaN; the
+    planner must never pick 'chol' for rank-deficient inputs, but keeps it
+    in the audit table."""
+    plan = plan_bucket(BucketSpec(256, 32), 4)
+    assert plan.local_r == "jnp"
+    chol_rows = [c for c in plan.candidates if c[1] == "chol"]
+    assert chol_rows and all(not c[3] for c in chol_rows)
+    # a caller with full-rank inputs may admit chol again
+    full = plan_bucket(BucketSpec(256, 32), 4, rank_deficient_inputs=False)
+    assert any(c[3] for c in full.candidates if c[1] == "chol")
+
+
+def test_planner_respects_batch_budget():
+    tight = CostModel(batch_bytes_budget=BucketSpec(64, 8).area * 4 * 3)
+    assert plan_bucket(BucketSpec(64, 8), 4, tight).max_batch == 3
+    assert plan_bucket(BucketSpec(64, 8), 4, MODEL).max_batch == 2  # cap
+    huge = plan_bucket(BucketSpec(1024, 128), 4, CostModel(
+        batch_bytes_budget=BucketSpec(1024, 128).area * 4
+    ))
+    assert huge.max_batch == 1
+
+
+def test_server_configs_follow_plans():
+    server = _server()
+    for spec in server.buckets:
+        plan = server.plans[spec]
+        cfg = server.configs[spec]
+        assert cfg.panel_width == plan.panel_width
+        assert cfg.local_r == plan.local_r == "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Serving (compiled paths)
+# ---------------------------------------------------------------------------
+
+def _stream(rng, n=8):
+    shapes = [(40, 6), (120, 14), (56, 8), (96, 12)]
+    return [
+        rng.standard_normal(shapes[i % len(shapes)]).astype(np.float32)
+        for i in range(n)
+    ]
+
+
+def test_serve_matches_numpy_and_drains_one_dispatch(rng):
+    server = _server()
+    server.prewarm()
+    mats = _stream(rng)
+    responses = server.serve(mats)
+    assert [r.rid for r in responses] == list(range(len(mats)))
+    for resp, a in zip(responses, mats):
+        assert resp.served_via == "batched"
+        assert resp.r.shape == (a.shape[1], a.shape[1])
+        np.testing.assert_allclose(
+            resp.r, _sign_normalized_r(a), rtol=5e-4, atol=5e-4
+        )
+    assert server.stats.drains == 4
+    assert server.stats.dispatches_per_drain == [1, 1, 1, 1]
+    assert server.stats.filler_slots == 0
+
+
+def test_warm_serving_performs_zero_new_traces(rng):
+    from repro.kernels import dispatch as disp
+
+    server = _server(
+        fault_injector=PeriodicFaultInjector.sampled(
+            2, variant="redundant", p=P
+        )
+    )
+    server.prewarm()
+    before = disp.trace_count()
+    server.serve(_stream(rng))          # batched drains AND fault re-serves
+    assert disp.trace_count() - before == 0
+
+
+def test_flush_tops_up_short_batches_with_fillers(rng):
+    server = _server()
+    server.prewarm()
+    out = server.submit(rng.standard_normal((40, 6)).astype(np.float32))
+    assert out == []                     # queue below max_batch: no drain
+    responses = server.flush()
+    assert len(responses) == 1
+    assert server.stats.filler_slots == 1
+    assert server.stats.dispatches_per_drain == [1]
+
+
+def test_fault_reserves_every_affected_request_bitwise(rng):
+    """A drain that hits an injected death re-serves EVERY real request of
+    the batch, and each re-served factor is bit-identical to a fault-free
+    eager re-run of the same padded request."""
+    from repro.qr.api import Pipeline, factorize
+
+    injector = PeriodicFaultInjector.sampled(1, variant="redundant", p=P)
+    server = _server(fault_injector=injector)
+    server.prewarm()
+    mats = _stream(rng)
+    responses = server.serve(mats)
+    assert len(responses) == len(mats)
+    assert all(r.served_via == "reserved" for r in responses)
+    assert server.stats.reserved == len(mats)
+    assert server.stats.faulted_drains == server.stats.drains
+    for resp, a in zip(responses, mats):
+        cfg = dataclasses.replace(
+            server.configs[resp.bucket], pipeline=Pipeline.OFF
+        )
+        ref = factorize(
+            jnp.asarray(block_rows(pad_request(a, resp.bucket), P)), cfg
+        )
+        np.testing.assert_array_equal(
+            resp.r, extract_r(np.asarray(ref.r[0]), a.shape[1])
+        )
+        # and still a correct factorization
+        np.testing.assert_allclose(
+            resp.r, _sign_normalized_r(a), rtol=5e-4, atol=5e-4
+        )
+
+
+def test_periodic_injector_strikes_on_schedule(rng):
+    injector = PeriodicFaultInjector.sampled(3, variant="redundant", p=P)
+    spec = BUCKETS[0]
+    strikes = [bool(injector(spec, i)) for i in range(6)]
+    assert strikes == [False, False, True, False, False, True]
+    with pytest.raises(ValueError, match="period"):
+        PeriodicFaultInjector(0, injector.schedule)
+    with pytest.raises(ValueError, match="tree"):
+        PeriodicFaultInjector.sampled(1, variant="tree", p=P)
+
+
+def test_async_frontend(rng):
+    server = _server()
+    server.prewarm()
+
+    async def drive():
+        a = rng.standard_normal((40, 6)).astype(np.float32)
+        b = rng.standard_normal((44, 7)).astype(np.float32)
+        fa = asyncio.ensure_future(server.submit_async(a))
+        fb = asyncio.ensure_future(server.submit_async(b))
+        await asyncio.sleep(0)           # both queued in bucket (64, 8)
+        server.flush()
+        ra, rb = await asyncio.gather(fa, fb)
+        return (a, ra), (b, rb)
+
+    (a, ra), (b, rb) = asyncio.run(drive())
+    assert ra.rid == 0 and rb.rid == 1
+    np.testing.assert_allclose(
+        ra.r, _sign_normalized_r(a), rtol=5e-4, atol=5e-4
+    )
+    np.testing.assert_allclose(
+        rb.r, _sign_normalized_r(b), rtol=5e-4, atol=5e-4
+    )
+
+
+def test_submit_rejects_non_matrix(rng):
+    with pytest.raises(ValueError, match="one \\(m, n\\) matrix"):
+        _server().submit(np.zeros((2, 4, 4), np.float32))
