@@ -1,0 +1,225 @@
+"""Coded-redundancy frontier: overhead vs tolerated failures; hard-gated.
+
+The acceptance claims of the coded scheme (DESIGN.md §12), as numbers on
+the 4096×512 acceptance shape (p=8 ranks × 512 local rows × 512 cols):
+
+  * **c deaths tolerated** — a coded plan with ``c`` Cauchy parity ranks
+    survives ``c`` *simultaneous* deaths struck at distribution time
+    (step 0 — before the butterfly would have made a single copy), every
+    data rank ends valid, and the reconstructed R matches the fault-free
+    R within the documented fp bound
+    (:func:`~repro.collective.coded.reconstruction_tol`).
+  * **SDC detected** — an injected silent corruption (the rank
+    participates normally, unaware) is quarantined, reconstructed from
+    parity, and *flagged* by checksum verification — exactly the failure
+    class replication propagates silently.
+  * **wire bytes exact** — traffic observed through
+    :class:`~repro.collective.instrument.InstrumentedComm` equals
+    ``CodedPlan.message_count()`` / ``bytes_on_wire()`` to the byte, for
+    the fault-free, death, and corruption runs alike (no validity bytes,
+    no hidden traffic).
+  * **overhead strictly below the butterfly** at equal tolerated-failure
+    count: with ``c = 2^(S-1) − 1`` (= the redundant butterfly's total
+    tolerance for P = 2^S), the coded plan moves strictly fewer payload
+    units — (P−1)(1+ℓ) + ℓ + (W−1) fault-free vs the butterfly's
+    P·log₂P full replicas.
+
+Honest degradation rides along: ``c + 1`` simultaneous deaths exceed the
+erasure budget and must yield zero valid ranks and NaN payloads — never
+silent garbage.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.bench.registry import BenchFailure, bench_case
+from repro.bench.schema import Metric
+
+__all__ = ["case", "run"]
+
+
+def run(p: int = 8, m_local: int = 512, n: int = 512, parity: int = 3,
+        seed: int = 0) -> dict:
+    """Measure the coded scheme's guarantees and wire frontier; raw dict."""
+    import jax.numpy as jnp
+
+    from repro.collective import (
+        FaultSpec,
+        InstrumentedComm,
+        SimComm,
+        execute_coded,
+        make_coded_plan,
+        make_plan,
+        reconstruction_tol,
+        total_tolerance,
+    )
+    from repro.qr import QRConfig, factorize
+
+    rng = np.random.default_rng(seed)
+    blocks = rng.standard_normal((p, m_local, n)).astype(np.float32)
+    a = jnp.asarray(blocks)
+    tol = reconstruction_tol(np.float32)
+
+    # -- fault-free butterfly reference (the value oracle) ------------------
+    ref = factorize(a, QRConfig(panel_width=None))
+    r_ref = np.asarray(ref.r)[0]
+    scale = max(1.0, float(np.abs(r_ref).max()))
+
+    # -- c simultaneous step-0 deaths through the driver --------------------
+    dead = tuple(int(r) for r in rng.choice(p, size=parity, replace=False))
+    cfg = QRConfig(panel_width=None, redundancy="coded", parity=parity)
+    res_d = factorize(a, cfg, faults=FaultSpec.of({r: 0 for r in dead}))
+    deaths_all_valid = bool(np.asarray(res_d.valid).all())
+    death_err = float(
+        np.abs(np.asarray(res_d.r)[0] - r_ref).max() / scale
+    )
+
+    # -- collective-level runs with byte-exact wire instrumentation ---------
+    comb = QRConfig(panel_width=None).factorizer().combiner()
+
+    def coded_run(spec, observed=None):
+        comm = InstrumentedComm(SimComm(p + parity))
+        plan = make_coded_plan(p, parity, spec)
+        val, valid, det = execute_coded(
+            a, comm, plan, comb, observed=observed
+        )
+        return plan, comm.stats, (
+            np.asarray(val), np.asarray(valid), np.asarray(det)
+        )
+
+    victim = int(rng.integers(p))
+    observed = blocks.copy()
+    observed[victim] *= 2.0                          # the silent corruption
+    runs = {
+        "fault_free": coded_run(None),
+        "deaths": coded_run(FaultSpec.of({r: 0 for r in dead})),
+        "corrupt": coded_run(
+            FaultSpec.of(corrupt=(victim,)), observed=jnp.asarray(observed)
+        ),
+    }
+    wire_exact = all(
+        stats.messages == plan.message_count()
+        and stats.payload_bytes == plan.bytes_on_wire(n, 4)
+        for plan, stats, _ in runs.values()
+    )
+    _, _, (val_c, valid_c, det_c) = runs["corrupt"]
+    detected_exact = bool(
+        (np.flatnonzero(det_c[:p]) == np.array([victim])).all()
+    )
+    corrupt_err = float(np.abs(val_c[0] - r_ref).max() / scale)
+    corrupt_valid = bool(valid_c[:p].all())
+
+    # -- honest degradation: parity + 1 deaths exceed the budget ------------
+    over = tuple(int(r) for r in range(parity + 1))
+    _, _, (val_o, valid_o, _) = coded_run(FaultSpec.of({r: 0 for r in over}))
+    honest = bool(not valid_o.any() and np.isnan(val_o).all())
+
+    # -- the frontier: payload units at equal tolerated-failure count -------
+    plan_ff = make_coded_plan(p, parity, None)
+    bfly = make_plan("redundant", p)
+    bfly_tol = total_tolerance("redundant", bfly.n_steps)
+    coded_units = plan_ff.payload_units()
+    bfly_units = bfly.message_count()       # one full payload per message
+    return {
+        "p": p, "m_local": m_local, "n": n, "parity": parity,
+        "deaths_all_valid": deaths_all_valid,
+        "death_err": death_err,
+        "reconstruction_tol": tol,
+        "wire_exact": wire_exact,
+        "detected_exact": detected_exact,
+        "corrupt_err": corrupt_err,
+        "corrupt_valid": corrupt_valid,
+        "honest_degradation": honest,
+        "tolerated_coded": parity,
+        "tolerated_butterfly": bfly_tol,
+        "coded_payload_units": coded_units,
+        "butterfly_payload_units": bfly_units,
+        "coded_wire_bytes": plan_ff.bytes_on_wire(n, 4),
+        "butterfly_wire_bytes": bfly.bytes_on_wire(n, 4),
+    }
+
+
+def case(p: int = 8, m_local: int = 512, n: int = 512, parity: int = 3):
+    rows = run(p=p, m_local=m_local, n=n, parity=parity)
+    if not rows["deaths_all_valid"] or rows["death_err"] > rows[
+        "reconstruction_tol"
+    ]:
+        raise BenchFailure(
+            f"{parity} parity ranks failed to tolerate {parity} "
+            f"simultaneous step-0 deaths (all_valid="
+            f"{rows['deaths_all_valid']}, rel err {rows['death_err']:.2e} "
+            f"vs bound {rows['reconstruction_tol']:.2e})"
+        )
+    if not rows["detected_exact"] or rows["corrupt_err"] > rows[
+        "reconstruction_tol"
+    ]:
+        raise BenchFailure(
+            "silent corruption was not detected-and-reconstructed "
+            f"(detected_exact={rows['detected_exact']}, rel err "
+            f"{rows['corrupt_err']:.2e})"
+        )
+    if not rows["wire_exact"]:
+        raise BenchFailure(
+            "observed wire traffic deviates from CodedPlan.bytes_on_wire / "
+            "message_count — the exact-accounting contract failed"
+        )
+    if not rows["honest_degradation"]:
+        raise BenchFailure(
+            f"{parity + 1} deaths exceeded the erasure budget but did not "
+            "degrade honestly (expected zero valid ranks + NaN payloads)"
+        )
+    if rows["tolerated_coded"] < rows["tolerated_butterfly"]:
+        raise BenchFailure(
+            f"frontier compared at unequal tolerance: coded tolerates "
+            f"{rows['tolerated_coded']}, butterfly "
+            f"{rows['tolerated_butterfly']}"
+        )
+    if not rows["coded_payload_units"] < rows["butterfly_payload_units"]:
+        raise BenchFailure(
+            f"coded overhead ({rows['coded_payload_units']} payload units) "
+            f"is not strictly below the butterfly's "
+            f"({rows['butterfly_payload_units']}) at tolerance "
+            f">= {rows['tolerated_butterfly']}"
+        )
+    hard = dict(gate="hard", direction="exact")
+    return {
+        "deaths_all_valid": Metric(rows["deaths_all_valid"], **hard),
+        "detected_exact": Metric(rows["detected_exact"], **hard),
+        "corrupt_valid": Metric(rows["corrupt_valid"], **hard),
+        "wire_exact": Metric(rows["wire_exact"], **hard),
+        "honest_degradation": Metric(rows["honest_degradation"], **hard),
+        "tolerated_coded": Metric(rows["tolerated_coded"], **hard),
+        "tolerated_butterfly": Metric(rows["tolerated_butterfly"], **hard),
+        "coded_payload_units": Metric(rows["coded_payload_units"], **hard),
+        "butterfly_payload_units": Metric(
+            rows["butterfly_payload_units"], **hard
+        ),
+        "overhead_ratio": Metric(
+            rows["coded_payload_units"] / rows["butterfly_payload_units"],
+            gate="hard", direction="lower",
+        ),
+        "coded_wire_bytes": Metric(
+            rows["coded_wire_bytes"], **hard, unit="B"
+        ),
+        "butterfly_wire_bytes": Metric(
+            rows["butterfly_wire_bytes"], **hard, unit="B"
+        ),
+        "death_err": Metric(
+            rows["death_err"], gate="warn", direction="lower"
+        ),
+        "corrupt_err": Metric(
+            rows["corrupt_err"], gate="warn", direction="lower"
+        ),
+    }
+
+
+bench_case(
+    "coded",
+    tags=("robustness", "coded", "comm"),
+    params={
+        "smoke": {"p": 8, "m_local": 64, "n": 32, "parity": 3},
+        # the acceptance shape: 4096×512 over 8 ranks, c = 3 = the
+        # redundant butterfly's total tolerance for P = 8
+        "full": {"p": 8, "m_local": 512, "n": 512, "parity": 3},
+    },
+)(case)

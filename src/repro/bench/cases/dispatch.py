@@ -250,17 +250,21 @@ def guard() -> int:
     import jax.numpy as jnp
     from jax.sharding import Mesh
 
-    from repro.collective import SimComm, ft_allreduce_jit
+    from repro.collective import FaultSpec, SimComm, ft_allreduce_jit
     from repro.kernels import dispatch as disp
     from repro.kernels import ops as kops
     from repro.qr import (
+        QRConfig,
         blocked_qr_batched,
         blocked_qr_shard_map,
         blocked_qr_sim,
+        factorize,
         tsqr_gram_shard_map,
         tsqr_shard_map,
     )
 
+    _cfg_coded = QRConfig(panel_width=None, redundancy="coded", parity=2)
+    _spec_coded = FaultSpec.of({1: 0})
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.standard_normal((4, 96, 40)).astype(np.float32))
     ab = jnp.asarray(
@@ -294,6 +298,12 @@ def guard() -> int:
          lambda: tsqr_gram_shard_map(flat, mesh=mesh, axis="x")),
         ("ft_allreduce",
          lambda: ft_allreduce_jit(x, SimComm(4), op="sum")),
+        # coded warm paths: fault-free and faulted plans compile into
+        # distinct cached programs keyed on (config, plan) — guard both
+        ("tsqr_coded",
+         lambda: factorize(a, _cfg_coded)),
+        ("tsqr_coded",
+         lambda: factorize(a, _cfg_coded, faults=_spec_coded)),
         ("kernel:trailing_update",
          lambda: kops.trailing_update(
              flat, flat[:, :8], jnp.zeros((8, 24), jnp.float32),

@@ -38,12 +38,24 @@ from .combiners import (
     qr_r,
     stacked,
 )
+from .coded import (
+    CodedCombiner,
+    CodedPlan,
+    coded_allreduce,
+    coded_allreduce_jit,
+    coded_weights,
+    encode_parity,
+    execute_coded,
+    make_coded_plan,
+    reconstruction_tol,
+)
 from .comm import Comm, ShardMapComm, SimComm
 from .engine import (
     execute_plan,
     ft_allreduce,
     ft_allreduce_jit,
     plan_is_fault_free,
+    recover_payload,
     replica_fetch,
 )
 from .faults import (
@@ -60,6 +72,8 @@ from .plan import VARIANTS, Plan, Step, ilog2, leaf_bytes, make_plan, payload_nu
 
 __all__ = [
     "COMBINERS",
+    "CodedCombiner",
+    "CodedPlan",
     "Comm",
     "CommStats",
     "Combiner",
@@ -77,17 +91,25 @@ __all__ = [
     "Step",
     "SumCombiner",
     "VARIANTS",
+    "coded_allreduce",
+    "coded_allreduce_jit",
+    "coded_weights",
+    "encode_parity",
+    "execute_coded",
     "execute_plan",
     "ft_allreduce",
     "ft_allreduce_jit",
     "get_combiner",
     "ilog2",
     "leaf_bytes",
+    "make_coded_plan",
     "make_plan",
     "pack_sym",
     "payload_numel",
     "plan_is_fault_free",
     "posdiag",
+    "reconstruction_tol",
+    "recover_payload",
     "replica_fetch",
     "stacked",
     "unpack_sym",

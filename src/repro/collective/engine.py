@@ -66,7 +66,7 @@ from .packing import pack_sym, unpack_sym
 from .plan import Plan, _split_rounds, make_plan
 
 __all__ = ["execute_plan", "ft_allreduce", "ft_allreduce_jit",
-           "plan_is_fault_free", "replica_fetch"]
+           "plan_is_fault_free", "recover_payload", "replica_fetch"]
 
 
 def _poison(leaf):
@@ -235,6 +235,36 @@ def replica_fetch(x, comm: Comm, valid) -> object:
         recv = comm.exchange(x, rnd)
         x = jax.tree.map(lambda cur, rec: comm.bwhere(g, rec, cur), x, recv)
     return x
+
+
+def recover_payload(x, comm: Comm, valid, *, plan=None) -> object:
+    """Scheme-dispatching phase-boundary recovery — the only entry drivers
+    may call (ruff TID251 bans direct ``replica_fetch`` use outside this
+    module).
+
+    * Butterfly plans (or no plan): replication holds full copies of the
+      reduced value on every valid rank, so invalid ranks fetch from donors
+      (:func:`replica_fetch`).
+    * Coded plans (:class:`~repro.collective.coded.CodedPlan`): recovery
+      already happened *inside* the collective — erased contributions were
+      reconstructed from parity at the root and the broadcast handed the
+      result to every recipient (dead data ranks respawned) — so there is
+      nothing left to fetch.  An invalid rank here means the erasure budget
+      was exceeded; no donor path exists (parity is not a replica), which
+      this surfaces as ``ValueError`` instead of silently fetching garbage.
+    """
+    from .coded import CodedPlan  # local: coded imports this module
+
+    if plan is not None and isinstance(plan, CodedPlan):
+        valid = np.asarray(valid, dtype=bool)
+        if not valid[: plan.n_data].all():
+            raise ValueError(
+                "recover_payload: coded recovery happens in-collective; "
+                "invalid data ranks after a coded reduce mean the erasure "
+                "budget was exceeded and no donor path exists"
+            )
+        return x
+    return replica_fetch(x, comm, valid)
 
 
 def ft_allreduce(

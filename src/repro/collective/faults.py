@@ -40,13 +40,34 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
-    """A set of simulated fail-stop failures: ``(rank, death_step)`` pairs.
+    """A set of simulated failures.
 
-    Each rank dies at most once.  ``death_step`` is the exchange index at
-    whose *entry* the rank fails (0-based).
+    ``deaths`` are fail-stop ``(rank, death_step)`` pairs — each rank dies at
+    most once; ``death_step`` is the exchange index at whose *entry* the rank
+    fails (0-based).  Two further fault kinds exist for schemes that can act
+    on them (today: the coded-redundancy planner,
+    :func:`repro.collective.coded.make_coded_plan`):
+
+      * ``corrupt`` — ranks whose payload suffers silent data corruption
+        (SDC): the rank participates normally and does not know it is wrong.
+        The **butterfly planners ignore this field by design** — replication
+        is oblivious to SDC, a corrupted replica propagates silently — which
+        is exactly the blind spot checksum coding closes (Bosilca-style
+        ABFT, arXiv:0806.3121): the coded plan quarantines the declared
+        rank's contribution, reconstructs its true value from parity, and
+        *verifies* the raw payload against the reconstruction.
+      * ``slow`` — straggling ranks: alive, but their contribution would
+        arrive late.  The butterfly has no choice but to await them (also
+        ignored there); the coded plan excludes them from the gather and
+        reconstructs their contribution from parity instead of waiting.
+
+    The three rank sets must be pairwise disjoint (a dead rank has no
+    payload to corrupt or delay).
     """
 
     deaths: tuple[tuple[int, int], ...] = ()
+    corrupt: tuple[int, ...] = ()
+    slow: tuple[int, ...] = ()
 
     def __post_init__(self) -> None:
         ranks = [r for r, _ in self.deaths]
@@ -55,16 +76,38 @@ class FaultSpec:
         for r, s in self.deaths:
             if r < 0 or s < 0:
                 raise ValueError(f"negative rank/step in {self.deaths}")
+        for kind in ("corrupt", "slow"):
+            rs = getattr(self, kind)
+            if len(rs) != len(set(rs)):
+                raise ValueError(f"duplicate ranks in {kind}={rs}")
+            if any(r < 0 for r in rs):
+                raise ValueError(f"negative rank in {kind}={rs}")
+        dead = set(ranks)
+        overlap = (dead & set(self.corrupt)) | (dead & set(self.slow)) | (
+            set(self.corrupt) & set(self.slow)
+        )
+        if overlap:
+            raise ValueError(
+                f"ranks {sorted(overlap)} appear in more than one fault kind; "
+                "deaths/corrupt/slow must be disjoint"
+            )
 
     # -- constructors ------------------------------------------------------
     @classmethod
-    def of(cls, deaths: Mapping[int, int] | Iterable[tuple[int, int]]) -> "FaultSpec":
-        """From ``{rank: step}`` or ``[(rank, step), ...]``."""
+    def of(
+        cls,
+        deaths: Mapping[int, int] | Iterable[tuple[int, int]] = (),
+        *,
+        corrupt: Iterable[int] = (),
+        slow: Iterable[int] = (),
+    ) -> "FaultSpec":
+        """From ``{rank: step}`` or ``[(rank, step), ...]`` deaths, plus
+        optional ``corrupt`` / ``slow`` rank sets."""
         if isinstance(deaths, Mapping):
             items = tuple(sorted(deaths.items()))
         else:
             items = tuple(sorted(deaths))
-        return cls(items)
+        return cls(items, tuple(sorted(corrupt)), tuple(sorted(slow)))
 
     @classmethod
     def from_events(cls, events: Mapping[int, Iterable[int]]) -> "FaultSpec":
@@ -102,8 +145,8 @@ class FaultSpec:
     def n_failures(self) -> int:
         return len(self.deaths)
 
-    def __bool__(self) -> bool:  # truthy iff any failure
-        return bool(self.deaths)
+    def __bool__(self) -> bool:  # truthy iff any fault of any kind
+        return bool(self.deaths or self.corrupt or self.slow)
 
 
 # ---------------------------------------------------------------------------

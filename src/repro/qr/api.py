@@ -48,6 +48,7 @@ __all__ = [
     "Pipeline",
     "QRConfig",
     "Recover",
+    "Redundancy",
     "factorize",
 ]
 
@@ -118,6 +119,24 @@ class Recover(_CoercibleEnum):
     OFF = "off"
 
 
+class Redundancy(_CoercibleEnum):
+    """Which fault-tolerance scheme backs the panel reductions.
+
+    ``BUTTERFLY`` (default) is the paper's scheme: full replicas of every
+    intermediate R ride the recursive-doubling exchanges, tolerating
+    ``2^s - 1`` fail-stop deaths at 100% redundancy overhead.  ``CODED``
+    is the checksum-coded scheme (DESIGN.md §12): ``parity`` extra ranks
+    hold Cauchy-weighted linear combinations of the local factors, so up
+    to ``parity`` lost, straggling, *or silently-corrupted* contributions
+    are reconstructed from parity — at an overhead of ``c/P`` extra
+    payload instead of the butterfly's ``(P-1)×``, and with numerical
+    verification that *detects* SDC replication propagates silently.
+    """
+
+    BUTTERFLY = "butterfly"
+    CODED = "coded"
+
+
 # ---------------------------------------------------------------------------
 # The config
 # ---------------------------------------------------------------------------
@@ -151,12 +170,15 @@ class QRConfig:
     fuse: Fuse = Fuse.AUTO
     recover: Recover = Recover.REPLICA
     gram: bool = False
+    redundancy: Redundancy = Redundancy.BUTTERFLY
+    parity: int = 2
 
     def __post_init__(self):
         coerce = object.__setattr__
         coerce(self, "pipeline", Pipeline.coerce(self.pipeline))
         coerce(self, "fuse", Fuse.coerce(self.fuse))
         coerce(self, "recover", Recover.coerce(self.recover))
+        coerce(self, "redundancy", Redundancy.coerce(self.redundancy))
         if self.panel_width is not None and self.panel_width <= 0:
             raise ValueError(
                 f"panel_width must be a positive int or None (single-panel "
@@ -186,6 +208,26 @@ class QRConfig:
                 "TSQR does not run; use local_r='auto'/'jnp'/'cqr2'/"
                 "'cqr2_pallas', or gram=True for the Gram-butterfly TSQR"
             )
+        if self.parity < 1:
+            raise ValueError(
+                f"parity must be >= 1 (the number of checksum ranks the "
+                f"coded scheme adds), got {self.parity}"
+            )
+        if self.redundancy is Redundancy.CODED:
+            if self.gram:
+                raise ValueError(
+                    "redundancy='coded' codes the per-rank R contributions; "
+                    "the Gram-butterfly TSQR reduces a Gram matrix over the "
+                    "butterfly instead — the two schemes do not compose "
+                    "(use gram=False)"
+                )
+            if self.pipeline is Pipeline.ON:
+                raise ValueError(
+                    "pipeline='on' demands the scan-compiled butterfly "
+                    "pipeline, which is replica-redundancy only; the coded "
+                    "scheme runs the eager per-panel driver (use "
+                    "pipeline='auto' or 'off')"
+                )
 
     # -- resolution helpers -------------------------------------------------
 
@@ -209,6 +251,8 @@ class QRConfig:
             # AUTO and ON trace the same fused program (ON only tightens
             # host-side validation); OFF is the split-schedule program
             fuse=Fuse.OFF if self.fuse is Fuse.OFF else Fuse.AUTO,
+            # parity only shapes the traced program under the coded scheme
+            parity=self.parity if self.redundancy is Redundancy.CODED else 2,
         )
 
     def factorizer(self):
@@ -298,6 +342,14 @@ def factorize(
             )
 
     if mesh is not None:
+        if config.redundancy is Redundancy.CODED:
+            raise ValueError(
+                "redundancy='coded' is a simulated-ranks scheme: the coded "
+                "world holds P data ranks plus `parity` checksum ranks, and "
+                "the decode indexes the gather root's row — neither maps "
+                "onto the fixed-size shard_map mesh; run the 3-D simulated "
+                "entry (or redundancy='butterfly' under the mesh)"
+            )
         if getattr(a, "ndim", None) != 2:
             raise ValueError(_route_error(a, mesh))
         if axis is None:
@@ -330,6 +382,13 @@ def factorize(
             return _tsqr._factorize_sim(a, config, fault_spec=faults)
         return _blocked._factorize_sim(a, config, faults=faults)
     if ndim == 4:
+        if config.redundancy is Redundancy.CODED:
+            raise ValueError(
+                "batched factorization is the fault-free hot path, where "
+                "coded parity buys nothing over the plain butterfly; use "
+                "redundancy='butterfly' for batches, or factor matrices "
+                "one at a time through the 3-D entry for coded runs"
+            )
         if faults is not None:
             raise ValueError(
                 "batched factorization is the fault-free hot path (a real "

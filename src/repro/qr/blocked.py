@@ -74,8 +74,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.collective.coded import CodedPlan, execute_coded, make_coded_plan
 from repro.collective.comm import Comm, ShardMapComm, SimComm
-from repro.collective.engine import ft_allreduce, replica_fetch
+from repro.collective.engine import ft_allreduce, recover_payload
 from repro.collective.faults import FaultSpec, within_tolerance
 from repro.collective.plan import Plan, make_plan
 from repro.kernels import dispatch as _dispatch
@@ -83,8 +84,10 @@ from repro.kernels import ops as kops
 from repro.kernels import traffic as _traffic
 
 from ._shard import dummy_q, shard_compile
-from .api import Fuse, Pipeline, QRConfig, Recover, warn_deprecated_entry
-from .panel import PanelFactorizer, chol_r
+from .api import (
+    Fuse, Pipeline, QRConfig, Recover, Redundancy, warn_deprecated_entry,
+)
+from .panel import FUSED_PANEL_COMBINER, PanelFactorizer, chol_r
 
 __all__ = [
     "PanelFaultSchedule",
@@ -156,14 +159,19 @@ class PanelReport:
     """
 
     panel: int
-    plan_r: Plan
-    plan_w: Plan | None
+    plan_r: Plan | CodedPlan
+    plan_w: Plan | CodedPlan | None
     within_tolerance_r: bool
     within_tolerance_w: bool
-    recovered_r: int          # ranks restored from a replica after phase 1
+    recovered_r: int          # contributions restored after phase 1
     recovered_w: int          # …after phase 3
     recoverable: bool         # some rank held every replicated factor
     fused: bool = False       # one stacked butterfly, issued one stage ahead
+    scheme: str = "butterfly"  # which redundancy scheme recovered_* used:
+    #   "butterfly" — invalid ranks re-fetched full replicas at the phase
+    #   boundary; "coded" — erased contributions (deaths, stragglers,
+    #   declared corruptions) reconstructed from Cauchy parity *inside*
+    #   the collective (recovered_* counts reconstructed contributions).
 
     @property
     def within_tolerance(self) -> bool:
@@ -180,6 +188,8 @@ class BlockedQRResult:
                  reductions without replica recovery.
     ``q``      — optional per-rank (m_local, n) explicit orthonormal factor.
     ``reports``— per-panel :class:`PanelReport` (tolerance + recovery).
+    ``detected`` — coded runs only: (P,) device bool, OR over all panels,
+                 flagging ranks whose payload failed checksum verification.
     """
 
     r: jax.Array
@@ -187,6 +197,7 @@ class BlockedQRResult:
     q: jax.Array | None
     reports: tuple[PanelReport, ...]
     panel_width: int
+    detected: jax.Array | None = None
 
     @property
     def n_panels(self) -> int:
@@ -203,12 +214,20 @@ class BlockedQRResult:
 jax.tree_util.register_pytree_node(
     BlockedQRResult,
     lambda res: (
-        (res.r, res.valid, res.q), (res.reports, res.panel_width)
+        (res.r, res.valid, res.q, res.detected),
+        (res.reports, res.panel_width),
     ),
     lambda aux, ch: BlockedQRResult(
-        r=ch[0], valid=ch[1], q=ch[2], reports=aux[0], panel_width=aux[1]
+        r=ch[0], valid=ch[1], q=ch[2], detected=ch[3],
+        reports=aux[0], panel_width=aux[1],
     ),
 )
+
+
+def _data_valid(plan) -> np.ndarray:
+    """Per-*data*-rank slice of ``final_valid`` — coded plans append parity
+    rows the driver's validity logic must not see."""
+    return plan.final_valid[: getattr(plan, "n_data", plan.n_ranks)]
 
 
 # ---------------------------------------------------------------------------
@@ -222,8 +241,11 @@ def _build_reports(
     faults: PanelFaultSchedule,
     recover: Recover,
     fuse: Fuse,
+    redundancy: Redundancy = Redundancy.BUTTERFLY,
+    parity: int = 2,
 ) -> tuple[PanelReport, ...]:
     n_panels = len(widths)
+    coded = redundancy is Redundancy.CODED
     for key in set(faults.panel) | set(faults.update):
         if not 0 <= key < n_panels:
             raise ValueError(
@@ -238,8 +260,6 @@ def _build_reports(
     reports = []
     for k in range(n_panels):
         spec_r = faults.panel.get(k, FaultSpec.none())
-        plan_r = make_plan(variant, p, spec_r)
-        tol_r = within_tolerance(variant, spec_r, plan_r.n_steps)
         last = k == n_panels - 1
         plan_w = None
         tol_w = True
@@ -249,24 +269,49 @@ def _build_reports(
         # mid-reduction death strikes both leaves at once, and the one
         # replica fetch restores both).
         fused = fuse is not Fuse.OFF and (last or k not in faults.update)
-        if not last:
-            spec_w = faults.update.get(k, FaultSpec.none())
-            plan_w = make_plan(variant, p, spec_w)
-            tol_w = within_tolerance(variant, spec_w, plan_w.n_steps)
-        recoverable = bool(plan_r.final_valid.any()) and (
-            plan_w is None or bool(plan_w.final_valid.any())
-        )
-        # recovered_* counts ranks replica_fetch actually restores — zero
-        # when recovery is disabled (the ranks stay poisoned).
-        fetching = recover is Recover.REPLICA and recoverable
-        rec_r = int((~plan_r.final_valid).sum()) if fetching else 0
-        if fused and plan_w is not None:
-            rec_w = rec_r      # the one stacked fetch restores both leaves
-        else:
-            rec_w = (
-                int((~plan_w.final_valid).sum())
-                if fetching and plan_w is not None else 0
+        if coded:
+            # Coded redundancy: per-panel CodedPlan over the P + parity
+            # world.  "Within tolerance" is the erasure budget — at most
+            # ``parity`` dead/slow/corrupt contributions, reconstructed
+            # in-collective (no phase-boundary fetch).
+            plan_r = make_coded_plan(p, parity, spec_r)
+            tol_r = plan_r.recoverable
+            if not last:
+                spec_w = faults.update.get(k, FaultSpec.none())
+                plan_w = make_coded_plan(p, parity, spec_w)
+                tol_w = plan_w.recoverable
+            recoverable = plan_r.recoverable and (
+                plan_w is None or plan_w.recoverable
             )
+            rec_r = plan_r.n_erased if plan_r.recoverable else 0
+            if fused and plan_w is not None:
+                rec_w = rec_r  # one stacked reduction reconstructs both
+            else:
+                rec_w = (
+                    plan_w.n_erased
+                    if plan_w is not None and plan_w.recoverable else 0
+                )
+        else:
+            plan_r = make_plan(variant, p, spec_r)
+            tol_r = within_tolerance(variant, spec_r, plan_r.n_steps)
+            if not last:
+                spec_w = faults.update.get(k, FaultSpec.none())
+                plan_w = make_plan(variant, p, spec_w)
+                tol_w = within_tolerance(variant, spec_w, plan_w.n_steps)
+            recoverable = bool(plan_r.final_valid.any()) and (
+                plan_w is None or bool(plan_w.final_valid.any())
+            )
+            # recovered_* counts ranks replica_fetch actually restores —
+            # zero when recovery is disabled (the ranks stay poisoned).
+            fetching = recover is Recover.REPLICA and recoverable
+            rec_r = int((~plan_r.final_valid).sum()) if fetching else 0
+            if fused and plan_w is not None:
+                rec_w = rec_r  # the one stacked fetch restores both leaves
+            else:
+                rec_w = (
+                    int((~plan_w.final_valid).sum())
+                    if fetching and plan_w is not None else 0
+                )
         reports.append(
             PanelReport(
                 panel=k,
@@ -278,6 +323,7 @@ def _build_reports(
                 recovered_w=rec_w,
                 recoverable=recoverable,
                 fused=fused,
+                scheme="coded" if coded else "butterfly",
             )
         )
     if fuse is Fuse.ON:
@@ -330,12 +376,19 @@ def _blocked_body(
     compute_q: bool,
     use_pallas: bool,
     interpret: bool | None,
+    world: Comm | None = None,
 ):
     m_local, n = a.shape[-2], a.shape[-1]
     n_pad = widths[0] * len(widths)
     kw = dict(use_pallas=use_pallas, interpret=interpret)
     r_full = jnp.zeros(a.shape[:-2] + (n, n), jnp.float32)
     valid = comm.take(np.ones(comm.n_ranks, dtype=bool))
+    # coded runs reduce over the P + parity ``world`` comm; ``detected``
+    # accumulates per-panel checksum-verification flags over data ranks
+    coded = world is not None
+    detected = (
+        comm.take(np.zeros(comm.n_ranks, dtype=bool)) if coded else None
+    )
     q_cols = []
     trail = a
     s = kops.panel_cross(a, split=widths[0], **kw)          # pipeline prime
@@ -344,6 +397,11 @@ def _blocked_body(
         if local_r == "chol":
             return chol_r(g)                      # free: lookahead Gram
         return pf.local_fn()(panel.astype(jnp.float32))
+
+    def coded_reduce(payload, plan, combiner):
+        p = comm.n_ranks
+        val, fv, det = execute_coded(payload, world, plan, combiner)
+        return jax.tree.map(lambda t: t[:p], val), fv[:p], det[:p]
 
     def issue(rep, panel, g_loc, c_loc):
         """Put a fused panel's single butterfly on the wire: the stacked
@@ -354,11 +412,21 @@ def _blocked_body(
         the next consume stage run."""
         r_loc = local_r_of(panel, g_loc)
         if rep.plan_w is None:
+            if coded:
+                r_kk, valid_r, det = coded_reduce(
+                    r_loc, rep.plan_r, FUSED_PANEL_COMBINER.parts[0]
+                )
+                return r_kk, None, valid_r, None, det
             r_kk, valid_r = pf.reduce_r_prepared(r_loc, comm, rep.plan_r)
-            return r_kk, None, valid_r, None
+            return r_kk, None, valid_r, None, None
+        if coded:
+            (r_kk, c_sum), v, det = coded_reduce(
+                (r_loc, c_loc), rep.plan_r, FUSED_PANEL_COMBINER
+            )
+            return r_kk, c_sum, v, v, det
         (r_kk, c_sum), v = pf.reduce_panel_fused(r_loc, c_loc, comm,
                                                  rep.plan_r)
-        return r_kk, c_sum, v, v
+        return r_kk, c_sum, v, v, None
 
     pending = None
     if reports[0].fused:
@@ -372,24 +440,38 @@ def _blocked_body(
         panel = trail[..., :, :b]
         # -- phase 1: panel reduction(s) over the butterfly -----------------
         if rep.fused:
-            r_kk, c_sum, valid_r, valid_w = pending
+            r_kk, c_sum, valid_r, valid_w, det = pending
             pending = None
         else:
             r_loc = local_r_of(panel, s[..., :, :b])
-            r_kk, valid_r = pf.reduce_r_prepared(r_loc, comm, rep.plan_r)
+            if coded:
+                r_kk, valid_r, det = coded_reduce(
+                    r_loc, rep.plan_r, FUSED_PANEL_COMBINER.parts[0]
+                )
+            else:
+                r_kk, valid_r = pf.reduce_r_prepared(r_loc, comm, rep.plan_r)
+                det = None
             c_sum = valid_w = None
         valid = valid & valid_r
-        all_valid_r = bool(rep.plan_r.final_valid.all())
+        if det is not None:
+            detected = detected | det
+        all_valid_r = bool(_data_valid(rep.plan_r).all())
         if rep.recovered_r:
+            # recover_payload dispatches per scheme: butterfly plans fetch
+            # full replicas from donors; coded plans already reconstructed
+            # in-collective, so it only validates the erasure budget held.
             if rep.fused and c_sum is not None:
                 # ONE fetch restores both stacked leaves — the replica
                 # copies of the fused payload double as FT copies for R
                 # and the cross products alike.
-                r_kk, c_sum = replica_fetch(
-                    (r_kk, c_sum), comm, rep.plan_r.final_valid
+                r_kk, c_sum = recover_payload(
+                    (r_kk, c_sum), comm, rep.plan_r.final_valid,
+                    plan=rep.plan_r,
                 )
             else:
-                r_kk = replica_fetch(r_kk, comm, rep.plan_r.final_valid)
+                r_kk = recover_payload(
+                    r_kk, comm, rep.plan_r.final_valid, plan=rep.plan_r
+                )
         # -- phase 2: explicit panel Q (+ reorth polish) --------------------
         # The polish's gram all-reduce mixes every rank's contribution, so
         # it needs every rank to hold a finite r_kk; when a no-recovery run
@@ -407,13 +489,20 @@ def _blocked_body(
                 # split schedule: the cross products ride a second,
                 # serialized sum butterfly (its own plan — update-phase
                 # deaths strike here)
-                c_sum, valid_w = ft_allreduce(
-                    s[..., :, b:], comm, op="sum", plan=rep.plan_w
-                )
+                if coded:
+                    c_sum, valid_w, det_w = coded_reduce(
+                        s[..., :, b:], rep.plan_w,
+                        FUSED_PANEL_COMBINER.parts[1],
+                    )
+                    detected = detected | det_w
+                else:
+                    c_sum, valid_w = ft_allreduce(
+                        s[..., :, b:], comm, op="sum", plan=rep.plan_w
+                    )
                 valid = valid & valid_w
                 if rep.recovered_w:
-                    c_sum = replica_fetch(
-                        c_sum, comm, rep.plan_w.final_valid
+                    c_sum = recover_payload(
+                        c_sum, comm, rep.plan_w.final_valid, plan=rep.plan_w
                     )
             w = _solve_w(r_tot, c_sum, pad_to=n_pad - widths[0])
             r_full = r_full.at[..., c0:c0 + b, c0:].set(
@@ -436,7 +525,7 @@ def _blocked_body(
             r_full = r_full.at[..., c0:c0 + b, c0:].set(r_tot)
         c0 += b
     q = jnp.concatenate(q_cols, axis=-1) if compute_q else None
-    return r_full, valid, q
+    return r_full, valid, q, detected
 
 
 # ---------------------------------------------------------------------------
@@ -800,12 +889,13 @@ def _note_eager_reductions(
         c0 += b
     reorth_counts = tuple(
         pf.reorth
-        if bool(rep.plan_r.final_valid.all()) or rep.recovered_r else 0
+        if bool(_data_valid(rep.plan_r).all()) or rep.recovered_r else 0
         for rep in reports
     )
+    plan0 = reports[0].plan_r
     _note_reductions(
         name, reports, widths, tuple(c_widths), reorth_counts,
-        make_plan("redundant", reports[0].plan_r.n_ranks),
+        make_plan("redundant", getattr(plan0, "n_data", plan0.n_ranks)),
     )
 
 
@@ -900,7 +990,7 @@ def _setup(
         )
     reports = _build_reports(
         config.variant, p, widths, faults or PanelFaultSchedule(),
-        config.recover, config.fuse,
+        config.recover, config.fuse, config.redundancy, config.parity,
     )
     return widths, reports, config.factorizer()
 
@@ -918,18 +1008,24 @@ def _factorize_sim(
     faulty plans route to the eager host-replanned general driver."""
     p, m_local, n = a_blocks.shape
     widths, reports, pf = _setup(m_local, n, p, config, faults)
-    if _resolve_pipeline(config.pipeline, reports):
+    coded = config.redundancy is Redundancy.CODED
+    detected = None
+    if not coded and _resolve_pipeline(config.pipeline, reports):
         r, valid, q = _run_sim_pipeline(a_blocks, widths, config, reports)
     else:
-        r, valid, q = _blocked_body(
+        # coded runs always take the eager driver (the scan pipeline's
+        # one-plan butterfly schedule is replica-redundancy only;
+        # pipeline=ON + coded is rejected at config validation)
+        r, valid, q, detected = _blocked_body(
             a_blocks, SimComm(p), reports, widths, pf,
             local_r=config.resolved_local_r(), compute_q=config.compute_q,
             use_pallas=config.use_pallas, interpret=config.interpret,
+            world=SimComm(p + config.parity) if coded else None,
         )
         _note_eager_reductions("blocked_qr_sim", reports, widths, n, pf)
     return BlockedQRResult(
         r=r, valid=valid, q=q, reports=reports,
-        panel_width=config.panel_width,
+        panel_width=config.panel_width, detected=detected,
     )
 
 
@@ -1011,7 +1107,7 @@ def _compiled_shard_general(
 
     def body(a_blk):
         _dispatch.note_trace("blocked_qr_shard_map")
-        r, valid, q = _blocked_body(
+        r, valid, q, _ = _blocked_body(
             a_blk, comm, reports, widths, pf,
             local_r=config.resolved_local_r(), compute_q=want_q,
             use_pallas=config.use_pallas, interpret=config.interpret,

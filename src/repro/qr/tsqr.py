@@ -51,7 +51,7 @@ from repro.collective.plan import Plan, make_plan
 from repro.kernels import dispatch as _dispatch
 
 from ._shard import dummy_q, shard_compile
-from .api import QRConfig, warn_deprecated_entry
+from .api import QRConfig, Redundancy, warn_deprecated_entry
 from .panel import PanelFactorizer, form_q
 
 __all__ = [
@@ -70,16 +70,22 @@ __all__ = [
 class TSQRResult:
     """Per-rank outcome of a fault-tolerant TSQR.
 
-    ``r``      — (P, n, n) in sim / per-device (n, n) under shard_map.
-    ``valid``  — who holds a correct final R (the paper's semantics).
-    ``q``      — optional per-rank (m_local, n) orthonormal factor.
-    ``plan``   — the communication plan that was executed (accounting).
+    ``r``        — (P, n, n) in sim / per-device (n, n) under shard_map.
+    ``valid``    — who holds a correct final R (the paper's semantics).
+    ``q``        — optional per-rank (m_local, n) orthonormal factor.
+    ``plan``     — the communication plan that was executed (accounting):
+                   a butterfly :class:`~repro.collective.plan.Plan` or a
+                   :class:`~repro.collective.coded.CodedPlan`.
+    ``detected`` — coded runs only: (P,) device bool flagging ranks whose
+                   payload failed checksum verification (silent data
+                   corruption the butterfly would have propagated).
     """
 
     r: jax.Array
     valid: jax.Array
     q: jax.Array | None
     plan: Plan
+    detected: jax.Array | None = None
 
 
 # Registered as a pytree (arrays as leaves, the host plan as static aux) so
@@ -87,8 +93,10 @@ class TSQRResult:
 # B independent tall-skinny factorizations directly.
 jax.tree_util.register_pytree_node(
     TSQRResult,
-    lambda res: ((res.r, res.valid, res.q), (res.plan,)),
-    lambda aux, ch: TSQRResult(r=ch[0], valid=ch[1], q=ch[2], plan=aux[0]),
+    lambda res: ((res.r, res.valid, res.q, res.detected), (res.plan,)),
+    lambda aux, ch: TSQRResult(
+        r=ch[0], valid=ch[1], q=ch[2], detected=ch[3], plan=aux[0]
+    ),
 )
 
 
@@ -136,14 +144,84 @@ def _compiled_tsqr_gram_shard(mesh, axis: str, p: int, reorth: int,
 # factorize() implementations (routed to by repro.qr.api.factorize)
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=64)
+def _compiled_tsqr_coded(config: QRConfig, plan):
+    """One compiled coded TSQR per ``(canonical config, coded plan)`` —
+    the coded analogue of the butterfly's cached builders, so repeat calls
+    under the same fault picture perform zero new traces (CI-guarded)."""
+    from repro.collective.coded import execute_coded
+
+    p = plan.n_data
+    world = SimComm(plan.n_ranks)
+    data_comm = SimComm(p)
+    pf = config.factorizer()
+
+    def fn(a, observed):
+        _dispatch.note_trace("tsqr_coded")
+        val, fv, det = execute_coded(
+            a, world, plan, pf.combiner(), observed=observed
+        )
+        r, valid, detected = val[:p], fv[:p], det[:p]
+        q = None
+        if config.compute_q:
+            q, r = pf.form_q(a, r, data_comm)
+        return r, valid, q, detected
+
+    return jax.jit(fn)
+
+
+def _factorize_sim_coded(
+    a_blocks, config: QRConfig, fault_spec, observed
+) -> TSQRResult:
+    """Checksum-coded TSQR (DESIGN.md §12): ``config.parity`` checksum
+    ranks are appended to the P data blocks, Cauchy-encoded at
+    distribution time, and up to ``parity`` dead / straggling / corrupted
+    contributions are reconstructed from parity in-collective — no
+    ``replica_fetch``, and declared-corrupt payloads are *verified*
+    against their reconstruction (``detected``)."""
+    from repro.collective.coded import make_coded_plan
+
+    p = a_blocks.shape[0]
+    plan = make_coded_plan(p, config.parity, fault_spec)
+    if config.compute_q and not plan.final_valid[:p].all():
+        raise ValueError(
+            "compute_q requires every data rank to end valid; this fault "
+            f"spec exceeds the coded erasure budget (c={config.parity}) — "
+            f"final_valid={plan.final_valid[:p]}"
+        )
+    fun = _compiled_tsqr_coded(config.canonical(), plan)
+    _dispatch.note_dispatch("tsqr_coded")
+    r, valid, q, detected = fun(a_blocks, observed)
+    return TSQRResult(
+        r=r, valid=valid, q=(q if config.compute_q else None), plan=plan,
+        detected=detected,
+    )
+
+
 def _factorize_sim(
-    a_blocks, config: QRConfig, *, fault_spec: FaultSpec | None = None
+    a_blocks,
+    config: QRConfig,
+    *,
+    fault_spec: FaultSpec | None = None,
+    observed=None,
 ) -> TSQRResult:
     """Single-device simulation: ``a_blocks`` is (P, m_local, n).
 
     This is the backend the test-suite and the hypothesis robustness sweeps
     drive; the algorithm body is shared with the shard_map driver.
+
+    ``observed`` (coded runs only) is what the data ranks *currently*
+    hold — parity is always encoded from ``a_blocks``, the distribution-
+    time truth, so a scenario injects silent corruption by perturbing
+    ``observed`` and the checksum verification catches the divergence.
     """
+    if config.redundancy is Redundancy.CODED:
+        return _factorize_sim_coded(a_blocks, config, fault_spec, observed)
+    if observed is not None:
+        raise ValueError(
+            "observed= models silently-corrupted payloads, which only the "
+            "coded scheme can act on; use redundancy='coded'"
+        )
     p = a_blocks.shape[0]
     plan = make_plan(config.variant, p, fault_spec)
     if config.compute_q and not plan.final_valid.all():

@@ -20,12 +20,12 @@ def test_registered_cases_cover_migrated_benchmarks():
     assert {
         "robustness", "comm_volume", "semantics", "tsqr_scaling",
         "tsqr_local_qr", "powersgd", "roofline", "fault_scenarios",
-        "kernels", "general_qr", "serving",
+        "kernels", "general_qr", "serving", "coded",
     } <= names
     smoke = {c.name for c in cases_for("smoke")}
     assert {
         "robustness", "comm_volume", "semantics", "fault_scenarios", "kernels",
-        "general_qr", "serving",
+        "general_qr", "serving", "coded",
     } <= smoke
 
 
@@ -246,6 +246,45 @@ def test_collective_scenarios_survive_and_match():
     assert m["round0_survivors"].value == 16      # selfhealing respawns all
     m = scenarios.run_collective_scenario(byname["blank_under_repeat"])
     assert [m[f"round{i}_survivors"].value for i in range(3)] == [8, 6, 4]
+
+
+def test_coded_scenarios_detect_and_degrade():
+    from repro.bench import scenarios
+
+    byname = {s.name: s for s in scenarios.get_scenarios()}
+    assert {"straggler_reconstruction", "silent_corruption_detected",
+            "over_parity_death"} <= set(byname)
+    got = {}
+    for name in ("straggler_reconstruction", "silent_corruption_detected",
+                 "over_parity_death"):
+        m = got[name] = scenarios.run_collective_scenario(byname[name])
+        assert m["values_match"].value is True, name
+        assert m["wire_matches_plan"].value is True, name
+        assert m["honest_degradation"].value is True, name
+    # stragglers are decoded from parity, not awaited: every data rank valid
+    m = got["straggler_reconstruction"]
+    assert m["round0_survivors"].value == 8
+    assert m["survived"].value is True
+    # checksum verification flags exactly the corrupted ranks, both rounds
+    m = got["silent_corruption_detected"]
+    assert m["corruption_detected"].value is True
+    assert [m[f"round{i}_survivors"].value for i in range(2)] == [8, 8]
+    # 3 deaths > c=2 parity lanes: all-invalid round, then a clean decode
+    m = got["over_parity_death"]
+    assert m["round0_within_tolerance"].value is False
+    assert m["round0_survivors"].value == 0
+    assert m["round1_survivors"].value == 8
+
+
+def test_coded_rounds_rejected_under_butterfly():
+    from repro.bench import scenarios
+
+    sc = scenarios.CollectiveScenario(
+        name="bad", p=4, variant="redundant",
+        rounds=(scenarios.ReduceRound(corrupt=(1,)),),
+    )
+    with pytest.raises(ValueError, match="coded"):
+        scenarios.run_collective_scenario(sc)
 
 
 def test_blocked_qr_scenarios_survive_and_match():
