@@ -1,0 +1,6 @@
+"""Thin shim over :mod:`repro.bench.cases.autotune` (kept for muscle
+memory: ``PYTHONPATH=src python benchmarks/autotune_bench.py``)."""
+from repro.bench.cases.autotune import case, main, run  # noqa: F401
+
+if __name__ == "__main__":
+    main()

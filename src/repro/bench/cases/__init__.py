@@ -7,6 +7,7 @@ points remain as thin shims over these modules.
 """
 from .. import scenarios  # noqa: F401  — registers fault_scenarios
 from . import (  # noqa: F401
+    autotune,
     coded,
     comm_volume,
     dispatch,

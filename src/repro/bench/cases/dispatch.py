@@ -350,6 +350,38 @@ def guard() -> int:
     status = "ok" if delta == 0 else f"RETRACED x{delta}"
     print(f"[retrace-guard] serving:warm_stream: {status}")
     failures += delta != 0
+
+    # Tuned-config warm paths: installing an autotune table changes the
+    # resolved block_rows (a static jit key) for its shape-classes, so the
+    # first tuned call may trace — but repeats must not, whether the tuned
+    # height comes from the installed table (kernel wrapper + pipeline
+    # lookup) or from an explicit ``QRConfig.block_rows``.  A scripted
+    # timer keeps the tuning itself deterministic and instant.
+    from repro.kernels import autotune as at
+
+    ticks = iter(range(1, 1 << 20))
+    at.tune([(96, 40)], ("gram", "trailing_update"),
+            timer=lambda: next(ticks) * 1e-4, reps=1, measure_top=2,
+            out_dir=None)
+    try:
+        tuned_checks = [
+            ("kernel:gram",
+             lambda: kops.gram(a[0], use_pallas=True)),
+            ("blocked_qr_pipeline",
+             lambda: factorize(a, QRConfig(panel_width=12))),
+            ("blocked_qr_pipeline",
+             lambda: factorize(a, QRConfig(panel_width=12, block_rows=16))),
+        ]
+        for name, fn in tuned_checks:
+            fn()                                 # warm under the new key
+            before = disp.trace_count(name)
+            fn()                                 # must not trace again
+            delta = disp.trace_count(name) - before
+            status = "ok" if delta == 0 else f"RETRACED x{delta}"
+            print(f"[retrace-guard] tuned:{name}: {status}")
+            failures += delta != 0
+    finally:
+        at.clear()                               # never leak tuned state
     return failures
 
 

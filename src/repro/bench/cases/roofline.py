@@ -38,14 +38,15 @@ HBM_BW = 819e9
 ICI_BW = 50e9
 
 __all__ = ["advice", "analyze_record", "case", "cqr2_rows", "load_all",
-           "main", "markdown_table"]
+           "main", "markdown_table", "tuned_markdown", "tuned_tables"]
 
 # Reference tall-skinny shapes for the CQR2 HBM model (per-rank panels of
 # the production TSQR: m_local × n at bf16).
 CQR2_SHAPES = ((1 << 20, 128), (1 << 22, 256), (1 << 24, 512))
 
 
-def cqr2_rows(shapes=CQR2_SHAPES, dtype: str = "bfloat16") -> list[dict]:
+def cqr2_rows(shapes=CQR2_SHAPES, dtype: str = "bfloat16",
+              hbm_bw: float = HBM_BW) -> list[dict]:
     """HBM-traffic model of CholeskyQR2, fused vs unfused pipelines.
 
     The coefficients are *measured*, not restated: each pipeline runs at two
@@ -85,9 +86,9 @@ def cqr2_rows(shapes=CQR2_SHAPES, dtype: str = "bfloat16") -> list[dict]:
             "unfused_bytes": by["unfused"],
             "fused_q_bytes": by["fused_q"],
             "fused_r_bytes": by["fused_r"],
-            "unfused_s": by["unfused"] / HBM_BW,
-            "fused_q_s": by["fused_q"] / HBM_BW,
-            "fused_r_s": by["fused_r"] / HBM_BW,
+            "unfused_s": by["unfused"] / hbm_bw,
+            "fused_q_s": by["fused_q"] / hbm_bw,
+            "fused_r_s": by["fused_r"] / hbm_bw,
             "speedup_r": by["unfused"] / by["fused_r"],
             "speedup_q": by["unfused"] / by["fused_q"],
         })
@@ -255,6 +256,51 @@ def markdown_table(rows: list[dict]) -> str:
     return hdr + body
 
 
+def tuned_tables(dirpath: str | None = None) -> list[dict]:
+    """Every valid persisted autotune table under ``results/autotune/``
+    (skipping stale-schema files — they must be re-tuned, not re-read)."""
+    from repro.kernels import autotune as at
+
+    dirpath = dirpath or at.DEFAULT_OUT_DIR
+    docs = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        try:
+            docs.append(at.load_table(path))
+        except (at.AutotuneError, json.JSONDecodeError, OSError):
+            continue
+    return docs
+
+
+def tuned_markdown(docs: list[dict]) -> str:
+    """The tuned-model report section: measured machine constants and the
+    per-entry roofline predictions next to the timed winners, plus the
+    CQR2 HBM model re-priced at the *measured* bandwidth."""
+    out = "\n## Tuned kernel model (results/autotune/, DESIGN.md §13)\n\n"
+    for doc in docs:
+        mc = doc["machine"]
+        out += (f"backend **{doc['backend']}** (arch `{doc['arch']}`): "
+                f"measured bw {mc['mem_bw_bytes_per_s']:.3e} B/s, "
+                f"peak {mc['flops_per_s']:.3e} flop/s\n\n")
+        out += ("| kernel | shape class | block_rows | floor | fuse | "
+                "predicted s | measured s |\n"
+                "|---|---|---|---|---|---|---|\n")
+        for _, e in sorted(doc["entries"].items()):
+            out += (f"| {e['kernel']} | {e['shape_class']} | "
+                    f"{e['block_rows']} | {e['gemm_width_floor']} | "
+                    f"{e['fuse_want_q']} | {e['predicted_s']:.3e} | "
+                    f"{e['measured_s']:.3e} |\n")
+        out += (
+            "\nCQR2 HBM model at the measured bandwidth "
+            "(fused R-only vs unfused):\n\n"
+            "| shape | unfused s | fused-R s | speedup |\n|---|---|---|---|\n"
+        )
+        for r in cqr2_rows(hbm_bw=mc["mem_bw_bytes_per_s"]):
+            out += (f"| {r['m']}x{r['n']} | {r['unfused_s']:.3e} | "
+                    f"{r['fused_r_s']:.3e} | {r['speedup_r']:.2f} |\n")
+        out += "\n"
+    return out
+
+
 def case(dirpath: str = "results/dryrun"):
     # -- CQR2 kernel-pipeline HBM model: runs everywhere, ratio hard-gated --
     metrics = {}
@@ -304,8 +350,11 @@ def main():
               f"{r['memory_s']:.4e},{r['collective_s']:.4e},{r['dominant']},"
               f"{r['useful_ratio']:.3f},{r['roofline_frac']:.3f},{r['hbm_gb']:.1f}")
     os.makedirs("results", exist_ok=True)
+    docs = tuned_tables()
     with open("results/roofline.md", "w") as f:
         f.write(markdown_table(rows))
+        if docs:
+            f.write(tuned_markdown(docs))
     return rows
 
 

@@ -21,6 +21,6 @@ the jit'd public wrappers (jnp fallbacks, batching, and the HBM-traffic
 notes consumed by :mod:`repro.kernels.traffic`); ``ref.py`` the oracles the
 tests compare against.
 """
-from . import backend, dispatch, ops, ref, traffic
+from . import autotune, backend, dispatch, gpu, ops, ref, traffic
 
-__all__ = ["backend", "dispatch", "ops", "ref", "traffic"]
+__all__ = ["autotune", "backend", "dispatch", "gpu", "ops", "ref", "traffic"]

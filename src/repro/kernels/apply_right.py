@@ -21,9 +21,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from .backend import resolve_interpret
+from . import autotune as _autotune
+from .backend import pick_block_rows, resolve_backend
 from .dispatch import note_trace
-from .gram import DEFAULT_BLOCK_ROWS, pick_block_rows
 
 __all__ = ["apply_right"]
 
@@ -38,19 +38,27 @@ def _apply_kernel(a_ref, w_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def apply_right(a, w, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+def apply_right(a, w, *, block_rows: int | None = None,
                 interpret: bool | None = None):
     """A (m, n) @ W (n, k) → (m, k) in A's dtype, f32 accumulation.
 
-    ``interpret=None`` auto-detects the backend (compiled on TPU,
-    interpreted elsewhere).
+    ``interpret=None`` auto-detects the backend (compiled on TPU/GPU,
+    interpreted elsewhere); ``block_rows=None`` consults the installed
+    autotune table at trace time (see :func:`repro.kernels.gram.gram`).
     """
     note_trace("kernel:apply_right")
-    interpret = resolve_interpret(interpret)
+    be = resolve_backend(interpret)
     m, n = a.shape
     n2, k = w.shape
     assert n == n2, (a.shape, w.shape)
-    block_rows = pick_block_rows(m, block_rows)
+    block_rows = _autotune.resolve_block_rows(
+        "apply_right", m, n, a.dtype, explicit=block_rows, backend=be
+    )
+    if be.kind == "gpu-triton":
+        from . import gpu as _gpu
+
+        return _gpu.apply_right(a, w, block_rows=block_rows, interpret=False)
+    block_rows = pick_block_rows(m, block_rows, sublane=be.sublane)
     return pl.pallas_call(
         _apply_kernel,
         grid=(pl.cdiv(m, block_rows),),
@@ -60,5 +68,5 @@ def apply_right(a, w, *, block_rows: int = DEFAULT_BLOCK_ROWS,
         ],
         out_specs=pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, k), a.dtype),
-        interpret=interpret,
+        interpret=be.interpret,
     )(a, w)

@@ -1,0 +1,671 @@
+"""Roofline-seeded, hardware-aware autotuner for the Pallas kernels.
+
+ROADMAP item 5: every kernel ran with fixed knobs (``block_rows=1024``,
+hard-coded VMEM budgets, the fixed 4-col GEMM floor) picked for one TPU
+generation.  This module searches the real knob space per
+``(kernel, backend, arch, dtype, shape-class)``:
+
+  * ``block_rows``        — sublane-aligned streaming panel heights;
+  * accumulator budget    — the VMEM/SMEM bytes a candidate's working set
+    may occupy (per-backend constants; candidates that overflow are
+    *illegal*, not merely slow);
+  * GEMM-width floor      — the narrow-dot padding width (never below
+    :data:`MIN_GEMM_FLOOR` — ``ref.py`` relies on it for width-stable XLA
+    GEMM strategies, a bit-identity contract);
+  * ``want_q`` fusion split — whether the fused apply+Gram sweep beats the
+    unfused apply-then-Gram pair for the class.
+
+The search is **roofline-seeded**: an analytic prior prices each candidate
+as ``max(streamed_HBM_bytes / measured_bandwidth, FLOPs / measured_peak)``
+plus a per-grid-step overhead — the byte model is the same shape-derived
+accounting :mod:`repro.kernels.traffic` records (streamed bytes add the
+edge-padding waste ``⌈m/br⌉·br`` rows and, on GPU, the per-program partial
+accumulators of :mod:`repro.kernels.gpu`) — so only the top few candidates
+are ever measured, not a grid sweep.  Machine constants come from two tiny
+probes (a streaming copy and a square matmul), injectable for tests.
+
+Winners persist as schema-versioned JSON under ``results/autotune/`` (one
+file per backend kind) with an in-process cache consulted by the ``ops``
+wrappers and the blocked-QR pipelines.  The tuned ``block_rows`` is
+resolved to a **concrete int at the Python level** before it becomes a
+static jit key — installing a new table changes the resolution for the
+affected shape-classes only, so tuning never retraces an unrelated warm
+path (the ``autotune`` bench case and the CI retrace guard pin this).
+
+Prediction honesty is hard-gated: for every tuned entry the *committed*
+byte model (:func:`committed_traffic`) must equal the wrapper-level traffic
+notes observed when running the tuned config, byte for byte, and the
+dispatch count must match — see ``repro/bench/cases/autotune.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import time
+
+import numpy as np
+
+from . import dispatch as _dispatch
+from . import traffic as _traffic
+from .backend import DEFAULT_BLOCK_ROWS, Backend, KINDS, pick_block_rows, resolve_backend
+
+__all__ = [
+    "ACCUM_BUDGET_BYTES",
+    "AutotuneError",
+    "AutotuneSchemaError",
+    "DEFAULT_KERNELS",
+    "DEFAULT_OUT_DIR",
+    "MIN_GEMM_FLOOR",
+    "MachineModel",
+    "Prediction",
+    "candidate_block_rows",
+    "clear",
+    "committed_traffic",
+    "entry_key",
+    "entry_legal",
+    "generation",
+    "install",
+    "installed",
+    "load_table",
+    "lookup",
+    "machine_constants",
+    "main",
+    "measure_machine",
+    "predict",
+    "resolve_block_rows",
+    "save_table",
+    "select_winner",
+    "shape_class",
+    "trailing_panel_width",
+    "tune",
+    "tune_kernel",
+    "validate_table",
+]
+
+SCHEMA_VERSION = 1
+DEFAULT_OUT_DIR = os.path.join("results", "autotune")
+DEFAULT_KERNELS = ("gram", "apply_right", "fused_apply_gram",
+                   "trailing_update")
+
+# ref.py pads narrower dots to this width so XLA keeps one GEMM strategy
+# across panel widths (a bit-identity contract between the eager and
+# pipelined drivers) — tuner candidates below it are illegal.
+MIN_GEMM_FLOOR = 4
+_GEMM_FLOOR_CANDIDATES = (4, 8)
+
+# Accumulator working-set budgets per backend kind (bytes).  Mosaic streams
+# blocks through ~16 MiB/core VMEM (leave headroom for double buffering);
+# the interpreter mirrors the TPU kernel structure; Triton programs stage
+# their block through shared memory / registers — far smaller.
+ACCUM_BUDGET_BYTES = {
+    "tpu-mosaic": 12 << 20,
+    "interpret": 12 << 20,
+    "gpu-triton": 192 << 10,
+}
+
+_BASE_BLOCK_ROWS = (16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+class AutotuneError(ValueError):
+    """An invalid tuning request or corrupt tuned table."""
+
+
+class AutotuneSchemaError(AutotuneError):
+    """A persisted table that does not conform to the schema (stale
+    ``schema_version``, missing fields) — rejected, never half-loaded."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineModel:
+    """Measured machine constants the roofline prior prices against."""
+
+    mem_bw_bytes_per_s: float
+    flops_per_s: float
+    step_overhead_s: float = 2e-6
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Prediction:
+    """The analytic model of one (kernel, shape, config) execution.
+
+    ``read_bytes``/``write_bytes`` are the *committed* operand bytes — the
+    exact figures the ``ops`` wrappers note to :mod:`repro.kernels.traffic`
+    (hard-gated equal by the ``autotune`` bench case).  ``streamed_bytes``
+    adds what the grid actually moves: edge-padding waste and, on GPU, the
+    partial-accumulator round trip.  ``seconds`` is the roofline prior."""
+
+    read_bytes: int
+    write_bytes: int
+    dispatches: int
+    streamed_bytes: int
+    flops: float
+    accum_bytes: int
+    grid_steps: int
+    seconds: float
+
+
+# ---------------------------------------------------------------------------
+# shape classes and keys
+# ---------------------------------------------------------------------------
+
+def shape_class(m: int, n: int) -> str:
+    """Bucket ``m`` to the next power of two (panel heights are the knob —
+    nearby heights share a winner); ``n`` stays exact (it is a static trace
+    dimension and small)."""
+    p2 = 1 << max(int(m) - 1, 0).bit_length()
+    return f"m{p2}xn{int(n)}"
+
+
+def entry_key(kernel: str, backend_kind: str, dtype, klass: str) -> str:
+    return f"{kernel}|{backend_kind}|{np.dtype(dtype).name}|{klass}"
+
+
+def trailing_panel_width(n: int) -> int:
+    """The representative blocked-QR panel width for an n-wide trailing
+    block — what ``trailing_update`` tuning (and its bench verification)
+    factor the shape with."""
+    return min(int(n), max(MIN_GEMM_FLOOR, int(n) // 4))
+
+
+# ---------------------------------------------------------------------------
+# the analytic model (committed + streamed traffic, flops, working set)
+# ---------------------------------------------------------------------------
+
+def committed_traffic(kernel: str, m: int, n: int, dtype,
+                      *, want_q: bool = True) -> tuple[int, int, int]:
+    """(read_bytes, write_bytes, dispatches) exactly as the ``ops``
+    wrappers will note them — operand bytes, block-size independent."""
+    it = np.dtype(dtype).itemsize
+    if kernel == "gram":
+        return m * n * it, n * n * 4, 1
+    if kernel == "apply_right":
+        return m * n * it + n * n * it, m * n * it, 1
+    if kernel == "fused_apply_gram":
+        w = m * n * it if want_q else 0
+        return m * n * it + n * n * it, w + n * n * 4, 1
+    if kernel == "trailing_update":
+        b = trailing_panel_width(n)
+        read = m * n * it + m * b * it + b * n * it
+        return read, m * n * it + b * n * 4, 1
+    raise AutotuneError(f"unknown kernel {kernel!r} (expected one of "
+                        f"{DEFAULT_KERNELS})")
+
+
+def predict(kernel: str, m: int, n: int, dtype, *, block_rows: int,
+            machine: MachineModel, backend: Backend, want_q: bool = True,
+            gemm_floor: int = MIN_GEMM_FLOOR) -> Prediction:
+    """Roofline prior for one candidate (see :class:`Prediction`)."""
+    it = np.dtype(dtype).itemsize
+    br = pick_block_rows(m, block_rows, sublane=backend.sublane)
+    g = math.ceil(m / br)
+    rows = g * br                       # streamed rows incl. edge padding
+    gpu = backend.kind == "gpu-triton"
+    read, write, dispatches = committed_traffic(
+        kernel, m, n, dtype, want_q=want_q
+    )
+
+    def partials(rows_out: int, cols_out: int) -> int:
+        # per-program partial accumulators: written by the kernel, re-read
+        # by the jnp.sum that folds them (repro.kernels.gpu)
+        return 2 * g * rows_out * cols_out * 4 if gpu else 0
+
+    if kernel == "gram":
+        streamed = rows * n * it + n * n * 4 + partials(n, n)
+        flops = 2.0 * rows * n * n
+        accum = br * n * it + n * n * 4
+    elif kernel == "apply_right":
+        streamed = rows * n * it + n * n * it + rows * n * it
+        flops = 2.0 * rows * n * n
+        accum = br * n * it + n * n * it + br * n * 4
+    elif kernel == "fused_apply_gram":
+        streamed = (rows * n * it + n * n * it + n * n * 4
+                    + (rows * n * it if want_q else 0) + partials(n, n))
+        flops = 4.0 * rows * n * n
+        accum = br * n * it + n * n * it + br * n * 4 + n * n * 4
+    else:  # trailing_update
+        b = trailing_panel_width(n)
+        b_eff = max(b, gemm_floor)      # narrow dots pad to the floor
+        streamed = (rows * (n + b) * it + b * n * it
+                    + rows * n * it + b * n * 4 + partials(b, n))
+        flops = 2.0 * rows * n * (b_eff + b)
+        accum = (2 * br * n + br * b + b * n) * it + b * n * 4
+    seconds = max(
+        streamed / machine.mem_bw_bytes_per_s, flops / machine.flops_per_s
+    ) + g * machine.step_overhead_s
+    return Prediction(
+        read_bytes=read, write_bytes=write, dispatches=dispatches,
+        streamed_bytes=int(streamed), flops=float(flops),
+        accum_bytes=int(accum), grid_steps=g, seconds=float(seconds),
+    )
+
+
+def candidate_block_rows(m: int, backend: Backend) -> tuple[int, ...]:
+    """Sublane-aligned candidate panel heights, clamped to the shape."""
+    base = set(_BASE_BLOCK_ROWS) | {backend.sublane, DEFAULT_BLOCK_ROWS}
+    cands = {
+        pick_block_rows(m, c, sublane=backend.sublane)
+        for c in base if c >= backend.sublane
+    }
+    return tuple(sorted(cands))
+
+
+# ---------------------------------------------------------------------------
+# machine probes
+# ---------------------------------------------------------------------------
+
+def _p50(fn, timer, reps: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn())            # warm: compile outside the clock
+    samples = []
+    for _ in range(max(1, reps)):
+        t0 = timer()
+        jax.block_until_ready(fn())
+        samples.append(timer() - t0)
+    return float(np.median(samples))
+
+
+def measure_machine(*, timer=None, reps: int = 3) -> MachineModel:
+    """Measure the two roofline denominators with tiny probes: a streaming
+    copy (memory bandwidth) and a square f32 matmul (sustained peak).
+    ``timer`` is injectable (tests pass a scripted clock)."""
+    import jax
+    import jax.numpy as jnp
+
+    timer = timer or time.perf_counter
+    n_copy = 1 << 22                                   # 16 MiB of f32
+    x = jnp.arange(n_copy, dtype=jnp.float32)
+    copy = jax.jit(lambda v: v + 1.0)
+    k = 384
+    a = jnp.ones((k, k), jnp.float32)
+    mm = jax.jit(lambda v: v @ v)
+    with _traffic.suppress(), _dispatch.suppress():
+        t_copy = max(_p50(lambda: copy(x), timer, reps), 1e-9)
+        t_mm = max(_p50(lambda: mm(a), timer, reps), 1e-9)
+    return MachineModel(
+        mem_bw_bytes_per_s=2.0 * n_copy * 4 / t_copy,  # read + write
+        flops_per_s=2.0 * k ** 3 / t_mm,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the measured search
+# ---------------------------------------------------------------------------
+
+def _kernel_runner(kernel: str, m: int, n: int, dtype, backend: Backend):
+    """Build ``fn(block_rows)`` executing one dispatch of the kernel at the
+    class's representative shape — also used by the bench case so tuning
+    and verification run the identical op."""
+    import jax.numpy as jnp
+
+    from . import apply_right as _apply_mod
+    from . import fused_apply_gram as _fused_mod
+    from . import gram as _gram_mod
+    from . import trailing_update as _trailing_mod
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, n)), dtype=dtype)
+    interp = backend.interpret
+    if kernel == "gram":
+        return lambda br: _gram_mod.gram(a, block_rows=br, interpret=interp)
+    if kernel == "apply_right":
+        w = jnp.asarray(rng.standard_normal((n, n)) / n, dtype=dtype)
+        return lambda br: _apply_mod.apply_right(
+            a, w, block_rows=br, interpret=interp
+        )
+    if kernel == "fused_apply_gram":
+        w = jnp.asarray(rng.standard_normal((n, n)) / n, dtype=dtype)
+        return lambda br: _fused_mod.fused_apply_gram(
+            a, w, block_rows=br, interpret=interp
+        )
+    b = trailing_panel_width(n)
+    q = jnp.asarray(rng.standard_normal((m, b)), dtype=dtype)
+    w = jnp.asarray(rng.standard_normal((b, n)) / n, dtype=dtype)
+    return lambda br: _trailing_mod.trailing_update(
+        a, q, w, next_width=b, block_rows=br, interpret=interp
+    )
+
+
+def tune_kernel(kernel: str, m: int, n: int, *, dtype="float32",
+                backend: Backend | None = None,
+                machine: MachineModel | None = None, timer=None,
+                reps: int = 3, measure_top: int = 3) -> dict:
+    """Tune one (kernel, shape-class): rank every legal candidate by the
+    roofline prior, measure only the top ``measure_top`` (always including
+    the pre-tuning default so the win is relative to a real baseline), and
+    return the persistable entry dict."""
+    backend = backend or resolve_backend(None)
+    machine = machine or measure_machine(timer=timer)
+    timer = timer or time.perf_counter
+    dt = np.dtype(dtype)
+    budget = ACCUM_BUDGET_BYTES[backend.kind]
+
+    preds: dict[int, Prediction] = {}
+    legal = []
+    for c in candidate_block_rows(m, backend):
+        preds[c] = predict(kernel, m, n, dt, block_rows=c, machine=machine,
+                           backend=backend)
+        if preds[c].accum_bytes <= budget:
+            legal.append(c)
+    if not legal:                        # budget smaller than any candidate:
+        legal = [min(preds, key=lambda c: preds[c].accum_bytes)]
+    ranked = sorted(legal, key=lambda c: (preds[c].seconds, c))
+    to_measure = list(ranked[:max(1, measure_top)])
+    default_br = pick_block_rows(m, DEFAULT_BLOCK_ROWS,
+                                 sublane=backend.sublane)
+    if default_br in legal and default_br not in to_measure:
+        to_measure.append(default_br)
+
+    run = _kernel_runner(kernel, m, n, dt, backend)
+    measured: dict[int, float] = {}
+    with _traffic.suppress(), _dispatch.suppress():
+        for c in to_measure:
+            measured[c] = _p50(lambda: run(c), timer, reps)
+    winner = min(measured, key=lambda c: (measured[c], c))
+
+    # secondary knobs, decided on the prior at the winning height
+    floor = min(
+        _GEMM_FLOOR_CANDIDATES,
+        key=lambda f: (predict(kernel, m, n, dt, block_rows=winner,
+                               machine=machine, backend=backend,
+                               gemm_floor=f).seconds, f),
+    )
+    fused = predict("fused_apply_gram", m, n, dt, block_rows=winner,
+                    machine=machine, backend=backend)
+    unfused = (
+        predict("apply_right", m, n, dt, block_rows=winner, machine=machine,
+                backend=backend).seconds
+        + predict("gram", m, n, dt, block_rows=winner, machine=machine,
+                  backend=backend).seconds
+    )
+    win = preds[winner]
+    return {
+        "kernel": kernel,
+        "backend": backend.kind,
+        "arch": backend.arch,
+        "dtype": dt.name,
+        "shape_class": shape_class(m, n),
+        "m": int(m),
+        "n": int(n),
+        "block_rows": int(winner),
+        "accum_budget_bytes": int(budget),
+        "gemm_width_floor": int(floor),
+        "fuse_want_q": bool(fused.seconds < unfused),
+        "predicted_read_bytes": win.read_bytes,
+        "predicted_write_bytes": win.write_bytes,
+        "predicted_dispatches": win.dispatches,
+        "predicted_streamed_bytes": win.streamed_bytes,
+        "predicted_flops": win.flops,
+        "predicted_s": win.seconds,
+        "measured_s": measured[winner],
+        "candidates": [
+            {
+                "block_rows": int(c),
+                "predicted_s": preds[c].seconds,
+                "accum_bytes": preds[c].accum_bytes,
+                "measured_s": measured.get(c),
+            }
+            for c in sorted(legal)
+        ],
+    }
+
+
+def select_winner(entry: dict) -> int:
+    """Re-select the winner from an entry's persisted measurements — the
+    reproducibility contract the bench case hard-gates: same persisted
+    numbers, same deterministic pick (min measured time, ties to the
+    smaller height)."""
+    measured = [c for c in entry["candidates"]
+                if c.get("measured_s") is not None]
+    if not measured:
+        raise AutotuneError(
+            f"entry {entry.get('kernel')}|{entry.get('shape_class')} has no "
+            "measured candidates — not a tuned table"
+        )
+    best = min(measured, key=lambda c: (c["measured_s"], c["block_rows"]))
+    return int(best["block_rows"])
+
+
+def entry_legal(entry: dict) -> bool:
+    """A winner is legal iff it is sublane-aligned for its backend, inside
+    the accumulator budget, and drawn from the candidate set."""
+    sublane = 16 if entry["backend"] == "gpu-triton" else 8
+    br = entry["block_rows"]
+    cands = {c["block_rows"]: c for c in entry["candidates"]}
+    if br not in cands:
+        return False
+    aligned = br % sublane == 0 or br == entry["m"] >= sublane
+    return (
+        aligned
+        and br >= min(sublane, entry["m"])
+        and cands[br]["accum_bytes"] <= entry["accum_budget_bytes"]
+        and entry["gemm_width_floor"] >= MIN_GEMM_FLOOR
+    )
+
+
+# ---------------------------------------------------------------------------
+# persistence (schema-versioned JSON under results/autotune/)
+# ---------------------------------------------------------------------------
+
+_ENTRY_FIELDS = (
+    "kernel", "backend", "arch", "dtype", "shape_class", "m", "n",
+    "block_rows", "accum_budget_bytes", "gemm_width_floor", "fuse_want_q",
+    "predicted_read_bytes", "predicted_write_bytes", "predicted_dispatches",
+    "predicted_streamed_bytes", "predicted_flops", "predicted_s",
+    "measured_s", "candidates",
+)
+_MACHINE_FIELDS = ("mem_bw_bytes_per_s", "flops_per_s", "step_overhead_s")
+
+
+def validate_table(doc: dict) -> dict:
+    """Validate a persisted table; raises :class:`AutotuneSchemaError`."""
+    if not isinstance(doc, dict):
+        raise AutotuneSchemaError("table must be an object")
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        raise AutotuneSchemaError(
+            f"schema_version: expected {SCHEMA_VERSION}, got "
+            f"{doc.get('schema_version')!r} — stale tables are rejected, "
+            "re-run the tuner"
+        )
+    if doc.get("backend") not in KINDS:
+        raise AutotuneSchemaError(
+            f"backend: must be one of {KINDS}, got {doc.get('backend')!r}"
+        )
+    machine = doc.get("machine")
+    if not isinstance(machine, dict):
+        raise AutotuneSchemaError("machine: required object")
+    for f in _MACHINE_FIELDS:
+        v = machine.get(f)
+        if not isinstance(v, (int, float)) or v <= 0:
+            raise AutotuneSchemaError(f"machine.{f}: must be positive")
+    entries = doc.get("entries")
+    if not isinstance(entries, dict):
+        raise AutotuneSchemaError("entries: required object")
+    for key, e in entries.items():
+        if not isinstance(e, dict):
+            raise AutotuneSchemaError(f"entries.{key}: must be an object")
+        missing = [f for f in _ENTRY_FIELDS if f not in e]
+        if missing:
+            raise AutotuneSchemaError(f"entries.{key}: missing {missing}")
+        want = entry_key(e["kernel"], e["backend"], e["dtype"],
+                         e["shape_class"])
+        if key != want:
+            raise AutotuneSchemaError(
+                f"entries.{key}: key does not match its fields ({want})"
+            )
+        if not isinstance(e["candidates"], list) or not e["candidates"]:
+            raise AutotuneSchemaError(
+                f"entries.{key}: candidates must be a non-empty list"
+            )
+    return doc
+
+
+def save_table(doc: dict, out_dir: str = DEFAULT_OUT_DIR) -> str:
+    validate_table(doc)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{doc['backend']}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_table(path: str) -> dict:
+    with open(path) as f:
+        return validate_table(json.load(f))
+
+
+# ---------------------------------------------------------------------------
+# in-process cache
+# ---------------------------------------------------------------------------
+
+_INSTALLED: dict[str, dict] = {}
+_MACHINE: dict | None = None
+_GENERATION = 0
+
+
+def install(doc: dict) -> int:
+    """Merge a validated table into the in-process cache; returns the new
+    generation.  Resolution happens per call at the Python level, so a new
+    table takes effect immediately for its shape-classes and *only* its
+    shape-classes (unchanged classes keep their compiled programs)."""
+    global _MACHINE, _GENERATION
+    validate_table(doc)
+    _INSTALLED.update(doc["entries"])
+    _MACHINE = dict(doc["machine"])
+    _GENERATION += 1
+    return _GENERATION
+
+
+def installed() -> dict[str, dict]:
+    return dict(_INSTALLED)
+
+
+def clear() -> None:
+    global _MACHINE, _GENERATION
+    _INSTALLED.clear()
+    _MACHINE = None
+    _GENERATION += 1
+
+
+def generation() -> int:
+    return _GENERATION
+
+
+def machine_constants() -> dict | None:
+    """The installed table's measured machine constants (or None) — what
+    :meth:`repro.serve.planner.CostModel.tuned` feeds the serving planner
+    instead of the static defaults."""
+    return dict(_MACHINE) if _MACHINE else None
+
+
+def lookup(kernel: str, m: int, n: int, dtype,
+           backend: Backend | None = None) -> dict | None:
+    be = backend or resolve_backend(None)
+    return _INSTALLED.get(entry_key(kernel, be.kind, dtype, shape_class(m, n)))
+
+
+def resolve_block_rows(kernel: str, m: int, n: int, dtype, *,
+                       explicit: int | None = None,
+                       backend: Backend | None = None) -> int:
+    """The one block_rows resolution order: explicit caller choice >
+    installed tuned winner for the shape-class > the aligned default.
+    Always returns a concrete, shape-clamped int — the static jit key."""
+    if explicit is not None:
+        return int(explicit)
+    be = backend or resolve_backend(None)
+    e = lookup(kernel, m, n, dtype, backend=be)
+    base = e["block_rows"] if e is not None else DEFAULT_BLOCK_ROWS
+    return pick_block_rows(m, base, sublane=be.sublane)
+
+
+# ---------------------------------------------------------------------------
+# the driver + CLI
+# ---------------------------------------------------------------------------
+
+def tune(shapes, kernels=DEFAULT_KERNELS, *, dtype="float32",
+         backend: Backend | None = None, timer=None, reps: int = 3,
+         measure_top: int = 3, out_dir: str | None = None,
+         install_result: bool = True) -> dict:
+    """Tune every (kernel × shape) cell, build the table document, install
+    it in-process and (when ``out_dir``) persist it.  Returns the doc."""
+    backend = backend or resolve_backend(None)
+    machine = measure_machine(timer=timer)
+    entries = {}
+    for m, n in shapes:
+        for kernel in kernels:
+            e = tune_kernel(kernel, m, n, dtype=dtype, backend=backend,
+                            machine=machine, timer=timer, reps=reps,
+                            measure_top=measure_top)
+            entries[entry_key(kernel, backend.kind, dtype,
+                              e["shape_class"])] = e
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "backend": backend.kind,
+        "arch": backend.arch,
+        "machine": machine.as_dict(),
+        "entries": entries,
+    }
+    validate_table(doc)
+    if install_result:
+        install(doc)
+    if out_dir:
+        save_table(doc, out_dir)
+    return doc
+
+
+def _parse_shapes(spec: str) -> tuple[tuple[int, int], ...]:
+    out = []
+    for part in spec.split(","):
+        m, _, n = part.strip().partition("x")
+        out.append((int(m), int(n)))
+    return tuple(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.kernels.autotune",
+        description="roofline-seeded kernel autotuner (persists winners "
+                    "under results/autotune/)",
+    )
+    ap.add_argument("--shapes", default="4096x256,1024x64",
+                    help="comma-separated MxN shape classes")
+    ap.add_argument("--kernels", default=",".join(DEFAULT_KERNELS))
+    ap.add_argument("--out", default=DEFAULT_OUT_DIR)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + end-to-end persistence round-trip "
+                         "(the CI autotune-smoke step)")
+    args = ap.parse_args(argv)
+    shapes = _parse_shapes("256x32" if args.smoke else args.shapes)
+    reps = 2 if args.smoke else args.reps
+    doc = tune(shapes, tuple(args.kernels.split(",")), reps=reps,
+               out_dir=args.out)
+    path = os.path.join(args.out, f"{doc['backend']}.json")
+    reloaded = load_table(path)                       # validates the schema
+    bad = [k for k, e in reloaded["entries"].items()
+           if select_winner(e) != e["block_rows"] or not entry_legal(e)]
+    if bad:
+        print(f"[autotune] ILLEGAL/IRREPRODUCIBLE winners: {bad}")
+        return 1
+    mc = doc["machine"]
+    print(f"[autotune] backend={doc['backend']} arch={doc['arch']} "
+          f"bw={mc['mem_bw_bytes_per_s']:.3e} B/s "
+          f"peak={mc['flops_per_s']:.3e} flop/s")
+    for key, e in sorted(reloaded["entries"].items()):
+        print(f"[autotune] {key}: block_rows={e['block_rows']} "
+              f"floor={e['gemm_width_floor']} fused={e['fuse_want_q']} "
+              f"predicted={e['predicted_s']:.3e}s "
+              f"measured={e['measured_s']:.3e}s")
+    print(f"[autotune] wrote {path} ({len(reloaded['entries'])} entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -37,9 +37,10 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from .backend import resolve_interpret
+from . import autotune as _autotune
+from .backend import pick_block_rows, resolve_backend
 from .dispatch import note_trace
-from .gram import DEFAULT_BLOCK_ROWS, mask_rows, pick_block_rows
+from .gram import mask_rows
 
 __all__ = ["fused_apply_gram"]
 
@@ -71,20 +72,31 @@ def _fused_kernel(a_ref, w_ref, *out_refs, block_rows: int, m: int,
 @functools.partial(
     jax.jit, static_argnames=("block_rows", "interpret", "want_q")
 )
-def fused_apply_gram(a, w, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+def fused_apply_gram(a, w, *, block_rows: int | None = None,
                      interpret: bool | None = None, want_q: bool = True):
     """One-sweep fused ``Q = A @ W`` and ``G' = QᵀQ``.
 
     a: (m, n), w: (n, k).  Returns ``(q, g)`` with q (m, k) in A's dtype and
     g (k, k) float32 — or just ``g`` when ``want_q=False`` (Q never leaves
-    VMEM).  ``interpret=None`` auto-detects the backend.
+    VMEM).  ``interpret=None`` auto-detects the backend; ``block_rows=None``
+    consults the installed autotune table at trace time (see
+    :func:`repro.kernels.gram.gram`).
     """
     note_trace("kernel:fused_apply_gram")
-    interpret = resolve_interpret(interpret)
+    be = resolve_backend(interpret)
     m, n = a.shape
     n2, k = w.shape
     assert n == n2, (a.shape, w.shape)
-    block_rows = pick_block_rows(m, block_rows)
+    block_rows = _autotune.resolve_block_rows(
+        "fused_apply_gram", m, n, a.dtype, explicit=block_rows, backend=be
+    )
+    if be.kind == "gpu-triton":
+        from . import gpu as _gpu
+
+        return _gpu.fused_apply_gram(
+            a, w, block_rows=block_rows, interpret=False, want_q=want_q
+        )
+    block_rows = pick_block_rows(m, block_rows, sublane=be.sublane)
     grid = (pl.cdiv(m, block_rows),)
     kernel = functools.partial(
         _fused_kernel, block_rows=block_rows, m=m, want_q=want_q
@@ -107,7 +119,7 @@ def fused_apply_gram(a, w, *, block_rows: int = DEFAULT_BLOCK_ROWS,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        interpret=interpret,
+        interpret=be.interpret,
     )(a, w)
     if want_q:
         return tuple(out)

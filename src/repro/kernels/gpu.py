@@ -1,0 +1,312 @@
+"""Pallas **Triton** lowerings of the streaming QR kernels (GPU backend).
+
+The TPU kernels in :mod:`gram` / :mod:`fused_apply_gram` /
+:mod:`trailing_update` rely on a Mosaic-only contract: the grid is
+*sequential*, so a constant output block revisited by every step
+(``index_map i → (0, 0)``) is a legal VMEM accumulator.  On GPU that
+contract does not exist — Pallas lowers through Triton, grid programs are
+CUDA blocks running **in parallel**, and the revisited-block pattern is a
+data race.  These lowerings keep the same streaming structure (one
+row-panel of the tall operand per program, in-kernel row/column-iota edge
+masking, no padded HBM copies) but split every reduction into the
+GPU-legal two-phase shape:
+
+  1. each program writes its **own** f32 partial block — out BlockSpec
+     ``(1, n, k)`` with ``index_map i → (i, 0, 0)`` over a
+     ``(grid, n, k)`` output, so no two programs touch the same memory;
+  2. a ``jnp.sum(partials, axis=0)`` *outside* the ``pallas_call`` (but
+     inside the caller's jit, so XLA fuses it) folds the partials.
+
+Map-style writes (``Q`` panels, ``A_new``, the padded copy) are untouched:
+each program owns its output block, which is exactly the parallel-safe
+pattern.  ``combine_gram`` needs no GPU variant at all — its grid is
+``(1,)``, trivially race-free on any backend.
+
+The partial blocks are priced honestly: the autotuner's *streamed*-byte
+model adds ``2·grid·n·k·4`` (the partial write + the fold's re-read) per
+reduction on this backend, which is why its GPU winners lean to taller
+blocks than the SMEM budget alone would suggest.  Committed operand bytes
+(what the ``ops`` wrappers note) are unchanged — partials are jit-local
+temporaries.
+
+CI safety: this container has no GPU; ``interpret=None`` auto-falls back
+to the Pallas interpreter whenever ``jax.default_backend() != "gpu"``, so
+every kernel here is exercised numerically in CI while the compiled
+resolution (``interpret=False`` reaching ``pl.pallas_call``) is pinned by
+mocked-backend tests.  Block heights align to :data:`SUBLANE` = 16 rows
+(half a warp — Triton block dims want power-of-two-ish multiples), not the
+TPU's 8 f32 sublanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .backend import pick_block_rows
+from .gram import mask_cols, mask_rows
+
+__all__ = [
+    "DEFAULT_BLOCK_ROWS",
+    "SUBLANE",
+    "apply_right",
+    "fused_apply_gram",
+    "gram",
+    "pad_cross",
+    "panel_cross",
+    "trailing_update",
+]
+
+# Triton programs stage their block through shared memory/registers — far
+# smaller than a TPU core's VMEM, so the untuned default panel is short.
+# The autotuner's gpu-triton budget searches around this.
+DEFAULT_BLOCK_ROWS = 128
+SUBLANE = 16
+
+_GRAM_DIMS = (((0,), (0,)), ((), ()))
+_APPLY_DIMS = (((1,), (0,)), ((), ()))
+_CROSS_DIMS = (((0,), (0,)), ((), ()))
+
+
+def _resolve(m: int, block_rows: int | None, interpret: bool | None):
+    """(block_rows, interpret) with the CI-safe fallback: no GPU runtime →
+    interpreter, so these kernels are numerically exercised anywhere."""
+    if interpret is None:
+        interpret = jax.default_backend() != "gpu"
+    if block_rows is None:
+        block_rows = DEFAULT_BLOCK_ROWS
+    return pick_block_rows(m, block_rows, sublane=SUBLANE), bool(interpret)
+
+
+def _fold(partials):
+    """Phase 2 of every reduction: fold the per-program partials.  Lives
+    outside the pallas_call, inside the caller's jit."""
+    return jnp.sum(partials, axis=0)
+
+
+def _gram_kernel(a_ref, o_ref, *, block_rows: int, m: int):
+    i = pl.program_id(0)
+    a = mask_rows(a_ref[...], i, block_rows, m)
+    o_ref[0, ...] = lax.dot_general(
+        a, a, _GRAM_DIMS, preferred_element_type=jnp.float32
+    )
+
+
+def gram(a, *, block_rows: int | None = None, interpret: bool | None = None):
+    """G = AᵀA, float32 — Triton lowering (see module docstring)."""
+    m, n = a.shape
+    block_rows, interpret = _resolve(m, block_rows, interpret)
+    g = pl.cdiv(m, block_rows)
+    partials = pl.pallas_call(
+        functools.partial(_gram_kernel, block_rows=block_rows, m=m),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, n, n), jnp.float32),
+        interpret=interpret,
+    )(a)
+    return _fold(partials)
+
+
+def _apply_kernel(a_ref, w_ref, o_ref):
+    o_ref[...] = lax.dot_general(
+        a_ref[...], w_ref[...], _APPLY_DIMS,
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def apply_right(a, w, *, block_rows: int | None = None,
+                interpret: bool | None = None):
+    """A (m, n) @ W (n, k) → (m, k) — a pure map: every program owns its
+    output block, so the TPU structure is already parallel-safe."""
+    m, n = a.shape
+    n2, k = w.shape
+    assert n == n2, (a.shape, w.shape)
+    block_rows, interpret = _resolve(m, block_rows, interpret)
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=(pl.cdiv(m, block_rows),),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), a.dtype),
+        interpret=interpret,
+    )(a, w)
+
+
+def _fused_kernel(a_ref, w_ref, *out_refs, block_rows: int, m: int,
+                  want_q: bool):
+    i = pl.program_id(0)
+    a = mask_rows(a_ref[...], i, block_rows, m)
+    q32 = lax.dot_general(
+        a, w_ref[...], _APPLY_DIMS, preferred_element_type=jnp.float32
+    )
+    q = q32.astype(a_ref.dtype)
+    if want_q:
+        out_refs[0][...] = q
+    out_refs[-1][0, ...] = lax.dot_general(
+        q, q, _GRAM_DIMS, preferred_element_type=jnp.float32
+    )
+
+
+def fused_apply_gram(a, w, *, block_rows: int | None = None,
+                     interpret: bool | None = None, want_q: bool = True):
+    """One-sweep fused ``Q = A @ W`` + partial ``G' = QᵀQ`` per program;
+    the Gram partials fold outside the kernel."""
+    m, n = a.shape
+    n2, k = w.shape
+    assert n == n2, (a.shape, w.shape)
+    block_rows, interpret = _resolve(m, block_rows, interpret)
+    g = pl.cdiv(m, block_rows)
+    kernel = functools.partial(
+        _fused_kernel, block_rows=block_rows, m=m, want_q=want_q
+    )
+    in_specs = [
+        pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        pl.BlockSpec((n, k), lambda i: (0, 0)),
+    ]
+    gram_spec = pl.BlockSpec((1, k, k), lambda i: (i, 0, 0))
+    gram_shape = jax.ShapeDtypeStruct((g, k, k), jnp.float32)
+    if want_q:
+        out_specs = [pl.BlockSpec((block_rows, k), lambda i: (i, 0)), gram_spec]
+        out_shape = [jax.ShapeDtypeStruct((m, k), a.dtype), gram_shape]
+    else:
+        out_specs = [gram_spec]
+        out_shape = [gram_shape]
+    out = pl.pallas_call(
+        kernel,
+        grid=(g,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(a, w)
+    if want_q:
+        return out[0], _fold(out[1])
+    return _fold(out[0])
+
+
+def _update_kernel(a_ref, q_ref, w_ref, *out_refs, block_rows: int, m: int,
+                   next_width: int):
+    i = pl.program_id(0)
+    upd = lax.dot_general(
+        q_ref[...], w_ref[...], _APPLY_DIMS, preferred_element_type=jnp.float32
+    )
+    a_new = (a_ref[...].astype(jnp.float32) - upd).astype(a_ref.dtype)
+    out_refs[0][...] = a_new
+    if next_width:
+        a_m = mask_rows(a_new, i, block_rows, m)
+        out_refs[1][0, ...] = lax.dot_general(
+            a_m[:, :next_width], a_m, _CROSS_DIMS,
+            preferred_element_type=jnp.float32,
+        )
+
+
+def trailing_update(a, q, w, *, next_width: int = 0,
+                    block_rows: int | None = None,
+                    interpret: bool | None = None):
+    """One-sweep ``A_new = A − Q W`` (+ lookahead ``S`` via partials)."""
+    m, nt = a.shape
+    m2, b = q.shape
+    b2, nt2 = w.shape
+    assert m == m2 and b == b2 and nt == nt2, (a.shape, q.shape, w.shape)
+    assert 0 <= next_width <= nt, (next_width, nt)
+    block_rows, interpret = _resolve(m, block_rows, interpret)
+    g = pl.cdiv(m, block_rows)
+    kernel = functools.partial(
+        _update_kernel, block_rows=block_rows, m=m, next_width=next_width
+    )
+    in_specs = [
+        pl.BlockSpec((block_rows, nt), lambda i: (i, 0)),
+        pl.BlockSpec((block_rows, b), lambda i: (i, 0)),
+        pl.BlockSpec((b, nt), lambda i: (0, 0)),
+    ]
+    out_specs = [pl.BlockSpec((block_rows, nt), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((m, nt), a.dtype)]
+    if next_width:
+        out_specs.append(pl.BlockSpec((1, next_width, nt), lambda i: (i, 0, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((g, next_width, nt), jnp.float32)
+        )
+    out = pl.pallas_call(
+        kernel,
+        grid=(g,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(a, q, w)
+    if next_width:
+        return out[0], _fold(out[1])
+    return out[0]
+
+
+def _cross_kernel(a_ref, s_ref, *, block_rows: int, m: int, split: int):
+    i = pl.program_id(0)
+    a = mask_rows(a_ref[...], i, block_rows, m)
+    s_ref[0, ...] = lax.dot_general(
+        a[:, :split], a, _CROSS_DIMS, preferred_element_type=jnp.float32
+    )
+
+
+def panel_cross(a, *, split: int, block_rows: int | None = None,
+                interpret: bool | None = None):
+    """Pipeline prime: ``S = A[:, :split]ᵀ A`` via per-program partials."""
+    m, n = a.shape
+    assert 0 < split <= n, (split, n)
+    block_rows, interpret = _resolve(m, block_rows, interpret)
+    g = pl.cdiv(m, block_rows)
+    partials = pl.pallas_call(
+        functools.partial(
+            _cross_kernel, block_rows=block_rows, m=m, split=split
+        ),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, split, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, split, n), jnp.float32),
+        interpret=interpret,
+    )(a)
+    return _fold(partials)
+
+
+def _pad_cross_kernel(a_ref, apad_ref, s_ref, *, block_rows: int, m: int,
+                      split: int, n: int):
+    i = pl.program_id(0)
+    a_p = mask_cols(a_ref[...], n)
+    apad_ref[...] = a_p
+    a_m = mask_rows(a_p, i, block_rows, m)
+    s_ref[0, ...] = lax.dot_general(
+        a_m[:, :split], a_m, _CROSS_DIMS, preferred_element_type=jnp.float32
+    )
+
+
+def pad_cross(a, *, split: int, out_width: int,
+              block_rows: int | None = None,
+              interpret: bool | None = None):
+    """Fixed-shape prime: widened copy + ``S`` partials in one sweep."""
+    m, n = a.shape
+    assert 0 < split <= n <= out_width, (split, n, out_width)
+    block_rows, interpret = _resolve(m, block_rows, interpret)
+    g = pl.cdiv(m, block_rows)
+    a_pad, partials = pl.pallas_call(
+        functools.partial(
+            _pad_cross_kernel, block_rows=block_rows, m=m, split=split, n=n
+        ),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((block_rows, out_width), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, out_width), lambda i: (i, 0)),
+            pl.BlockSpec((1, split, out_width), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, out_width), a.dtype),
+            jax.ShapeDtypeStruct((g, split, out_width), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a)
+    return a_pad, _fold(partials)

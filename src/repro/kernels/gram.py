@@ -32,7 +32,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from .backend import resolve_interpret
+from . import autotune as _autotune
+from .backend import DEFAULT_BLOCK_ROWS, pick_block_rows, resolve_backend
 from .dispatch import note_trace
 
 __all__ = [
@@ -42,19 +43,6 @@ __all__ = [
     "mask_rows",
     "mask_cols",
 ]
-
-DEFAULT_BLOCK_ROWS = 1024
-_SUBLANE = 8
-
-
-def _ceil_to(x: int, q: int) -> int:
-    return -(-x // q) * q
-
-
-def pick_block_rows(m: int, block_rows: int) -> int:
-    """Clamp the streaming panel height: never taller than (sublane-rounded)
-    m, never shorter than one sublane tile."""
-    return max(_SUBLANE, min(block_rows, _ceil_to(m, _SUBLANE)))
 
 
 def mask_rows(panel, grid_idx, block_rows: int, m: int):
@@ -93,22 +81,34 @@ def _gram_kernel(a_ref, o_ref, *, block_rows: int, m: int):
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def gram(a, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+def gram(a, *, block_rows: int | None = None,
          interpret: bool | None = None):
     """G = AᵀA, float32.  a: (m, n); returns (n, n).
 
     ``interpret=None`` auto-detects the backend (compiled Mosaic kernel on
-    TPU, Pallas interpreter elsewhere); pass an explicit bool to override.
+    TPU, compiled Triton on GPU, Pallas interpreter elsewhere); pass an
+    explicit bool to override.  ``block_rows=None`` consults the installed
+    autotune table at trace time (the resolved int is frozen into this
+    shape's compiled program — callers that want table changes to take
+    effect per call resolve at the Python level, as ``ops`` does, and pass
+    the concrete int).
     """
     note_trace("kernel:gram")
-    interpret = resolve_interpret(interpret)
+    be = resolve_backend(interpret)
     m, n = a.shape
-    block_rows = pick_block_rows(m, block_rows)
+    block_rows = _autotune.resolve_block_rows(
+        "gram", m, n, a.dtype, explicit=block_rows, backend=be
+    )
+    if be.kind == "gpu-triton":
+        from . import gpu as _gpu
+
+        return _gpu.gram(a, block_rows=block_rows, interpret=False)
+    block_rows = pick_block_rows(m, block_rows, sublane=be.sublane)
     return pl.pallas_call(
         functools.partial(_gram_kernel, block_rows=block_rows, m=m),
         grid=(pl.cdiv(m, block_rows),),
         in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
-        interpret=interpret,
+        interpret=be.interpret,
     )(a)

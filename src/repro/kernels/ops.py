@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
 from . import apply_right as _apply_mod
+from . import autotune as _autotune
 from . import combine_gram as _combine_mod
 from . import dispatch as _dispatch
 from . import fused_apply_gram as _fused_mod
@@ -36,6 +37,7 @@ from . import gram as _gram_mod
 from . import ref as _ref
 from . import traffic as _traffic
 from . import trailing_update as _trailing_mod
+from .backend import resolve_backend
 
 __all__ = [
     "gram",
@@ -72,6 +74,20 @@ def _nbytes(x) -> int:
     return int(x.size) * x.dtype.itemsize
 
 
+def _resolve_br(op: str, a, block_rows: int | None,
+                interpret: bool | None) -> int:
+    """Resolve the tuned panel height **at the Python level, per call**:
+    explicit caller choice > installed autotune winner for the shape-class >
+    aligned default.  The concrete int becomes the kernel's static jit key,
+    so installing a new tuned table takes effect immediately for its
+    shape-classes and never retraces any other warm class (the retrace
+    guard pins this)."""
+    return _autotune.resolve_block_rows(
+        op, a.shape[-2], a.shape[-1], a.dtype, explicit=block_rows,
+        backend=resolve_backend(interpret),
+    )
+
+
 def _pre(op: str) -> int:
     """Snapshot the kernel's process-lifetime trace count before a call."""
     return _dispatch.trace_count("kernel:" + op)
@@ -90,26 +106,32 @@ def _note(op: str, t0: int, **traffic_kw) -> None:
 
 # -- kernel entry points (batched, pallas/jnp switchable) -------------------
 
-def gram(a, *, use_pallas: bool = False, interpret: bool | None = None):
+def gram(a, *, use_pallas: bool = False, interpret: bool | None = None,
+         block_rows: int | None = None):
     t0 = _pre("gram")
-    out = (
-        _batched(_gram_mod.gram, 1)(a, interpret=interpret)
-        if use_pallas
-        else _ref.gram(a)
-    )
+    if use_pallas:
+        out = _batched(_gram_mod.gram, 1)(
+            a, interpret=interpret,
+            block_rows=_resolve_br("gram", a, block_rows, interpret),
+        )
+    else:
+        out = _ref.gram(a)
     _note("gram", t0, sweeps=1, read_bytes=_nbytes(a),
           write_bytes=_nbytes(out))
     return out
 
 
 def apply_right(a, w, *, use_pallas: bool = False,
-                interpret: bool | None = None):
+                interpret: bool | None = None,
+                block_rows: int | None = None):
     t0 = _pre("apply_right")
-    out = (
-        _batched(_apply_mod.apply_right, 2)(a, w, interpret=interpret)
-        if use_pallas
-        else _ref.apply_right(a, w)
-    )
+    if use_pallas:
+        out = _batched(_apply_mod.apply_right, 2)(
+            a, w, interpret=interpret,
+            block_rows=_resolve_br("apply_right", a, block_rows, interpret),
+        )
+    else:
+        out = _ref.apply_right(a, w)
     _note("apply_right", t0, sweeps=1,
           read_bytes=_nbytes(a) + _nbytes(w),
           write_bytes=_nbytes(out))
@@ -117,7 +139,8 @@ def apply_right(a, w, *, use_pallas: bool = False,
 
 
 def fused_apply_gram(a, w, *, use_pallas: bool = False,
-                     interpret: bool | None = None, want_q: bool = True):
+                     interpret: bool | None = None, want_q: bool = True,
+                     block_rows: int | None = None):
     """One tall-operand sweep: ``Q = A @ W`` and ``G' = QᵀQ`` together.
 
     Returns ``(q, g)`` — or just ``g`` when ``want_q=False``, in which case
@@ -126,7 +149,9 @@ def fused_apply_gram(a, w, *, use_pallas: bool = False,
     t0 = _pre("fused_apply_gram")
     if use_pallas:
         out = _batched(_fused_mod.fused_apply_gram, 2)(
-            a, w, interpret=interpret, want_q=want_q
+            a, w, interpret=interpret, want_q=want_q,
+            block_rows=_resolve_br("fused_apply_gram", a, block_rows,
+                                   interpret),
         )
     else:
         q = _ref.apply_right(a, w)
@@ -189,34 +214,40 @@ def _ref_pad_cross_jit(a, *, split: int, out_width: int):
 
 def _trailing_update_raw(a, q, w, *, next_width: int = 0,
                          use_pallas: bool = False,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         block_rows: int | None = None):
     if use_pallas:
         return _batched(_trailing_mod.trailing_update, 3)(
-            a, q, w, next_width=next_width, interpret=interpret
+            a, q, w, next_width=next_width, interpret=interpret,
+            block_rows=block_rows,
         )
     return _ref_trailing_jit(a, q, w, next_width=next_width)
 
 
 def _panel_cross_raw(a, *, split: int, use_pallas: bool = False,
-                     interpret: bool | None = None):
+                     interpret: bool | None = None,
+                     block_rows: int | None = None):
     if use_pallas:
         return _batched(_trailing_mod.panel_cross, 1)(
-            a, split=split, interpret=interpret
+            a, split=split, interpret=interpret, block_rows=block_rows
         )
     return _ref_panel_cross_jit(a, split=split)
 
 
 def _pad_cross_raw(a, *, split: int, out_width: int, use_pallas: bool = False,
-                   interpret: bool | None = None):
+                   interpret: bool | None = None,
+                   block_rows: int | None = None):
     if use_pallas:
         return _batched(_trailing_mod.pad_cross, 1)(
-            a, split=split, out_width=out_width, interpret=interpret
+            a, split=split, out_width=out_width, interpret=interpret,
+            block_rows=block_rows,
         )
     return _ref_pad_cross_jit(a, split=split, out_width=out_width)
 
 
 def trailing_update(a, q, w, *, next_width: int = 0, use_pallas: bool = False,
-                    interpret: bool | None = None):
+                    interpret: bool | None = None,
+                    block_rows: int | None = None):
     """Blocked-QR trailing update ``A − Q W`` in **one** trailing-block
     sweep, with the next panel's cross-Gram ``S`` accumulated in the same
     pass when ``next_width > 0`` (see :mod:`repro.kernels.trailing_update`).
@@ -224,9 +255,11 @@ def trailing_update(a, q, w, *, next_width: int = 0, use_pallas: bool = False,
     Returns ``a_new`` — or ``(a_new, s)`` when ``next_width > 0``.
     """
     t0 = _pre("trailing_update")
+    if use_pallas:
+        block_rows = _resolve_br("trailing_update", a, block_rows, interpret)
     out = _trailing_update_raw(
         a, q, w, next_width=next_width, use_pallas=use_pallas,
-        interpret=interpret,
+        interpret=interpret, block_rows=block_rows,
     )
     a_new = out[0] if next_width else out
     s_bytes = _nbytes(out[1]) if next_width else 0
@@ -237,11 +270,15 @@ def trailing_update(a, q, w, *, next_width: int = 0, use_pallas: bool = False,
 
 
 def panel_cross(a, *, split: int, use_pallas: bool = False,
-                interpret: bool | None = None):
+                interpret: bool | None = None,
+                block_rows: int | None = None):
     """Pipeline prime for blocked QR: ``S = A[:, :split]ᵀ A`` in one sweep."""
     t0 = _pre("panel_cross")
+    if use_pallas:
+        block_rows = _resolve_br("panel_cross", a, block_rows, interpret)
     out = _panel_cross_raw(
-        a, split=split, use_pallas=use_pallas, interpret=interpret
+        a, split=split, use_pallas=use_pallas, interpret=interpret,
+        block_rows=block_rows,
     )
     _note("panel_cross", t0, sweeps=1, read_bytes=_nbytes(a),
           write_bytes=_nbytes(out))
@@ -249,14 +286,16 @@ def panel_cross(a, *, split: int, use_pallas: bool = False,
 
 
 def pad_cross(a, *, split: int, out_width: int, use_pallas: bool = False,
-              interpret: bool | None = None):
+              interpret: bool | None = None, block_rows: int | None = None):
     """Fixed-shape pipeline prime: widen A to the padded trailing width and
     compute ``S = A[:, :split]ᵀ A`` in the same single sweep.  Returns
     ``(a_pad, s)`` — see :func:`repro.kernels.trailing_update.pad_cross`."""
     t0 = _pre("pad_cross")
+    if use_pallas:
+        block_rows = _resolve_br("pad_cross", a, block_rows, interpret)
     out = _pad_cross_raw(
         a, split=split, out_width=out_width, use_pallas=use_pallas,
-        interpret=interpret,
+        interpret=interpret, block_rows=block_rows,
     )
     _note("pad_cross", t0, sweeps=1, read_bytes=_nbytes(a),
           write_bytes=_nbytes(out[0]) + _nbytes(out[1]))

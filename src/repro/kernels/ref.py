@@ -55,6 +55,24 @@ def fused_apply_gram(
 _MIN_GEMM_WIDTH = 4
 
 
+def min_gemm_width() -> int:
+    """The effective GEMM-width floor: the static minimum above, raised (never
+    lowered) by an installed autotune winner's ``gemm_width_floor``.  The
+    tuner may prefer a wider pad when the roofline prior says the extra
+    zero-column FLOPs are cheaper than the narrow-dot strategy switch; it can
+    never go below :data:`_MIN_GEMM_WIDTH` — that floor is a bit-identity
+    contract, not a tuning knob.  Consulted at trace time: a table installed
+    *after* an oracle is traced does not rewrite the compiled program (the
+    drivers' compile keys pin the config they were built with)."""
+    from . import autotune as _autotune
+
+    floors = [
+        e.get("gemm_width_floor", _MIN_GEMM_WIDTH)
+        for e in _autotune.installed().values()
+    ]
+    return max([_MIN_GEMM_WIDTH, *floors])
+
+
 def _pad_cols(x: jnp.ndarray, min_width: int) -> jnp.ndarray:
     pad = min_width - x.shape[-1]
     if pad <= 0:
@@ -72,8 +90,9 @@ def trailing_update(
 
     nt = a.shape[-1]
     w32 = w.astype(jnp.float32)
-    if nt < _MIN_GEMM_WIDTH:
-        wide = q.astype(jnp.float32) @ _pad_cols(w32, _MIN_GEMM_WIDTH)
+    floor = min_gemm_width()
+    if nt < floor:
+        wide = q.astype(jnp.float32) @ _pad_cols(w32, floor)
         upd = optimization_barrier(wide)[..., :nt]
     else:
         upd = q.astype(jnp.float32) @ w32
@@ -89,10 +108,11 @@ def panel_cross(a: jnp.ndarray, *, split: int) -> jnp.ndarray:
 
     a32 = a.astype(jnp.float32)
     n = a.shape[-1]
-    if split >= _MIN_GEMM_WIDTH and n >= _MIN_GEMM_WIDTH:
+    floor = min_gemm_width()
+    if split >= floor and n >= floor:
         return jnp.einsum("...mi,...mj->...ij", a32[..., :split], a32)
-    left = _pad_cols(a32[..., :split], _MIN_GEMM_WIDTH)
-    right = _pad_cols(a32, _MIN_GEMM_WIDTH)
+    left = _pad_cols(a32[..., :split], floor)
+    right = _pad_cols(a32, floor)
     s = jnp.einsum("...mi,...mj->...ij", left, right)
     return optimization_barrier(s)[..., :split, :n]
 

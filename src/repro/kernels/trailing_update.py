@@ -46,9 +46,10 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from .backend import resolve_interpret
+from . import autotune as _autotune
+from .backend import pick_block_rows, resolve_backend
 from .dispatch import note_trace
-from .gram import DEFAULT_BLOCK_ROWS, mask_cols, mask_rows, pick_block_rows
+from .gram import mask_cols, mask_rows
 
 __all__ = ["trailing_update", "panel_cross", "pad_cross"]
 
@@ -82,7 +83,7 @@ def _update_kernel(a_ref, q_ref, w_ref, *out_refs, block_rows: int, m: int,
     jax.jit, static_argnames=("next_width", "block_rows", "interpret")
 )
 def trailing_update(a, q, w, *, next_width: int = 0,
-                    block_rows: int = DEFAULT_BLOCK_ROWS,
+                    block_rows: int | None = None,
                     interpret: bool | None = None):
     """One-sweep ``A_new = A − Q W`` (+ lookahead ``S``).
 
@@ -90,16 +91,27 @@ def trailing_update(a, q, w, *, next_width: int = 0,
     ``a``'s dtype — and, when ``next_width > 0``, also
     ``S = A_new[:, :next_width]ᵀ A_new`` (next_width, n_t) float32, the
     next panel's fused Gram + cross product.  ``interpret=None``
-    auto-detects the backend.
+    auto-detects the backend; ``block_rows=None`` consults the installed
+    autotune table at trace time (see :func:`repro.kernels.gram.gram`).
     """
     note_trace("kernel:trailing_update")
-    interpret = resolve_interpret(interpret)
+    be = resolve_backend(interpret)
     m, nt = a.shape
     m2, b = q.shape
     b2, nt2 = w.shape
     assert m == m2 and b == b2 and nt == nt2, (a.shape, q.shape, w.shape)
     assert 0 <= next_width <= nt, (next_width, nt)
-    block_rows = pick_block_rows(m, block_rows)
+    block_rows = _autotune.resolve_block_rows(
+        "trailing_update", m, nt, a.dtype, explicit=block_rows, backend=be
+    )
+    if be.kind == "gpu-triton":
+        from . import gpu as _gpu
+
+        return _gpu.trailing_update(
+            a, q, w, next_width=next_width, block_rows=block_rows,
+            interpret=False,
+        )
+    block_rows = pick_block_rows(m, block_rows, sublane=be.sublane)
     grid = (pl.cdiv(m, block_rows),)
     kernel = functools.partial(
         _update_kernel, block_rows=block_rows, m=m, next_width=next_width
@@ -120,7 +132,7 @@ def trailing_update(a, q, w, *, next_width: int = 0,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        interpret=interpret,
+        interpret=be.interpret,
     )(a, q, w)
     if next_width:
         return tuple(out)
@@ -141,7 +153,7 @@ def _cross_kernel(a_ref, s_ref, *, block_rows: int, m: int, split: int):
 
 
 @functools.partial(jax.jit, static_argnames=("split", "block_rows", "interpret"))
-def panel_cross(a, *, split: int, block_rows: int = DEFAULT_BLOCK_ROWS,
+def panel_cross(a, *, split: int, block_rows: int | None = None,
                 interpret: bool | None = None):
     """Pipeline prime: ``S = A[:, :split]ᵀ A`` in one sweep, float32.
 
@@ -149,10 +161,19 @@ def panel_cross(a, *, split: int, block_rows: int = DEFAULT_BLOCK_ROWS,
     ``S[:, split:]`` its cross product against the trailing block.
     """
     note_trace("kernel:panel_cross")
-    interpret = resolve_interpret(interpret)
+    be = resolve_backend(interpret)
     m, n = a.shape
     assert 0 < split <= n, (split, n)
-    block_rows = pick_block_rows(m, block_rows)
+    block_rows = _autotune.resolve_block_rows(
+        "panel_cross", m, n, a.dtype, explicit=block_rows, backend=be
+    )
+    if be.kind == "gpu-triton":
+        from . import gpu as _gpu
+
+        return _gpu.panel_cross(
+            a, split=split, block_rows=block_rows, interpret=False
+        )
+    block_rows = pick_block_rows(m, block_rows, sublane=be.sublane)
     return pl.pallas_call(
         functools.partial(
             _cross_kernel, block_rows=block_rows, m=m, split=split
@@ -161,7 +182,7 @@ def panel_cross(a, *, split: int, block_rows: int = DEFAULT_BLOCK_ROWS,
         in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((split, n), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((split, n), jnp.float32),
-        interpret=interpret,
+        interpret=be.interpret,
     )(a)
 
 
@@ -188,7 +209,7 @@ def _pad_cross_kernel(a_ref, apad_ref, s_ref, *, block_rows: int, m: int,
     jax.jit, static_argnames=("split", "out_width", "block_rows", "interpret")
 )
 def pad_cross(a, *, split: int, out_width: int,
-              block_rows: int = DEFAULT_BLOCK_ROWS,
+              block_rows: int | None = None,
               interpret: bool | None = None):
     """Pipeline prime for the fixed-shape blocked QR: widen A to the padded
     trailing width and compute ``S = A[:, :split]ᵀ A`` in the **same** sweep.
@@ -203,10 +224,20 @@ def pad_cross(a, *, split: int, out_width: int,
     copy and the lookahead accumulator are produced together.
     """
     note_trace("kernel:pad_cross")
-    interpret = resolve_interpret(interpret)
+    be = resolve_backend(interpret)
     m, n = a.shape
     assert 0 < split <= n <= out_width, (split, n, out_width)
-    block_rows = pick_block_rows(m, block_rows)
+    block_rows = _autotune.resolve_block_rows(
+        "pad_cross", m, n, a.dtype, explicit=block_rows, backend=be
+    )
+    if be.kind == "gpu-triton":
+        from . import gpu as _gpu
+
+        return _gpu.pad_cross(
+            a, split=split, out_width=out_width, block_rows=block_rows,
+            interpret=False,
+        )
+    block_rows = pick_block_rows(m, block_rows, sublane=be.sublane)
     return pl.pallas_call(
         functools.partial(
             _pad_cross_kernel, block_rows=block_rows, m=m, split=split, n=n
@@ -223,5 +254,5 @@ def pad_cross(a, *, split: int, out_width: int,
             jax.ShapeDtypeStruct((m, out_width), a.dtype),
             jax.ShapeDtypeStruct((split, out_width), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=be.interpret,
     )(a)

@@ -166,6 +166,7 @@ class QRConfig:
     compute_q: bool = False
     use_pallas: bool = False
     interpret: bool | None = None
+    block_rows: int | None = None
     pipeline: Pipeline = Pipeline.AUTO
     fuse: Fuse = Fuse.AUTO
     recover: Recover = Recover.REPLICA
@@ -195,6 +196,12 @@ class QRConfig:
             )
         if self.reorth < 0:
             raise ValueError(f"reorth must be >= 0, got {self.reorth}")
+        if self.block_rows is not None and self.block_rows <= 0:
+            raise ValueError(
+                f"block_rows must be a positive int (an explicit Pallas "
+                f"streaming panel height) or None (autotuned per "
+                f"shape-class), got {self.block_rows!r}"
+            )
         if self.gram and self.panel_width is not None:
             raise ValueError(
                 "gram=True selects the Gram-butterfly TSQR, which factors "
@@ -248,6 +255,9 @@ class QRConfig:
             local_r=self.resolved_local_r(),
             pipeline=Pipeline.AUTO,
             recover=Recover.REPLICA,
+            # block_rows only shapes Pallas kernel tiling — the jnp oracles
+            # have no streaming panels, so it must not split their cache key
+            block_rows=self.block_rows if self.use_pallas else None,
             # AUTO and ON trace the same fused program (ON only tightens
             # host-side validation); OFF is the split-schedule program
             fuse=Fuse.OFF if self.fuse is Fuse.OFF else Fuse.AUTO,

@@ -79,9 +79,11 @@ from repro.collective.comm import Comm, ShardMapComm, SimComm
 from repro.collective.engine import ft_allreduce, recover_payload
 from repro.collective.faults import FaultSpec, within_tolerance
 from repro.collective.plan import Plan, make_plan
+from repro.kernels import autotune as _autotune
 from repro.kernels import dispatch as _dispatch
 from repro.kernels import ops as kops
 from repro.kernels import traffic as _traffic
+from repro.kernels.backend import resolve_backend
 
 from ._shard import dummy_q, shard_compile
 from .api import (
@@ -376,11 +378,13 @@ def _blocked_body(
     compute_q: bool,
     use_pallas: bool,
     interpret: bool | None,
+    block_rows: int | None = None,
     world: Comm | None = None,
 ):
     m_local, n = a.shape[-2], a.shape[-1]
     n_pad = widths[0] * len(widths)
-    kw = dict(use_pallas=use_pallas, interpret=interpret)
+    kw = dict(use_pallas=use_pallas, interpret=interpret,
+              block_rows=block_rows)
     r_full = jnp.zeros(a.shape[:-2] + (n, n), jnp.float32)
     valid = comm.take(np.ones(comm.n_ranks, dtype=bool))
     # coded runs reduce over the P + parity ``world`` comm; ``detected``
@@ -581,6 +585,7 @@ def _pipeline_body(
     compute_q: bool,
     use_pallas: bool,
     interpret: bool | None,
+    block_rows: int | None = None,
     fused: bool = True,
 ):
     """The traced single-program body (backend-agnostic like
@@ -592,11 +597,13 @@ def _pipeline_body(
         return _pipeline_body_fused(
             a, comm, plan, widths, pf, local_r=local_r, compute_q=compute_q,
             use_pallas=use_pallas, interpret=interpret,
+            block_rows=block_rows,
         )
     b, k_panels, b_last = widths[0], len(widths), widths[-1]
     n = a.shape[-1]
     n_pad = b * k_panels
-    kw = dict(use_pallas=use_pallas, interpret=interpret)
+    kw = dict(use_pallas=use_pallas, interpret=interpret,
+              block_rows=block_rows)
 
     def panel_qr(panel, g):
         if local_r == "chol":
@@ -671,6 +678,7 @@ def _pipeline_body_fused(
     compute_q: bool,
     use_pallas: bool,
     interpret: bool | None,
+    block_rows: int | None = None,
 ):
     """The double-buffered single-program body: ONE stacked butterfly per
     panel instead of two (``log P`` rounds per panel), issued the moment
@@ -685,7 +693,8 @@ def _pipeline_body_fused(
     b, k_panels, b_last = widths[0], len(widths), widths[-1]
     n = a.shape[-1]
     n_pad = b * k_panels
-    kw = dict(use_pallas=use_pallas, interpret=interpret)
+    kw = dict(use_pallas=use_pallas, interpret=interpret,
+              block_rows=block_rows)
 
     def local_r_of(panel, g):
         if local_r == "chol":
@@ -812,6 +821,7 @@ def _compiled_sim_pipeline(
             a, comm, plan, widths, pf,
             local_r=config.resolved_local_r(), compute_q=config.compute_q,
             use_pallas=config.use_pallas, interpret=config.interpret,
+            block_rows=config.block_rows,
             fused=config.fuse is not Fuse.OFF,
         )
 
@@ -949,7 +959,30 @@ def _note_pipeline(shape, dtype, widths, traced: int,
     )
 
 
+def _tuned_config(config: QRConfig, m_local: int, n: int, dtype) -> QRConfig:
+    """Resolve ``block_rows=None`` to the installed autotune winner for this
+    geometry **before** the config reaches a compile builder's lru key.
+    The tuned int is part of the canonical config, so installing a new
+    table (a) takes effect on the next call for the affected shape-classes
+    and (b) leaves every other geometry's cached program untouched — the
+    zero-warm-retrace contract the CI guard pins.  The trailing-update
+    class keys the lookup: it is the driver's dominant sweep and shares its
+    panel height with every kernel in the body.  No installed entry →
+    ``block_rows`` stays None (kernels fall back to the aligned default at
+    trace time, which never changes, so the key is still stable)."""
+    if not config.use_pallas or config.block_rows is not None:
+        return config
+    e = _autotune.lookup(
+        "trailing_update", m_local, n, dtype,
+        backend=resolve_backend(config.interpret),
+    )
+    if e is None:
+        return config
+    return dataclasses.replace(config, block_rows=int(e["block_rows"]))
+
+
 def _run_sim_pipeline(a, widths, config: QRConfig, reports, *, batched=False):
+    config = _tuned_config(config, a.shape[-2], a.shape[-1], a.dtype)
     fun = _compiled_sim_pipeline(
         a.shape[-3], widths, config.canonical(), batched
     )
@@ -1016,10 +1049,12 @@ def _factorize_sim(
         # coded runs always take the eager driver (the scan pipeline's
         # one-plan butterfly schedule is replica-redundancy only;
         # pipeline=ON + coded is rejected at config validation)
+        eager_cfg = _tuned_config(config, m_local, n, a_blocks.dtype)
         r, valid, q, detected = _blocked_body(
             a_blocks, SimComm(p), reports, widths, pf,
             local_r=config.resolved_local_r(), compute_q=config.compute_q,
             use_pallas=config.use_pallas, interpret=config.interpret,
+            block_rows=eager_cfg.block_rows,
             world=SimComm(p + config.parity) if coded else None,
         )
         _note_eager_reductions("blocked_qr_sim", reports, widths, n, pf)
@@ -1085,6 +1120,7 @@ def _compiled_shard_pipeline(
             a_blk, comm, plan, widths, pf,
             local_r=config.resolved_local_r(), compute_q=want_q,
             use_pallas=config.use_pallas, interpret=config.interpret,
+            block_rows=config.block_rows,
             fused=config.fuse is not Fuse.OFF,
         )
         return r[None], valid[None], q if want_q else dummy_q(a_blk)
@@ -1111,6 +1147,7 @@ def _compiled_shard_general(
             a_blk, comm, reports, widths, pf,
             local_r=config.resolved_local_r(), compute_q=want_q,
             use_pallas=config.use_pallas, interpret=config.interpret,
+            block_rows=config.block_rows,
         )
         return r[None], valid[None], q if want_q else dummy_q(a_blk)
 
@@ -1139,6 +1176,7 @@ def _factorize_shard_map(
     p = mesh.shape[axis]
     m, n = a_global.shape
     widths, reports, pf = _setup(m // p, n, p, config, faults)
+    config = _tuned_config(config, m // p, n, a_global.dtype)
     if _resolve_pipeline(config.pipeline, reports):
         fun = _compiled_shard_pipeline(
             mesh, axis, p, widths, config.canonical(), jit

@@ -56,6 +56,27 @@ class CostModel:
     max_batch_cap: int = 16
     panel_width_candidates: tuple[int, ...] = (8, 16, 32, 64, 128)
 
+    @classmethod
+    def tuned(cls, **overrides) -> "CostModel":
+        """A model fed from the installed autotune table's *measured*
+        machine constants (bandwidth and peak from the tuner's probes)
+        instead of the static defaults.  With no table installed this is
+        exactly ``CostModel()`` — deterministic tests and artifacts are
+        unchanged until a deployment actually tunes.  Scheduling knobs
+        (budgets, caps, candidates) keep their defaults unless overridden;
+        planning stays a pure function of its inputs — the tuned constants
+        are part of those inputs, recorded in the bench artifact."""
+        from repro.kernels import autotune as _autotune
+
+        mc = _autotune.machine_constants() or {}
+        kw = {}
+        if mc.get("mem_bw_bytes_per_s"):
+            kw["mem_bw_bytes_per_s"] = float(mc["mem_bw_bytes_per_s"])
+        if mc.get("flops_per_s"):
+            kw["flops_per_s"] = float(mc["flops_per_s"])
+        kw.update(overrides)
+        return cls(**kw)
+
 
 @dataclasses.dataclass(frozen=True)
 class BucketPlan:
@@ -164,7 +185,7 @@ def plan_bucket(
     (nonsingular) global Gram.  Inadmissible candidates stay in the audit
     table (``admissible=False``) so the cost comparison remains visible.
     """
-    model = model or CostModel()
+    model = model or CostModel.tuned()
     matrix_bytes = spec.area * _F32
     max_batch = max(
         1, min(model.max_batch_cap, model.batch_bytes_budget // matrix_bytes)

@@ -1,0 +1,223 @@
+"""Autotuner cache semantics: persisted round-trip, stale-schema
+rejection, deterministic winners under a scripted timer, resolution
+precedence, and — the load-bearing one — zero warm retraces across
+shape-classes when a table is installed."""
+import itertools
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune as at
+from repro.kernels import backend, dispatch as disp, ops, ref
+
+
+@pytest.fixture(autouse=True)
+def _no_table_leaks():
+    at.clear()
+    yield
+    at.clear()
+
+
+def _fake_timer():
+    """A scripted clock: every measured interval is the same 1 ms, so the
+    winner is fully determined by the deterministic tie-break."""
+    ticks = itertools.count()
+    return lambda: next(ticks) * 1e-3
+
+
+def _entry(kernel="gram", m=256, n=16, block_rows=32, floor=4,
+           backend_kind="interpret"):
+    return {
+        "kernel": kernel, "backend": backend_kind, "arch": "cpu",
+        "dtype": "float32", "shape_class": at.shape_class(m, n),
+        "m": m, "n": n, "block_rows": block_rows,
+        "accum_budget_bytes": at.ACCUM_BUDGET_BYTES[backend_kind],
+        "gemm_width_floor": floor, "fuse_want_q": True,
+        "predicted_read_bytes": m * n * 4,
+        "predicted_write_bytes": n * n * 4,
+        "predicted_dispatches": 1,
+        "predicted_streamed_bytes": m * n * 4,
+        "predicted_flops": 2.0 * m * n * n,
+        "predicted_s": 1e-3, "measured_s": 1e-3,
+        "candidates": [
+            {"block_rows": block_rows, "predicted_s": 1e-3,
+             "accum_bytes": block_rows * n * 4, "measured_s": 1e-3},
+        ],
+    }
+
+
+def _doc(*entries, backend_kind="interpret"):
+    return {
+        "schema_version": at.SCHEMA_VERSION,
+        "backend": backend_kind,
+        "arch": "cpu",
+        "machine": {"mem_bw_bytes_per_s": 4e10, "flops_per_s": 2e11,
+                    "step_overhead_s": 2e-6},
+        "entries": {
+            at.entry_key(e["kernel"], e["backend"], e["dtype"],
+                         e["shape_class"]): e
+            for e in entries
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+def test_tune_persists_and_round_trips(tmp_path):
+    doc = at.tune([(64, 8)], ("gram",), timer=_fake_timer(), reps=1,
+                  measure_top=2, out_dir=str(tmp_path))
+    reloaded = at.load_table(str(tmp_path / "interpret.json"))
+    assert reloaded == doc
+    for e in reloaded["entries"].values():
+        assert at.entry_legal(e)
+        assert at.select_winner(e) == e["block_rows"]
+        assert e["gemm_width_floor"] >= at.MIN_GEMM_FLOOR
+
+
+def test_stale_schema_rejected(tmp_path):
+    doc = _doc(_entry())
+    doc["schema_version"] = at.SCHEMA_VERSION + 1
+    with pytest.raises(at.AutotuneSchemaError, match="schema_version"):
+        at.validate_table(doc)
+    path = tmp_path / "interpret.json"
+    path.write_text(json.dumps(doc))
+    with pytest.raises(at.AutotuneSchemaError):
+        at.load_table(str(path))
+    with pytest.raises(at.AutotuneSchemaError):
+        at.install(doc)
+    assert at.installed() == {}          # rejected, never half-loaded
+
+
+def test_missing_fields_and_bad_keys_rejected():
+    e = _entry()
+    del e["candidates"]
+    with pytest.raises(at.AutotuneSchemaError, match="missing"):
+        at.validate_table(_doc(e))
+    doc = _doc(_entry())
+    (key,) = doc["entries"]
+    doc["entries"]["wrong|key"] = doc["entries"].pop(key)
+    with pytest.raises(at.AutotuneSchemaError, match="does not match"):
+        at.validate_table(doc)
+    doc = _doc(_entry())
+    doc["backend"] = "cuda"
+    with pytest.raises(at.AutotuneSchemaError, match="backend"):
+        at.validate_table(doc)
+
+
+# ---------------------------------------------------------------------------
+# deterministic winners
+# ---------------------------------------------------------------------------
+
+def test_winner_deterministic_under_scripted_timer():
+    kw = dict(dtype="float32", timer=None, reps=1, measure_top=2)
+    first = at.tune_kernel("gram", 200, 8, **{**kw, "timer": _fake_timer()})
+    second = at.tune_kernel("gram", 200, 8, **{**kw, "timer": _fake_timer()})
+    assert first["block_rows"] == second["block_rows"]
+    assert at.select_winner(first) == first["block_rows"]
+    assert at.entry_legal(first)
+    # equal measurements → the tie-break picks the smallest measured height
+    measured = [c["block_rows"] for c in first["candidates"]
+                if c["measured_s"] is not None]
+    assert first["block_rows"] == min(measured)
+
+
+def test_select_winner_requires_measurements():
+    e = _entry()
+    e["candidates"][0]["measured_s"] = None
+    with pytest.raises(at.AutotuneError, match="no"):
+        at.select_winner(e)
+
+
+# ---------------------------------------------------------------------------
+# resolution precedence + floor
+# ---------------------------------------------------------------------------
+
+def test_resolve_block_rows_precedence():
+    be = backend.resolve_backend(None)
+    # no table → the aligned default
+    assert at.resolve_block_rows("gram", 256, 16, "float32") == \
+        backend.pick_block_rows(256, backend.DEFAULT_BLOCK_ROWS,
+                                sublane=be.sublane)
+    at.install(_doc(_entry(m=256, n=16, block_rows=32)))
+    # installed winner beats the default...
+    assert at.resolve_block_rows("gram", 256, 16, "float32") == 32
+    # ...for its shape-class only
+    assert at.resolve_block_rows("gram", 256, 24, "float32") == 256
+    # explicit caller choice beats everything
+    assert at.resolve_block_rows("gram", 256, 16, "float32",
+                                 explicit=64) == 64
+
+
+def test_min_gemm_width_raised_by_installed_floor():
+    assert ref.min_gemm_width() == at.MIN_GEMM_FLOOR
+    at.install(_doc(_entry(floor=8)))
+    assert ref.min_gemm_width() == 8
+    at.clear()
+    assert ref.min_gemm_width() == at.MIN_GEMM_FLOOR
+
+
+def test_machine_constants_feed_planner():
+    from repro.serve.planner import CostModel
+
+    assert at.machine_constants() is None
+    assert CostModel.tuned() == CostModel()      # untuned → exact defaults
+    at.install(_doc(_entry()))
+    assert at.machine_constants()["mem_bw_bytes_per_s"] == 4e10
+    assert CostModel.tuned().mem_bw_bytes_per_s == 4e10
+    assert CostModel.tuned(mem_bw_bytes_per_s=1.0).mem_bw_bytes_per_s == 1.0
+
+
+# ---------------------------------------------------------------------------
+# the retrace contract
+# ---------------------------------------------------------------------------
+
+def test_install_never_retraces_other_shape_classes(rng):
+    # two shape-classes warm; tuning ONE of them must not disturb the other
+    a_small = jnp.asarray(rng.standard_normal((48, 13)), dtype=jnp.float32)
+    a_big = jnp.asarray(rng.standard_normal((600, 13)), dtype=jnp.float32)
+    ops.gram(a_small, use_pallas=True)
+    ops.gram(a_big, use_pallas=True)
+    before = disp.trace_count("kernel:gram")
+    ops.gram(a_small, use_pallas=True)
+    assert disp.trace_count("kernel:gram") == before
+
+    at.tune([(600, 13)], ("gram",), timer=_fake_timer(), reps=1,
+            measure_top=1, out_dir=None)
+    # untouched class: resolves to the same default key — zero new traces
+    before = disp.trace_count("kernel:gram")
+    ops.gram(a_small, use_pallas=True)
+    assert disp.trace_count("kernel:gram") == before
+    # tuned class: at most one fresh trace for the new static key, then warm
+    ops.gram(a_big, use_pallas=True)
+    before = disp.trace_count("kernel:gram")
+    got = ops.gram(a_big, use_pallas=True)
+    assert disp.trace_count("kernel:gram") == before
+    want = np.asarray(a_big).T @ np.asarray(a_big)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-4, atol=5e-4)
+
+
+def test_committed_traffic_matches_ops_notes(rng):
+    from repro.kernels import traffic
+
+    m, n = 320, 24
+    a = jnp.asarray(rng.standard_normal((m, n)), dtype=jnp.float32)
+    w = jnp.asarray(rng.standard_normal((n, n)) / n, dtype=jnp.float32)
+    calls = {
+        "gram": lambda: ops.gram(a, use_pallas=True),
+        "apply_right": lambda: ops.apply_right(a, w, use_pallas=True),
+        "fused_apply_gram": lambda: ops.fused_apply_gram(
+            a, w, use_pallas=True
+        ),
+    }
+    for kernel, fn in calls.items():
+        read, write, dispatches = at.committed_traffic(kernel, m, n,
+                                                       "float32")
+        with traffic.track_traffic() as t:
+            fn()
+        rec = next(r for r in t.records if r["op"] == kernel)
+        assert (rec["read_bytes"], rec["write_bytes"]) == (read, write)
+        assert rec["dispatches"] == dispatches

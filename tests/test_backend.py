@@ -1,0 +1,115 @@
+"""Backend descriptor resolution: the platform × interpret-flag matrix,
+the one-time forced-interpreter warning, and the sublane-derived
+``pick_block_rows`` clamp (tiny panels, GPU alignment)."""
+import warnings
+
+import jax
+import pytest
+
+from repro.kernels import backend
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warning_state():
+    saved = set(backend._FORCED_WARNED)
+    backend._FORCED_WARNED.clear()
+    yield
+    backend._FORCED_WARNED.clear()
+    backend._FORCED_WARNED.update(saved)
+
+
+# (platform, interpret flag) → (kind, interpret, sublane)
+MATRIX = [
+    ("tpu", None, "tpu-mosaic", False, 8),
+    ("tpu", False, "tpu-mosaic", False, 8),
+    ("tpu", True, "interpret", True, 8),
+    ("gpu", None, "gpu-triton", False, 16),
+    ("gpu", False, "gpu-triton", False, 16),
+    ("gpu", True, "interpret", True, 8),
+    ("cpu", None, "interpret", True, 8),
+    ("cpu", True, "interpret", True, 8),
+    # explicit False on CPU is honored verbatim — it reaches pallas_call
+    # (the "explicit always wins" contract test_kernels pins with a spy)
+    ("cpu", False, "interpret", False, 8),
+]
+
+
+@pytest.mark.parametrize("platform,flag,kind,interp,sublane", MATRIX)
+def test_resolution_matrix(monkeypatch, platform, flag, kind, interp,
+                           sublane):
+    monkeypatch.setattr(jax, "default_backend", lambda: platform)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        be = backend.resolve_backend(flag)
+    assert be.kind == kind
+    assert be.interpret is interp
+    assert be.sublane == sublane
+    assert be.compiled is (not interp)
+    assert be.kind in backend.KINDS
+
+
+@pytest.mark.parametrize("platform", ["tpu", "gpu"])
+def test_forced_interpret_warns_once_per_platform(monkeypatch, platform):
+    monkeypatch.setattr(jax, "default_backend", lambda: platform)
+    expected = "tpu-mosaic" if platform == "tpu" else "gpu-triton"
+    with pytest.warns(UserWarning, match=expected):
+        backend.resolve_backend(True)
+    # second forced resolution is silent — once per process per platform
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        be = backend.resolve_backend(True)
+    assert be.kind == "interpret" and be.interpret is True
+
+
+def test_interpret_on_cpu_never_warns(monkeypatch):
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        be = backend.resolve_backend(True)
+    assert be.interpret is True
+
+
+def test_default_and_resolve_interpret_agree(monkeypatch):
+    for platform, want in (("cpu", True), ("tpu", False), ("gpu", False)):
+        monkeypatch.setattr(jax, "default_backend", lambda p=platform: p)
+        assert backend.default_interpret() is want
+        assert backend.resolve_interpret(None) is want
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")      # forced-on-gpu warning
+        assert backend.resolve_interpret(True) is True
+
+
+def test_bad_kind_rejected():
+    with pytest.raises(ValueError, match="kind"):
+        backend.Backend("cuda", "cpu", True, 8)
+
+
+# ---------------------------------------------------------------------------
+# pick_block_rows: sublane-derived clamp
+# ---------------------------------------------------------------------------
+
+def test_pick_block_rows_tiny_m_gets_one_sublane_tile():
+    # m < sublane → exactly one sublane tile; the kernels' row-iota
+    # masking makes the ≤ sublane−1 padded rows compute waste, not a bug
+    assert backend.pick_block_rows(5, 1024, sublane=8) == 8
+    assert backend.pick_block_rows(5, 1024, sublane=16) == 16
+    assert backend.pick_block_rows(1, 2, sublane=8) == 8
+
+
+def test_pick_block_rows_clamps_to_rounded_m():
+    assert backend.pick_block_rows(100, 1024, sublane=8) == 104
+    assert backend.pick_block_rows(100, 1024, sublane=16) == 112
+    assert backend.pick_block_rows(96, 1024, sublane=16) == 96
+
+
+def test_pick_block_rows_honors_requested_height():
+    assert backend.pick_block_rows(10_000, 64, sublane=8) == 64
+    # but never below one sublane tile
+    assert backend.pick_block_rows(10_000, 4, sublane=16) == 16
+
+
+def test_pick_block_rows_derives_sublane_from_backend(monkeypatch):
+    monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+    assert backend.pick_block_rows(5, 1024) == 16
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert backend.pick_block_rows(5, 1024) == 8

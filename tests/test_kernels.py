@@ -209,3 +209,105 @@ def test_interpret_flag_reaches_pallas_call(rng, monkeypatch):
     ops.fused_apply_gram(a, w, use_pallas=True)          # auto-detect
     assert captured[-1] is backend.default_interpret()
     assert backend.default_interpret() is True           # CPU container
+
+
+# ---------------------------------------------------------------------------
+# GPU (Triton) lowerings: per-program partial accumulators vs the TPU
+# kernels' revisited-block accumulators — same math, parallel-grid-safe
+# ---------------------------------------------------------------------------
+
+def test_gpu_lowerings_match_tpu_kernels(rng):
+    from repro.kernels import gpu
+    from repro.kernels import gram as gram_mod
+    from repro.kernels import apply_right as apply_mod
+    from repro.kernels import fused_apply_gram as fused_mod
+    from repro.kernels import trailing_update as trail_mod
+
+    tol = dict(rtol=1e-5, atol=1e-5)
+    m, n, b = 333, 11, 8
+    a = jnp.asarray(rng.standard_normal((m, n)), dtype=jnp.float32)
+    w = jnp.asarray(rng.standard_normal((n, n)) / n, dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((m, b)), dtype=jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((b, n)) / n, dtype=jnp.float32)
+
+    def close(got, want):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+    close(gpu.gram(a), gram_mod.gram(a, interpret=True))
+    close(gpu.apply_right(a, w), apply_mod.apply_right(a, w, interpret=True))
+
+    q_g, s_g = gpu.fused_apply_gram(a, w)
+    q_t, s_t = fused_mod.fused_apply_gram(a, w, interpret=True)
+    close(q_g, q_t)
+    close(s_g, s_t)
+    close(
+        gpu.fused_apply_gram(a, w, want_q=False),
+        fused_mod.fused_apply_gram(a, w, interpret=True, want_q=False),
+    )
+
+    an_g, s2_g = gpu.trailing_update(a, q, wt, next_width=b)
+    an_t, s2_t = trail_mod.trailing_update(
+        a, q, wt, next_width=b, interpret=True
+    )
+    close(an_g, an_t)
+    close(s2_g, s2_t)
+    close(
+        gpu.trailing_update(a, q, wt),
+        trail_mod.trailing_update(a, q, wt, interpret=True),
+    )
+
+    close(
+        gpu.panel_cross(a, split=4),
+        trail_mod.panel_cross(a, split=4, interpret=True),
+    )
+    ap_g, sp_g = gpu.pad_cross(a, split=4, out_width=16)
+    ap_t, sp_t = trail_mod.pad_cross(a, split=4, out_width=16,
+                                     interpret=True)
+    close(ap_g, ap_t)
+    close(sp_g, sp_t)
+    # the padded columns are exact zeros on both lowerings
+    assert not np.asarray(ap_g)[:, n:].any()
+    assert not np.asarray(sp_g)[:, n:].any()
+
+
+def test_gpu_routing_reaches_compiled_pallas_call(rng, monkeypatch):
+    """On a (mocked) GPU runtime the jitted kernel wrappers must route to
+    the Triton lowerings in repro.kernels.gpu with interpret=False — the
+    compiled path — while CPU CI swaps the interpreter in underneath."""
+    import jax
+
+    from repro.kernels import gpu
+    from repro.kernels import trailing_update as trail_mod
+
+    captured = []
+    real = gpu.pl.pallas_call
+
+    def spy(*args, **kw):
+        captured.append(kw.get("interpret"))
+        kw["interpret"] = True          # CPU cannot compile Triton
+        return real(*args, **kw)
+
+    monkeypatch.setattr(gpu.pl, "pallas_call", spy, raising=True)
+    monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+
+    # unique shapes so jit can't replay a cached trace from earlier tests
+    m, n, b = 451, 9, 4
+    a = jnp.asarray(rng.standard_normal((m, n)), dtype=jnp.float32)
+    w = jnp.asarray(rng.standard_normal((n, n)) / n, dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((m, b)), dtype=jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((b, n)) / n, dtype=jnp.float32)
+
+    got = ops.gram(a, use_pallas=True)
+    assert captured and captured[-1] is False
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(a).T @ np.asarray(a),
+        rtol=1e-4, atol=1e-4,
+    )
+    n_calls = len(captured)
+    out = trail_mod.trailing_update(a, q, wt, next_width=b)
+    assert len(captured) > n_calls and captured[-1] is False
+    np.testing.assert_allclose(
+        np.asarray(out[0]),
+        np.asarray(a) - np.asarray(q) @ np.asarray(wt),
+        rtol=1e-4, atol=1e-4,
+    )
