@@ -7,7 +7,16 @@ call, 1 device dispatch per factorization independent of the panel count,
 Run with ``PYTHONPATH=src`` for the standalone numbers, or with ``--guard``
 for the CI tier-1 retrace guard (exits non-zero if any guarded entry point
 re-traces on a second call with identical shapes)."""
-from repro.bench.cases.dispatch import case, guard, main, run  # noqa: F401
+import os
+import sys
+
+if "jax" not in sys.modules:           # must precede the first jax import
+    flag = "--xla_force_host_platform_device_count=8"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
+
+from repro.bench.cases.dispatch import case, guard, main, run  # noqa: E402,F401
 
 if __name__ == "__main__":
     raise SystemExit(main())

@@ -1,0 +1,23 @@
+"""Thin shim — logic lives in :mod:`repro.bench.cases.training` and is
+registered as the ``training`` bench case (``python -m repro.bench run``),
+hard-gating the closed training loop: one dispatch per warm train step
+(PowerSGD + OrthoSGD with their orthogonalization collectives traced
+inline), zero retraces across an elastic shrink→rebuild cycle, loss parity
+with the dense non-FT baseline, and survivor/recovery counts for the model
+zoo under the cascading and BLANK-under-repeat schedules.
+
+Run with ``PYTHONPATH=src`` (needs ≥ 4 devices; the bench CLI forces 8)."""
+import os
+import sys
+
+if "jax" not in sys.modules:           # must precede the first jax import
+    flag = "--xla_force_host_platform_device_count=8"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
+
+from repro.bench.cases.training import PARITY_TOL, case  # noqa: E402,F401
+
+if __name__ == "__main__":
+    for name, metric in case().items():
+        print(f"{name}: {metric.value}{metric.unit or ''}")

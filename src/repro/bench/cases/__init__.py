@@ -19,5 +19,6 @@ from . import (  # noqa: F401
     roofline,
     semantics,
     serving,
+    training,
     tsqr_scaling,
 )

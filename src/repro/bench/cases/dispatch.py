@@ -309,6 +309,18 @@ def guard() -> int:
              flat, flat[:, :8], jnp.zeros((8, 24), jnp.float32),
              next_width=8, use_pallas=True)),
     ]
+    # ShardMapComm: the cached SPMD butterfly (shard_map over a real mesh
+    # axis) is retrace-proof too — keyed on (mesh-class, plan, combiner).
+    if jax.device_count() >= 4:
+        from repro.collective import ShardMapComm
+        from repro.compat import make_mesh as _make_mesh
+
+        smesh = _make_mesh((4,), ("x",))
+        checks.append(
+            ("ft_allreduce",
+             lambda: ft_allreduce_jit(
+                 x, ShardMapComm(4, "x"), op="sum", mesh=smesh)),
+        )
     failures = 0
     for name, fn in checks:
         fn()                                     # warm (may trace)
@@ -350,6 +362,47 @@ def guard() -> int:
     status = "ok" if delta == 0 else f"RETRACED x{delta}"
     print(f"[retrace-guard] serving:warm_stream: {status}")
     failures += delta != 0
+
+    # Jitted train-step warm path: both FT optimizers, plus a step after an
+    # elastic rebuild of the template mesh — the rebuilt mesh must hit the
+    # same jit cache entry as the original (zero traces for all three warm
+    # calls together).  Degrades to a 1-wide data axis on starved hosts.
+    import shutil
+    import tempfile
+
+    from repro.compat import make_mesh
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataConfig, SyntheticCorpus
+    from repro.runtime.elastic import rebuild_mesh
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    width = 4 if jax.device_count() >= 4 else 1
+    cfg_t = get_config("olmo-1b").smoke(n_layers=1)
+    dc = DataConfig(vocab=cfg_t.vocab, seq_len=16, global_batch=2 * width)
+    for opt in ("powersgd", "orthosgd"):
+        tmp = tempfile.mkdtemp(prefix="guard_train_")
+        try:
+            tr = Trainer(
+                cfg_t,
+                TrainerConfig(steps=2, log_every=10**9, ckpt_every=0,
+                              optimizer=opt, ckpt_dir=tmp),
+                make_mesh((width, 1), ("data", "model")), dc,
+            )
+            p, o = tr.init_state()
+            p, o, _ = tr.step_fn(p, o, tr._device_batch(
+                SyntheticCorpus(dc).batch(0)))        # warm (traces once)
+            before = disp.trace_count("train_step")
+            p, o, _ = tr.step_fn(p, o, tr._device_batch(
+                SyntheticCorpus(dc).batch(1)))        # must not trace
+            p, o = tr._remesh(p, o, rebuild_mesh(tr._template_mesh))
+            p, o, _ = tr.step_fn(p, o, tr._device_batch(
+                SyntheticCorpus(dc).batch(2)))        # nor after rebuild
+            delta = disp.trace_count("train_step") - before
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+        status = "ok" if delta == 0 else f"RETRACED x{delta}"
+        print(f"[retrace-guard] train_step:{opt}: {status}")
+        failures += delta != 0
 
     # Tuned-config warm paths: installing an autotune table changes the
     # resolved block_rows (a static jit key) for its shape-classes, so the

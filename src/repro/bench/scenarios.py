@@ -107,6 +107,9 @@ class TrainerScenario:
     steps: int = 8
     ckpt_every: int = 3
     buddy_levels: int = 1
+    arch: str = "olmo-1b"                # any configs/ registry name
+    optimizer: str = "adamw"             # adamw | powersgd | orthosgd | lowrank
+    n_layers: int = 2
     expect: Mapping[str, int] = dataclasses.field(default_factory=dict)
     description: str = ""
 
@@ -379,16 +382,21 @@ def run_trainer_scenario(sc: TrainerScenario, ckpt_dir: str | None = None) -> di
     from repro.data.pipeline import DataConfig
     from repro.runtime.trainer import Trainer, TrainerConfig
 
-    cfg = get_config("olmo-1b").smoke(n_layers=2)
+    cfg = get_config(sc.arch).smoke(n_layers=sc.n_layers)
     mesh = make_mesh((sc.data_width, sc.model_width), ("data", "model"))
     own_dir = ckpt_dir is None
     ckpt_dir = ckpt_dir or tempfile.mkdtemp(prefix=f"bench_{sc.name}_")
     tcfg = TrainerConfig(
         steps=sc.steps, log_every=10**9, ckpt_every=sc.ckpt_every,
-        ckpt_dir=ckpt_dir,
+        ckpt_dir=ckpt_dir, optimizer=sc.optimizer,
         on_failure=sc.on_failure, buddy_levels=sc.buddy_levels, seed=0,
     )
-    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2 * sc.data_width)
+    dc = DataConfig(
+        vocab=cfg.vocab, seq_len=32, global_batch=2 * sc.data_width,
+        family=cfg.family,
+        enc_frames=cfg.enc_frames if cfg.family == "encdec" else 0,
+        d_model=cfg.d_model,
+    )
     tr = Trainer(cfg, tcfg, mesh, dc)
     p, o = tr.init_state()
     try:

@@ -60,7 +60,7 @@ import numpy as np
 from repro.kernels import dispatch as _dispatch
 
 from .combiners import Combiner, get_combiner
-from .comm import Comm, SimComm
+from .comm import Comm, ShardMapComm, SimComm
 from .faults import NEVER, FaultSpec
 from .packing import pack_sym, unpack_sym
 from .plan import Plan, _split_rounds, make_plan
@@ -315,6 +315,35 @@ def _ft_allreduce_compiled(comm: Comm, plan: Plan, op, fast):
     return fun
 
 
+@functools.lru_cache(maxsize=256)
+def _ft_allreduce_shard_compiled(mesh, comm: ShardMapComm, plan: Plan, op, fast):
+    """One compiled SPMD butterfly per ``(mesh-equivalence-class, plan,
+    combiner)``.  The ``mesh`` position of the key is the equivalence class:
+    ``Mesh`` hashes by value (device ids + axis names), so an elastically
+    rebuilt mesh over the same devices hits the same entry — the same
+    contract the TSQR/blocked shard builders rely on.  The payload keeps the
+    SimComm global view (leading ``(P,)`` axis); ``shard_map`` hands each
+    rank its ``(1, …)`` slice and the engine runs on local blocks over real
+    ``ppermute`` wires, so the returned layout — and, fault-free, the bits —
+    match the SimComm program exactly (same plans, same combine order)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map as _shard_map
+
+    axis = comm.axis
+
+    def body(x):
+        _dispatch.note_trace("ft_allreduce")
+        local = jax.tree.map(lambda leaf: leaf[0], x)
+        val, ok = ft_allreduce(local, comm, op=op, plan=plan, fast=fast)
+        return jax.tree.map(lambda leaf: leaf[None], val), ok[None]
+
+    fun = _shard_map(
+        body, mesh=mesh, in_specs=P(axis), out_specs=(P(axis), P(axis))
+    )
+    return jax.jit(fun)
+
+
 def ft_allreduce_jit(
     x,
     comm: Comm,
@@ -324,6 +353,7 @@ def ft_allreduce_jit(
     fault_spec: FaultSpec | None = None,
     plan: Plan | None = None,
     fast: bool | None = None,
+    mesh=None,
 ):
     """:func:`ft_allreduce` as a cached, zero-retrace device program.
 
@@ -331,19 +361,52 @@ def ft_allreduce_jit(
     combiner resolves to a frozen instance, so the whole butterfly closes
     over them and compiles once per ``(plan, combiner, treedef, shapes)`` —
     a repeat call with identical statics performs **zero** new traces (the
-    ``dispatch`` bench case and the CI retrace guard pin this).  Standalone
-    compilation implies a :class:`~repro.collective.comm.SimComm` payload;
-    inside a ``shard_map`` body call :func:`ft_allreduce` directly — the
-    enclosing program is what gets compiled there.
+    ``dispatch`` bench case and the CI retrace guard pin this).
+
+    Backends:
+
+    * :class:`~repro.collective.comm.SimComm` — the payload carries the
+      leading ``(P,)`` axis; the butterfly compiles standalone.
+    * :class:`~repro.collective.comm.ShardMapComm` — pass ``mesh=``; the
+      payload keeps the same global ``(P,)``-leading layout and the cached
+      compile wraps the butterfly in ``shard_map`` over ``comm.axis``
+      (exchanges lower to ``collective-permute``).  The cache keys on the
+      mesh *equivalence class* (``Mesh`` hashes by value), so an elastic
+      rebuild over the same devices reuses the compile.  Fault-free results
+      are bit-identical to the SimComm program; faulted plans degrade
+      identically in kind (same validity bits, same poisoned slots).  For a
+      collective *inside* an enclosing ``shard_map`` body, keep calling
+      :func:`ft_allreduce` directly — the enclosing program is what gets
+      compiled there.
     """
-    if not isinstance(comm, SimComm):
-        raise ValueError(
-            "ft_allreduce_jit compiles a standalone program, which only the "
-            "SimComm backend supports; ShardMapComm exchanges must execute "
-            "inside an enclosing shard_map (call ft_allreduce there)"
-        )
     if plan is None:
         plan = make_plan(variant, comm.n_ranks, fault_spec)
-    fun = _ft_allreduce_compiled(comm, plan, get_combiner(op), fast)
+    if isinstance(comm, SimComm):
+        fun = _ft_allreduce_compiled(comm, plan, get_combiner(op), fast)
+    elif isinstance(comm, ShardMapComm):
+        if mesh is None:
+            raise ValueError(
+                "ft_allreduce_jit on ShardMapComm needs mesh= (the Mesh "
+                "whose axis the comm permutes over) to build the enclosing "
+                "shard_map program"
+            )
+        if comm.axis not in mesh.axis_names:
+            raise ValueError(
+                f"mesh axes {mesh.axis_names} do not include comm axis "
+                f"{comm.axis!r}"
+            )
+        if mesh.shape[comm.axis] != comm.n_ranks:
+            raise ValueError(
+                f"mesh axis {comm.axis!r} has {mesh.shape[comm.axis]} "
+                f"devices but comm.n_ranks={comm.n_ranks}"
+            )
+        fun = _ft_allreduce_shard_compiled(
+            mesh, comm, plan, get_combiner(op), fast
+        )
+    else:
+        raise ValueError(
+            f"ft_allreduce_jit supports SimComm and ShardMapComm, got "
+            f"{type(comm).__name__}"
+        )
     _dispatch.note_dispatch("ft_allreduce")
     return fun(x)

@@ -17,6 +17,7 @@ __all__ = [
     "HAS_AXIS_TYPES",
     "axis_types_kwargs",
     "make_mesh",
+    "mesh_fingerprint",
     "mesh_from_devices",
     "optimization_barrier",
     "shard_map",
@@ -102,6 +103,21 @@ def mesh_from_devices(devices, axis_names) -> Mesh:
         return Mesh(devices, axis_names, **axis_types_kwargs(len(axis_names)))
     except TypeError:
         return Mesh(devices, axis_names)
+
+
+def mesh_fingerprint(mesh: Mesh) -> tuple:
+    """Hashable mesh-equivalence-class key: two meshes over the same devices
+    in the same topology fingerprint identically, even when the ``Mesh``
+    objects are distinct (the elastic ``rebuild_mesh`` path re-instantiates
+    the template).  ``Mesh.__hash__`` is already value-based on current jax,
+    but the trainer's step cache and the jit-cache keys must not depend on
+    that implementation detail — this makes the equivalence class explicit.
+    """
+    return (
+        mesh.axis_names,
+        mesh.devices.shape,
+        tuple(d.id for d in mesh.devices.flat),
+    )
 
 
 def shard_map(f, *, mesh, in_specs, out_specs):

@@ -7,10 +7,21 @@ dry-run-style launches on a real fleet.
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 100
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
       --on-failure rebuild --fail "10:0" --straggle "20:1:3"
+
+``--faults <name>`` replays a stock trainer scenario from
+:mod:`repro.bench.scenarios` (event schedule, mesh width, recovery policy,
+and expected fault-stat counts) against any ``--arch`` / ``--optimizer`` —
+the CLI twin of the ``fault_scenarios`` bench case, exiting non-zero when
+the run's fault stats miss the scenario's expectations:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-moe-a2.7b \
+      --optimizer powersgd --faults shrink_then_rebuild
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 
 
 def parse_events(fail: str, straggle: str, recover: str):
@@ -43,6 +54,13 @@ def main() -> None:
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--on-failure", default="blank",
                     choices=["blank", "shrink", "rebuild"])
+    ap.add_argument("--optimizer", default=None,
+                    choices=["adamw", "powersgd", "orthosgd", "lowrank"],
+                    help="default adamw (or the --faults scenario's choice)")
+    ap.add_argument("--faults", default="",
+                    help="stock trainer scenario name from "
+                         "repro.bench.scenarios (overrides the event "
+                         "schedule, mesh width, and recovery policy)")
     ap.add_argument("--fail", default="", help="step:replica[,...]")
     ap.add_argument("--recover", default="", help="step:replica[,...]")
     ap.add_argument("--straggle", default="", help="step:replica[:dur][,...]")
@@ -50,6 +68,25 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args()
+
+    sc = None
+    if args.faults:
+        # Stock schedules need their full replica width; mirror the bench
+        # CLI and pin 8 host devices before the first jax import.
+        if "jax" not in sys.modules:
+            flag = "--xla_force_host_platform_device_count=8"
+            flags = os.environ.get("XLA_FLAGS", "")
+            if "--xla_force_host_platform_device_count" not in flags:
+                os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
+        from repro.bench.scenarios import get_scenarios
+
+        stock = {s.name: s for s in get_scenarios() if s.kind == "trainer"}
+        if args.faults not in stock:
+            raise SystemExit(
+                f"unknown --faults scenario {args.faults!r}; trainer "
+                "scenarios: " + ", ".join(sorted(stock))
+            )
+        sc = stock[args.faults]
 
     import jax
 
@@ -61,7 +98,9 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    if args.mesh == "single":
+    if sc is not None:
+        mesh = make_smoke_mesh(data=sc.data_width, model=sc.model_width)
+    elif args.mesh == "single":
         mesh = make_production_mesh(multi_pod=False)
     elif args.mesh == "multi":
         mesh = make_production_mesh(multi_pod=True)
@@ -73,11 +112,14 @@ def main() -> None:
         mesh = make_smoke_mesh(data=d, model=m)
 
     tcfg = TrainerConfig(
-        steps=args.steps,
+        steps=sc.steps if sc is not None else args.steps,
         microbatches=args.microbatches,
-        on_failure=args.on_failure,
+        on_failure=sc.on_failure if sc is not None else args.on_failure,
+        optimizer=args.optimizer or (sc.optimizer if sc is not None
+                                     else "adamw"),
         ckpt_dir=args.ckpt_dir,
-        ckpt_every=args.ckpt_every,
+        ckpt_every=sc.ckpt_every if sc is not None else args.ckpt_every,
+        buddy_levels=sc.buddy_levels if sc is not None else 1,
         lr=args.lr,
     )
     dcfg = DataConfig(
@@ -90,12 +132,23 @@ def main() -> None:
     )
     trainer = Trainer(cfg, tcfg, mesh, dcfg)
     params, opt = trainer.init_state()
-    trainer.run(
-        params, opt,
-        fault_schedule=parse_events(args.fail, args.straggle, args.recover),
-    )
+    schedule = (tuple(sc.events) if sc is not None
+                else parse_events(args.fail, args.straggle, args.recover))
+    trainer.run(params, opt, fault_schedule=schedule)
     print("\n".join(trainer.events_log))
     print(f"final loss: {trainer.metrics_log[-1]['loss']:.4f}")
+    if sc is not None:
+        stats = {k: int(v) for k, v in trainer.fault_stats.items() if v}
+        print(f"fault stats: {stats}")
+        missed = {k: (int(trainer.fault_stats[k]), want)
+                  for k, want in sc.expect.items()
+                  if int(trainer.fault_stats[k]) != want}
+        if missed:
+            raise SystemExit(
+                f"scenario {sc.name}: fault stats missed expectations "
+                f"(got, want) = {missed}"
+            )
+        print(f"scenario {sc.name}: fault stats match expectations")
 
 
 if __name__ == "__main__":

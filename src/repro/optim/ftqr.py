@@ -1,0 +1,77 @@
+"""In-step fault-tolerant CholeskyQR2 for the trainer's optimizers.
+
+:func:`repro.optim.lowrank.gram_cqr2_q` is the pure-GSPMD formulation —
+the Gram contraction lowers to matmul + mesh all-reduce, which is
+fault-oblivious.  This module is the paper-faithful twin: the *same*
+CQR2 numerics, but every Gram sum rides the collective engine's
+redundant butterfly (:func:`~repro.collective.engine.ft_allreduce`,
+``gram_sum`` combiner) over an explicit shard axis, so each of the two
+orthogonalization rounds inherits the 2^s − 1 mid-reduce tolerance.
+The whole thing is plain traced jax — it inlines into the trainer's
+jitted train step (one compiled program, zero extra dispatches).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+import numpy as np
+
+from repro.collective import SimComm, ft_allreduce, make_plan
+from repro.optim.lowrank import _gram_ridge
+
+__all__ = ["ft_cqr2_q"]
+
+
+def _distribute_rows(x, shards: int):
+    """(…, m, n) → (shards, …, m_loc, n) with zero-row padding.  Exact for
+    CQR2: zero rows contribute nothing to the Gram and Q = A·R⁻¹ maps them
+    back to zero rows."""
+    *lead, m, n = x.shape
+    pad = (-m) % shards
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((*lead, pad, n), x.dtype)], axis=-2
+        )
+    x = x.reshape(*lead, shards, (m + pad) // shards, n)
+    return jnp.moveaxis(x, -3, 0)
+
+
+def ft_cqr2_q(a, shards: int, plan=None):
+    """CholeskyQR2 Q factor of ``a`` (…, m, n); Gram sums on the butterfly.
+
+    Rows are split into ``shards`` contiguous blocks (the SimComm replica
+    axis); each round's n×n Gram is combined with
+    ``ft_allreduce(op="gram_sum")`` and read from a plan-certified slot.
+    ``plan`` defaults to the fault-free redundant plan (the straight-line
+    fast path); an injected :class:`~repro.collective.plan.Plan` exercises
+    mid-reduce deaths.  Matches :func:`~repro.optim.lowrank.gram_cqr2_q`
+    up to fp summation order, bit-for-bit when ``shards <= 1`` (dense
+    fallback).
+    """
+    if shards <= 1:
+        from repro.optim.lowrank import gram_cqr2_q
+
+        return gram_cqr2_q(a)
+    comm = SimComm(shards)
+    if plan is None:
+        plan = make_plan("redundant", shards, None)
+    if not plan.final_valid.any():
+        raise ValueError(
+            "plan exceeds the butterfly's tolerance: no shard slot holds "
+            f"the Gram sum (final_valid={plan.final_valid})"
+        )
+    slot = int(np.argmax(plan.final_valid))
+
+    def round_(x):
+        xd = _distribute_rows(x, shards)
+        g_loc = jnp.einsum(
+            "...mi,...mj->...ij", xd, xd, preferred_element_type=jnp.float32
+        )
+        g_sum, _ = ft_allreduce(g_loc, comm, op="gram_sum", plan=plan)
+        r = jnp.swapaxes(jnp.linalg.cholesky(_gram_ridge(g_sum[slot])), -1, -2)
+        y = jsl.solve_triangular(
+            jnp.swapaxes(r, -1, -2), jnp.swapaxes(x, -1, -2), lower=True
+        )
+        return jnp.swapaxes(y, -1, -2)
+
+    return round_(round_(a.astype(jnp.float32)))

@@ -32,6 +32,10 @@ class LowRankConfig:
     b2: float = 0.95
     eps: float = 1e-8
     scale: float = 0.25            # GaLore alpha
+    # >1 routes the basis-refresh CQR2 Gram sums through the fault-tolerant
+    # butterfly over this many row shards (repro.optim.ftqr); 0/1 keeps the
+    # pure GSPMD contraction.
+    ft_shards: int = 0
 
 
 def _eligible(p):
@@ -45,6 +49,18 @@ def _orient(g):
     return jnp.swapaxes(g, -1, -2), True
 
 
+def _gram_ridge(g):
+    """Shifted-Cholesky regularizer: real training momenta are routinely
+    rank-deficient (unseen vocab rows, dead experts, zero grads), which
+    makes the exact Gram singular and ``cholesky`` return NaN.  A relative
+    ridge keeps the factorization finite; the second CQR2 round restores
+    orthogonality on the non-degenerate subspace, and an all-zero input
+    maps to an all-zero Q instead of NaN."""
+    n = g.shape[-1]
+    tr = jnp.trace(g, axis1=-2, axis2=-1)[..., None, None]
+    return g + (1e-6 * tr / n + 1e-30) * jnp.eye(n, dtype=g.dtype)
+
+
 def gram_cqr2_q(a):
     """Distributed CholeskyQR2 Q factor, pure GSPMD: the Gram contraction
     over (sharded) rows lowers to matmul + all-reduce; the n×n work is
@@ -54,7 +70,7 @@ def gram_cqr2_q(a):
     def round_(x):
         g = jnp.einsum("...mi,...mj->...ij", x, x,
                        preferred_element_type=jnp.float32)
-        r = jnp.swapaxes(jnp.linalg.cholesky(g), -1, -2)
+        r = jnp.swapaxes(jnp.linalg.cholesky(_gram_ridge(g)), -1, -2)
         y = jsl.solve_triangular(
             jnp.swapaxes(r, -1, -2), jnp.swapaxes(x, -1, -2), lower=True
         )
@@ -63,7 +79,7 @@ def gram_cqr2_q(a):
     return round_(round_(a.astype(jnp.float32)))
 
 
-def _project_basis(g, rank):
+def _project_basis(g, rank, ft_shards: int = 0):
     """Orthonormal (n, r) right basis of g (m, n) via CQR2 of gᵀ·sketch."""
     gt, _ = _orient(jnp.swapaxes(g, -1, -2))  # (n, m)-ish; we want right basis
     # right-sketch: n×r panel = gᵀ @ (g @ Ω) is overkill here; rank-revealing
@@ -72,6 +88,10 @@ def _project_basis(g, rank):
     key = jax.random.key(0)
     omega = jax.random.normal(key, (*g.shape[:-2], g.shape[-2], rank), jnp.float32)
     panel = jnp.swapaxes(g, -1, -2).astype(jnp.float32) @ omega   # (n, r)
+    if ft_shards > 1:
+        from .ftqr import ft_cqr2_q
+
+        return ft_cqr2_q(panel, ft_shards)                        # (n, r)
     return gram_cqr2_q(panel)                                     # (n, r)
 
 
@@ -114,7 +134,7 @@ def update(cfg: LowRankConfig, params, grads, state):
         refresh = (step % cfg.refresh_every) == 1
         basis = jax.lax.cond(
             refresh,
-            lambda: _project_basis(gf, st["basis"].shape[-1]),
+            lambda: _project_basis(gf, st["basis"].shape[-1], cfg.ft_shards),
             lambda: st["basis"],
         )
         gr = gf @ basis                                  # (m, r) projected

@@ -28,6 +28,10 @@ class OrthoSGDConfig:
     momentum: float = 0.95
     nesterov: bool = True
     weight_decay: float = 0.0
+    # >1 routes the CQR2 Gram sums through the fault-tolerant butterfly
+    # over this many row shards (repro.optim.ftqr); 0/1 keeps the pure
+    # GSPMD contraction.
+    ft_shards: int = 0
 
 
 def init(params):
@@ -37,10 +41,15 @@ def init(params):
     }
 
 
-def _orth_update(m):
+def _orth_update(m, ft_shards: int = 0):
     tall = m.shape[-2] >= m.shape[-1]
     x = m if tall else jnp.swapaxes(m, -1, -2)
-    q = gram_cqr2_q(x)
+    if ft_shards > 1:
+        from .ftqr import ft_cqr2_q
+
+        q = ft_cqr2_q(x, ft_shards)
+    else:
+        q = gram_cqr2_q(x)
     q = q if tall else jnp.swapaxes(q, -1, -2)
     # Muon-style shape rescale so update RMS matches across aspect ratios
     out_scale = jnp.sqrt(jnp.maximum(m.shape[-2], m.shape[-1]) / m.shape[-1])
@@ -55,7 +64,7 @@ def update(cfg: OrthoSGDConfig, params, grads, state):
         m_ = cfg.momentum * m + gf
         eff = gf + cfg.momentum * m_ if cfg.nesterov else m_
         if p.ndim >= 2 and min(p.shape[-2:]) >= 2:
-            d = _orth_update(eff)
+            d = _orth_update(eff, cfg.ft_shards)
         else:
             d = eff
         newp = p.astype(jnp.float32) - cfg.lr * (d + cfg.weight_decay * p.astype(jnp.float32))

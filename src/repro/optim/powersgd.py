@@ -33,11 +33,20 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.collective import Comm, FaultSpec, QRCombiner, execute_plan, make_plan
+from repro.collective import (
+    Comm,
+    FaultSpec,
+    QRCombiner,
+    SimComm,
+    execute_plan,
+    ft_allreduce,
+    make_plan,
+)
 from repro.qr.panel import form_q, local_qr_fns
 
-__all__ = ["PowerSGDConfig", "init_state", "compress_grad"]
+__all__ = ["PowerSGDConfig", "init_state", "compress_grad", "compress_mean_grad"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,3 +110,71 @@ def compress_grad(
         "valid": valid,
     }
     return g_hat.astype(g.dtype), new_state, stats
+
+
+def compress_mean_grad(
+    g_rep, q, *, cfg: PowerSGDConfig, comm: Comm | None = None,
+    plan=None, n_live=None, ft: bool = True,
+):
+    """One PowerSGD round over an explicit *replica* axis, inside the jit.
+
+    The in-train-step face of :func:`compress_grad`: ``g_rep`` is the
+    (R, m, n) stack of per-replica (masked) gradients the trainer's
+    ``replica_grads`` produces, ``q`` the shared (n, r) basis.  Every
+    reduction over the replica axis — P̄, S̄, and the TSQR butterfly that
+    orthogonalizes P̄ — rides :func:`~repro.collective.engine.ft_allreduce`
+    / :func:`~repro.collective.engine.execute_plan` when ``ft`` (the
+    paper's 2^s − 1 tolerance at each); ``ft=False`` is the dense parity
+    baseline (plain axis sums, GSPMD CQR2).  For the FT orthogonalization
+    P̄ — identical on every replica after the butterfly mean — is
+    *row-distributed* over the R slots (zero-padded: exact, Q = P̄·R⁻¹
+    maps zero rows to zero rows), so the butterfly replicas double as the
+    TSQR ranks.  Returns ``(ĝ, new_q)`` with ĝ the (m, n) rank-r
+    approximation of the live-replica mean gradient — exact when that mean
+    has rank ≤ r and the basis spans its row space.
+
+    No error feedback: per-replica residuals would cost R× gradient memory
+    and break across elastic width changes (DESIGN.md §14).
+    """
+    from repro.optim.lowrank import gram_cqr2_q
+
+    R, m, n = g_rep.shape
+    gf = g_rep.astype(jnp.float32)
+    if n_live is None:
+        n_live = jnp.float32(R)
+    if ft:
+        if comm is None:
+            comm = SimComm(R)
+        if plan is None:
+            plan = make_plan(cfg.variant, R, None)
+        if not plan.final_valid.any():
+            raise ValueError(
+                "plan exceeds the butterfly's tolerance: no replica slot "
+                f"holds the mean (final_valid={plan.final_valid})"
+            )
+        slot = int(np.argmax(plan.final_valid))
+
+        def rep_mean(x):
+            s, _ = ft_allreduce(x, comm, op="sum", plan=plan)
+            return s[slot] / n_live
+    else:
+
+        def rep_mean(x):
+            return x.sum(0) / n_live
+
+    r = q.shape[-1]
+    p_bar = rep_mean(gf @ q)                      # (m, r) mean left factor
+    if ft:
+        pad = (-m) % R
+        p_pad = (
+            jnp.concatenate([p_bar, jnp.zeros((pad, r), p_bar.dtype)])
+            if pad else p_bar
+        )
+        p_dist = p_pad.reshape(R, (m + pad) // R, r)
+        q_dist, _ = _ft_tsqr_q(p_dist, comm, cfg, None)
+        q_hat = q_dist.reshape(m + pad, r)[:m]
+    else:
+        q_hat = gram_cqr2_q(p_bar)
+    s_bar = rep_mean(jnp.swapaxes(gf, -1, -2) @ q_hat)   # (n, r)
+    g_hat = q_hat @ jnp.swapaxes(s_bar, -1, -2)          # (m, n)
+    return g_hat.astype(g_rep.dtype), s_bar

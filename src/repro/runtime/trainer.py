@@ -42,13 +42,55 @@ from jax.sharding import PartitionSpec as P
 from repro.checkpoint.manager import CheckpointManager
 from repro.checkpoint.replicated import BuddyStore
 from repro.collective import SimComm, ft_allreduce, make_plan
+from repro.compat import mesh_fingerprint
 from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.kernels import dispatch as _dispatch
 from repro.models import api
 from repro.models.partitioning import param_shardings
 from repro.models.sharding import batch_axes, mesh_context
-from repro.optim import adamw
+from repro.optim import adamw, lowrank, orthosgd, powersgd
 
-__all__ = ["TrainerConfig", "FaultEvent", "Trainer", "ft_replica_grad"]
+__all__ = [
+    "TrainerConfig",
+    "FaultEvent",
+    "Trainer",
+    "ft_replica_grad",
+    "replica_grads",
+]
+
+
+def replica_grads(loss_fn, params, batch, n_replicas: int):
+    """Per-replica losses and gradients over the trainer's replica layout.
+
+    ``batch`` rows are split into ``n_replicas`` contiguous slices and
+    per-replica gradients taken with vmap; liveness derives from the
+    ``loss_weight`` mask (an all-zero slice — failed or dropped-straggler
+    replica masked by ``Trainer._mask_for`` — is dead).  Returns
+    ``(losses (R,), grads with leading (R,) axis, live (R,) bool,
+    n_live f32 ≥ 1)`` — the raw material both the BLANK gradient combine
+    (:func:`ft_replica_grad`) and the in-step PowerSGD round
+    (:func:`repro.optim.powersgd.compress_mean_grad`) reduce over.
+    """
+    rep = jax.tree.map(
+        lambda x: x.reshape((n_replicas, x.shape[0] // n_replicas) + x.shape[1:]),
+        batch,
+    )
+    losses, grads = jax.vmap(
+        lambda b: jax.value_and_grad(loss_fn)(params, b)
+    )(rep)
+    live = rep["loss_weight"].reshape(n_replicas, -1).sum(-1) > 0
+    n_live = jnp.maximum(live.sum(), 1).astype(jnp.float32)
+    return losses, grads, live, n_live
+
+
+def mask_replica_tree(tree, live, n_replicas: int):
+    """Zero every dead replica's slice of each leading-(R,) leaf."""
+
+    def mask(g):
+        m = live.reshape((n_replicas,) + (1,) * (g.ndim - 1))
+        return g * m.astype(g.dtype)
+
+    return jax.tree.map(mask, tree)
 
 
 def ft_replica_grad(loss_fn, params, batch, n_replicas: int, fault_spec=None):
@@ -82,22 +124,12 @@ def ft_replica_grad(loss_fn, params, batch, n_replicas: int, fault_spec=None):
         )
     slot = int(np.argmax(plan.final_valid))
 
-    rep = jax.tree.map(
-        lambda x: x.reshape((n_replicas, x.shape[0] // n_replicas) + x.shape[1:]),
-        batch,
+    losses, grads, live, n_live = replica_grads(
+        loss_fn, params, batch, n_replicas
     )
-    losses, grads = jax.vmap(
-        lambda b: jax.value_and_grad(loss_fn)(params, b)
-    )(rep)
-    live = rep["loss_weight"].reshape(n_replicas, -1).sum(-1) > 0
-    n_live = jnp.maximum(live.sum(), 1).astype(jnp.float32)
-
-    def mask(g):
-        m = live.reshape((n_replicas,) + (1,) * (g.ndim - 1))
-        return g * m.astype(g.dtype)
-
     summed, _ = ft_allreduce(
-        jax.tree.map(mask, grads), SimComm(n_replicas), op="sum", plan=plan,
+        mask_replica_tree(grads, live, n_replicas),
+        SimComm(n_replicas), op="sum", plan=plan,
     )
     grads = jax.tree.map(lambda g: g[slot] / n_live, summed)
     loss = jnp.where(live, losses, 0.0).sum() / n_live
@@ -121,8 +153,16 @@ class TrainerConfig:
     ckpt_keep: int = 2
     microbatches: int = 1
     on_failure: str = "blank"          # blank | shrink | rebuild
-    optimizer: str = "adamw"
+    optimizer: str = "adamw"           # adamw | powersgd | orthosgd | lowrank
     lr: float = 3e-4
+    # PowerSGD / low-rank compression rank, and the shard count for the
+    # in-step fault-tolerant CQR2 (orthosgd/lowrank Gram butterflies).
+    opt_rank: int = 8
+    qr_shards: int = 4
+    # Route the optimizer's in-step collectives (PowerSGD reductions +
+    # TSQR, CQR2 Gram sums) through the fault-tolerant butterfly; False is
+    # the dense parity baseline (plain sums, GSPMD CQR2).
+    ft_in_step: bool = True
     straggler_factor: float = 3.0
     drop_stragglers: bool = True
     buddy_levels: int = 1              # 2^levels in-memory replicas
@@ -164,6 +204,12 @@ class Trainer:
         }
         # REBUILD-to-full-width target: the topology we started with.
         self._template_mesh = mesh
+        # Compiled-step cache keyed on the mesh *equivalence class*
+        # (compat.mesh_fingerprint): an elastic shrink→rebuild cycle ends on
+        # a mesh fingerprinting identically to the template, so _build
+        # restores the original jitted step — same jit cache entry, zero
+        # retraces (DESIGN.md §14).
+        self._step_cache: dict = {}
         self._build(mesh)
 
     # ------------------------------------------------------------------
@@ -176,8 +222,21 @@ class Trainer:
         return n
 
     def _build(self, mesh):
-        """(Re)create shardings + jitted step for the current mesh."""
+        """(Re)create shardings + jitted step for the current mesh.
+
+        Cached per mesh equivalence class: a rebuilt mesh over the same
+        devices (``rebuild_mesh`` re-instantiates the template) restores
+        the previously compiled step instead of re-jitting — the warm jit
+        cache entry survives every shrink→rebuild round trip.
+        """
         self.mesh = mesh
+        fp = mesh_fingerprint(mesh)
+        cached = self._step_cache.get(fp)
+        if cached is not None:
+            (self.param_spec_tree, self.param_shardings, self.opt_shardings,
+             self.batch_sharding, self.step_fn, self.ft_grad_allreduce,
+             self._opt_init) = cached
+            return
         cfg = self.model_cfg
         with mesh_context(mesh):
             from repro.launch.shardings import sanitize_specs
@@ -209,12 +268,11 @@ class Trainer:
 
         tcfg, opt_cfg = self.tcfg, self.opt_cfg
         n_rep = self.n_replicas
-        # BLANK semantics with an explicit replica axis: the gradient combine
-        # routes through the fault-tolerant butterfly.  (vlm batches carry a
+        # An explicit replica axis is available when the batch splits into
+        # power-of-two contiguous replica slices.  (vlm batches carry a
         # non-leading batch axis and stay on the fused path.)
-        use_ft = (
+        use_rep = (
             tcfg.ft_grad_allreduce
-            and tcfg.on_failure == "blank"
             and n_rep > 1
             and (n_rep & (n_rep - 1)) == 0
             and cfg.family != "vlm"
@@ -222,6 +280,9 @@ class Trainer:
             # the trivial split is guaranteed divisible for any batch shape
             and tcfg.microbatches == 1
         )
+        # BLANK semantics: the gradient combine itself routes through the
+        # fault-tolerant butterfly.
+        use_ft = use_rep and tcfg.on_failure == "blank"
         self.ft_grad_allreduce = use_ft
         if use_ft:
             self.events_log.append(
@@ -243,24 +304,177 @@ class Trainer:
             total, _ = jax.lax.scan(micro, 0.0, splits)
             return total
 
-        def step_fn(params, opt_state, batch):
+        def combined_grads(params, batch):
             if use_ft:
-                loss, grads = ft_replica_grad(
-                    loss_over_micro, params, batch, n_rep
+                return ft_replica_grad(loss_over_micro, params, batch, n_rep)
+            return jax.value_and_grad(loss_over_micro)(params, batch)
+
+        step_fn, self._opt_init, extra_opt_specs = self._make_optimizer_step(
+            cfg, tcfg, opt_cfg, n_rep, use_rep, combined_grads,
+            loss_over_micro, pspecs,
+        )
+        if extra_opt_specs is not None:
+            with mesh_context(mesh):
+                self.opt_shardings = jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), extra_opt_specs,
+                    is_leaf=lambda x: isinstance(x, P),
                 )
-            else:
-                loss, grads = jax.value_and_grad(loss_over_micro)(params, batch)
-            new_params, new_opt, om = adamw.update(opt_cfg, params, grads, opt_state)
-            return new_params, new_opt, {"loss": loss, **om}
 
         with mesh_context(mesh):
-            self.step_fn = jax.jit(
+            jitted = jax.jit(
                 step_fn,
                 in_shardings=(self.param_shardings, self.opt_shardings,
                               self.batch_sharding),
                 out_shardings=(self.param_shardings, self.opt_shardings, None),
                 donate_argnums=(0, 1),
             )
+
+        def step(params, opt_state, batch, _jit=jitted):
+            _dispatch.note_dispatch("train_step")
+            return _jit(params, opt_state, batch)
+
+        self.step_fn = step
+        self._step_cache[fp] = (
+            self.param_spec_tree, self.param_shardings, self.opt_shardings,
+            self.batch_sharding, self.step_fn, self.ft_grad_allreduce,
+            self._opt_init,
+        )
+
+    # ------------------------------------------------------------------
+    def _make_optimizer_step(self, cfg, tcfg, opt_cfg, n_rep, use_rep,
+                             combined_grads, loss_over_micro, pspecs):
+        """Per-optimizer jit body + state init + (optional) state specs.
+
+        Every body starts with ``note_trace("train_step")`` — the CI
+        retrace guard and the ``training`` bench case pin one trace per
+        mesh equivalence class and one dispatch per warm step.  The
+        orthogonalization work (PowerSGD butterfly TSQR, OrthoSGD/low-rank
+        FT-CQR2) is traced *inline*, so the whole train step is ONE
+        compiled program.
+        """
+        opt = tcfg.optimizer
+
+        if opt == "adamw":
+
+            def step_fn(params, opt_state, batch):
+                _dispatch.note_trace("train_step")
+                loss, grads = combined_grads(params, batch)
+                new_p, new_o, om = adamw.update(opt_cfg, params, grads, opt_state)
+                return new_p, new_o, {"loss": loss, **om}
+
+            return step_fn, adamw.init, None
+
+        shards = tcfg.qr_shards if tcfg.ft_in_step else 0
+
+        if opt == "orthosgd":
+            ocfg = orthosgd.OrthoSGDConfig(lr=tcfg.lr, ft_shards=shards)
+
+            def step_fn(params, opt_state, batch):
+                _dispatch.note_trace("train_step")
+                loss, grads = combined_grads(params, batch)
+                new_p, new_o = orthosgd.update(ocfg, params, grads, opt_state)
+                om = {"grad_norm": adamw.global_norm(grads),
+                      "lr": jnp.float32(ocfg.lr)}
+                return new_p, new_o, {"loss": loss, **om}
+
+            ad = adamw.state_shardings(
+                self.param_spec_tree, pspecs, self.mesh,
+                zero1_axis=batch_axes(self.mesh),
+            )
+            return step_fn, orthosgd.init, {"m": ad["m"], "step": P()}
+
+        if opt == "lowrank":
+            lcfg = lowrank.LowRankConfig(
+                lr=tcfg.lr, rank=tcfg.opt_rank,
+                min_dim=max(2 * tcfg.opt_rank, 16), ft_shards=shards,
+            )
+
+            def step_fn(params, opt_state, batch):
+                _dispatch.note_trace("train_step")
+                loss, grads = combined_grads(params, batch)
+                new_p, new_o = lowrank.update(lcfg, params, grads, opt_state)
+                om = {"grad_norm": adamw.global_norm(grads),
+                      "lr": jnp.float32(lcfg.lr)}
+                return new_p, new_o, {"loss": loss, **om}
+
+            opt_init = partial(lowrank.init, cfg=lcfg)
+            opt_struct = jax.eval_shape(opt_init, pspecs)
+            return step_fn, opt_init, jax.tree.map(lambda _: P(), opt_struct)
+
+        if opt != "powersgd":
+            raise ValueError(f"unknown optimizer {opt!r}")
+
+        pcfg = powersgd.PowerSGDConfig(rank=tcfg.opt_rank, error_feedback=False)
+        ft = tcfg.ft_in_step and use_rep
+        comm = SimComm(n_rep) if ft else None
+        plan = make_plan(pcfg.variant, n_rep, None) if ft else None
+        slot = int(np.argmax(plan.final_valid)) if ft else 0
+
+        def eligible(shape):
+            return len(shape) == 2 and min(shape) > pcfg.rank
+
+        def step_fn(params, opt_state, batch):
+            _dispatch.note_trace("train_step")
+            if use_rep:
+                losses, g_rep, live, n_live = replica_grads(
+                    loss_over_micro, params, batch, n_rep
+                )
+                g_rep = mask_replica_tree(g_rep, live, n_rep)
+                loss = jnp.where(live, losses, 0.0).sum() / n_live
+            else:
+                loss, g = jax.value_and_grad(loss_over_micro)(params, batch)
+                g_rep = jax.tree.map(lambda x: x[None], g)
+                n_live = jnp.float32(1.0)
+            flat, tdef = jax.tree.flatten(g_rep)
+            qs = opt_state["q"]
+            ghat: list = [None] * len(flat)
+            new_q = list(qs)
+            rest_idx = []
+            for i, gi in enumerate(flat):
+                if eligible(gi.shape[1:]):
+                    ghat[i], new_q[i] = powersgd.compress_mean_grad(
+                        gi, qs[i], cfg=pcfg, comm=comm, plan=plan,
+                        n_live=n_live, ft=ft,
+                    )
+                else:
+                    rest_idx.append(i)
+            # every uncompressed leaf rides ONE butterfly (tree payload)
+            if rest_idx:
+                rest = [flat[i] for i in rest_idx]
+                if ft:
+                    summed, _ = ft_allreduce(rest, comm, op="sum", plan=plan)
+                    rest_mean = [s[slot] / n_live for s in summed]
+                else:
+                    rest_mean = [x.sum(0) / n_live for x in rest]
+                for i, gm in zip(rest_idx, rest_mean):
+                    ghat[i] = gm
+            grads = tdef.unflatten(ghat)
+            new_p, new_inner, om = adamw.update(
+                opt_cfg, params, grads, opt_state["inner"]
+            )
+            return new_p, {"inner": new_inner, "q": tuple(new_q)}, \
+                {"loss": loss, **om}
+
+        seed = tcfg.seed
+        rank = pcfg.rank
+
+        def opt_init(params):
+            leaves = jax.tree.leaves(params)
+            keys = jax.random.split(jax.random.key(seed), max(len(leaves), 1))
+            qs = tuple(
+                jax.random.normal(k, (p.shape[1], rank), jnp.float32)
+                if eligible(p.shape) else jnp.zeros((0,), jnp.float32)
+                for k, p in zip(keys, leaves)
+            )
+            return {"inner": adamw.init(params), "q": qs}
+
+        ad = adamw.state_shardings(
+            self.param_spec_tree, pspecs, self.mesh,
+            zero1_axis=batch_axes(self.mesh),
+        )
+        n_leaves = len(jax.tree.leaves(pspecs))
+        q_specs = tuple(P() for _ in range(n_leaves))
+        return step_fn, opt_init, {"inner": ad, "q": q_specs}
 
     # ------------------------------------------------------------------
     def init_state(self, key=None):
@@ -271,7 +485,7 @@ class Trainer:
                 out_shardings=self.param_shardings,
             )(key)
             opt_state = jax.jit(
-                adamw.init, out_shardings=self.opt_shardings
+                self._opt_init, out_shardings=self.opt_shardings
             )(params)
         return params, opt_state
 

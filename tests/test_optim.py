@@ -174,3 +174,73 @@ def test_orthosgd_minimizes():
         g = jax.grad(loss)(params)
         params, state = orthosgd.update(cfg, params, g, state)
     assert float(loss(params)) < 0.5 * l0
+
+
+def test_ft_cqr2_q_matches_dense():
+    """Sharded FT CholeskyQR2 returns an orthonormal Q that agrees with the
+    dense gram_cqr2_q, including on batched and non-divisible inputs, and
+    certifies through a faulted (within-tolerance) butterfly plan."""
+    from repro.collective import make_plan
+    from repro.optim.ftqr import ft_cqr2_q
+
+    key = jax.random.key(11)
+    for shape in ((64, 12), (3, 50, 8)):
+        a = jax.random.normal(key, shape, jnp.float32)
+        q_ft = ft_cqr2_q(a, shards=4)
+        q_dense = lowrank.gram_cqr2_q(a)
+        np.testing.assert_allclose(np.asarray(q_ft), np.asarray(q_dense),
+                                   rtol=2e-4, atol=2e-4)
+        qf = np.asarray(q_ft).reshape(-1, shape[-2], shape[-1])
+        for qi in qf:
+            np.testing.assert_allclose(qi.T @ qi, np.eye(shape[-1]),
+                                       atol=1e-4)
+    # faulted plan: a death inside the Gram butterfly, still certified
+    a = jax.random.normal(key, (64, 12), jnp.float32)
+    plan = make_plan("redundant", 4, FaultSpec.of({2: 1}))
+    q_faulted = ft_cqr2_q(a, shards=4, plan=plan)
+    np.testing.assert_allclose(np.asarray(q_faulted),
+                               np.asarray(lowrank.gram_cqr2_q(a)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gram_cqr2_rank_deficient_stays_finite():
+    """The trace-scaled ridge keeps CholeskyQR2 finite on singular Gram
+    matrices (zero columns / duplicated columns — the rank-deficient
+    momenta real training produces), and zero input maps to zero Q."""
+    from repro.optim.ftqr import ft_cqr2_q
+
+    key = jax.random.key(12)
+    col = jax.random.normal(key, (48, 1), jnp.float32)
+    a = jnp.concatenate([col, col, jnp.zeros((48, 2))], axis=1)
+    for q in (lowrank.gram_cqr2_q(a), ft_cqr2_q(a, shards=4)):
+        assert bool(jnp.isfinite(q).all()), "rank-deficient input made NaNs"
+    assert float(jnp.abs(lowrank.gram_cqr2_q(jnp.zeros((16, 4)))).max()) == 0.0
+
+
+def test_compress_mean_grad_exact_and_ft_parity():
+    """In-step replicated PowerSGD: exact on a rank-<=r mean gradient, and
+    the FT path (butterfly mean + row-distributed FT orthonormalization)
+    matches the dense path on the same inputs."""
+    key = jax.random.key(13)
+    R, m, n, r = 4, 24, 10, 3
+    u = jax.random.normal(key, (m, r))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (R, n, r))
+    g_rep = jnp.einsum("mr,Rnr->Rmn", u, v)      # mean has rank <= r
+    g_mean = np.asarray(g_rep).mean(0)
+    q0 = jax.random.normal(jax.random.fold_in(key, 2), (n, r), jnp.float32)
+    cfg = powersgd.PowerSGDConfig(rank=r, error_feedback=False)
+
+    g_ft, _ = powersgd.compress_mean_grad(g_rep, q0, cfg=cfg, ft=True)
+    g_dense, _ = powersgd.compress_mean_grad(g_rep, q0, cfg=cfg, ft=False)
+    np.testing.assert_allclose(np.asarray(g_ft), g_mean, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(g_ft), np.asarray(g_dense),
+                               rtol=2e-4, atol=2e-4)
+
+    # masked replica (BLANK): zero slot + n_live rescale is still the mean
+    # over the survivors
+    g_masked = g_rep.at[1].set(0.0)
+    g_surv, _ = powersgd.compress_mean_grad(
+        g_masked, q0, cfg=cfg, ft=True, n_live=jnp.float32(R - 1))
+    np.testing.assert_allclose(np.asarray(g_surv),
+                               np.asarray(g_masked).sum(0) / (R - 1),
+                               rtol=2e-4, atol=2e-4)

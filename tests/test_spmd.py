@@ -278,6 +278,61 @@ def test_ft_allreduce_under_shard_map():
 
 
 @pytest.mark.slow
+def test_ft_allreduce_jit_shard_map():
+    """The jitted entry point on the SPMD backend: bit-for-bit with the
+    SimComm compiled path fault-free (same global (P,)-leading layout),
+    identical validity bits + NaN-aware values on a faulted plan, and zero
+    retraces on a repeat call (the lru-cached shard_map compile)."""
+    _run("""
+    import jax, numpy as np, jax.numpy as jnp
+    from repro.compat import make_mesh
+    from repro.collective import (ShardMapComm, SimComm, FaultSpec,
+                                  ft_allreduce_jit, make_plan)
+    from repro.kernels import dispatch as disp
+
+    p = 8
+    mesh = make_mesh((p,), ("rows",))
+    scomm = ShardMapComm(p, "rows")
+    sim = SimComm(p)
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(p, 6, 5)).astype(np.float32))
+    sym = jnp.einsum("pmi,pmj->pij", x, x)      # gram_sum needs symmetry
+
+    # fault-free: bitwise parity with the SimComm path, both combiners
+    for op, payload in (("sum", x), ("gram_sum", sym)):
+        vs, oks = ft_allreduce_jit(payload, sim, op=op)
+        vm, okm = ft_allreduce_jit(payload, scomm, op=op, mesh=mesh)
+        assert np.array_equal(np.asarray(vs), np.asarray(vm)), op
+        assert np.array_equal(np.asarray(oks), np.asarray(okm)), op
+
+    # faulted plan: same validity bits as the host plan, NaN-aware value
+    # parity with SimComm (invalid slots are NaN-poisoned on both paths)
+    fs = FaultSpec.of({5: 1, 2: 2})
+    plan = make_plan("redundant", p, fs)
+    vs, oks = ft_allreduce_jit(x, sim, op="sum", plan=plan)
+    vm, okm = ft_allreduce_jit(x, scomm, op="sum", plan=plan, mesh=mesh)
+    assert (np.asarray(okm) == plan.final_valid).all()
+    assert np.array_equal(np.asarray(oks), np.asarray(okm))
+    assert np.array_equal(np.asarray(vs), np.asarray(vm), equal_nan=True)
+
+    # warm path: a repeat call with identical statics must not retrace
+    before = disp.trace_count("ft_allreduce")
+    ft_allreduce_jit(x, scomm, op="sum", plan=plan, mesh=mesh)
+    assert disp.trace_count("ft_allreduce") == before
+
+    # misuse guards: mesh omitted / wrong axis size
+    for bad in (dict(), dict(mesh=make_mesh((4,), ("rows",)))):
+        try:
+            ft_allreduce_jit(x, scomm, op="sum", **bad)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError(f"no ValueError for {bad}")
+    print("SPMD ft_allreduce_jit OK")
+    """)
+
+
+@pytest.mark.slow
 def test_trainer_blank_ft_gradient_allreduce():
     """BLANK mode with >1 replicas routes the gradient combine through
     ft_allreduce over the explicit replica axis; training stays finite

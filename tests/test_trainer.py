@@ -86,6 +86,43 @@ def test_shrink_mesh_topology():
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("optimizer", ["powersgd", "orthosgd", "lowrank"])
+def test_optimizer_wiring_finite(tmp_path, optimizer):
+    """Every in-step optimizer trains finite losses through the jitted
+    step (single replica → dense math; the replicated FT paths are covered
+    by tests/test_spmd.py and the training bench case)."""
+    tr = _mk(tmp_path, steps=3, ckpt_every=0, optimizer=optimizer)
+    p, o = tr.init_state()
+    tr.run(p, o)
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert len(losses) == 3 and np.isfinite(losses).all(), losses
+
+
+@pytest.mark.slow
+def test_rebuild_mesh_hits_step_cache(tmp_path):
+    """Elastic zero-retrace contract: a mesh rebuilt from the template is a
+    *new* Mesh object but the same equivalence class, so _remesh must reuse
+    the cached jitted step — zero new traces, one dispatch per step."""
+    from repro.data.pipeline import SyntheticCorpus
+    from repro.kernels import dispatch as disp
+    from repro.runtime.elastic import rebuild_mesh
+
+    tr = _mk(tmp_path, steps=2, ckpt_every=0)
+    corpus = SyntheticCorpus(tr.data_cfg)
+    p, o = tr.init_state()
+    p, o, _ = tr.step_fn(p, o, tr._device_batch(corpus.batch(0)))  # warm
+    assert len(tr._step_cache) == 1
+    before = disp.trace_count("train_step")
+
+    p, o = tr._remesh(p, o, rebuild_mesh(tr._template_mesh))
+    with disp.track_dispatch() as stats:
+        p, o, _ = tr.step_fn(p, o, tr._device_batch(corpus.batch(1)))
+    assert disp.trace_count("train_step") == before, "rebuild retraced"
+    assert stats.dispatches.get("train_step") == 1
+    assert len(tr._step_cache) == 1                # same cache entry
+
+
+@pytest.mark.slow
 def test_checkpoint_restart_reproduces_data(tmp_path):
     """Restore + rerun sees exactly the batches a never-failed run sees
     (counter-mode corpus): loss curves after the restore point match."""
